@@ -1,0 +1,134 @@
+"""HLO post-processing: collective-traffic accounting from compiled modules.
+
+collective_bytes is NOT in cost_analysis(), so we parse the (post-SPMD,
+per-device) optimized HLO text and sum the payload bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute /
+ragged-all-to-all op.  Shapes in the partitioned module are per-shard, so the
+totals are bytes *per device* -- exactly the numerator of the collective
+roofline term (bytes / link_bw).
+
+Caveat (documented in EXPERIMENTS.md): ops inside while-loop bodies (layer
+scans, GAMP iterations) appear ONCE in the text; benchmarks/roofline.py
+corrects by compiling shallow unrolled probes and extrapolating per-layer.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\(?[a-z0-9]+\[[0-9,]*\][^=]*?\)?\s+)?"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-kind payload bytes (per device) + 'total'.  Uses each op's RESULT
+    shape(s) (for all-gather that is the post-gather size = bytes received;
+    for all-reduce the reduced size; reduce-scatter the scattered shard)."""
+    out: Dict[str, int] = defaultdict(int)
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        # async pairs: count the -start only (the -done aliases the buffer)
+        if f"{kind}-done(" in line:
+            continue
+        head = line.split("=", 1)[0] + "=" + line.split("=", 1)[1].split(kind)[0]
+        bytes_ = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(head))
+        out[kind] += bytes_
+        out["total"] += bytes_
+    return dict(out)
+
+
+def count_ops(hlo_text: str) -> Dict[str, int]:
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m and f"{m.group(1)}-done(" not in line:
+            out[m.group(1)] += 1
+    return dict(out)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-axis attribution: which link does each collective cross?
+# ---------------------------------------------------------------------------
+
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\s*[,)]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+
+
+def _line_groups(line):
+    """Parses replica_groups into a list of device-id groups (or None)."""
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        ng, per = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        total = 1
+        for d in dims:
+            total *= d
+        import numpy as _np
+
+        arr = _np.arange(total).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            arr = arr.transpose(perm)
+        return arr.reshape(ng, per).tolist()
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return None
+    groups = []
+    for grp in re.findall(r"\{([0-9, ]*)\}", "{" + m.group(1) + "}"):
+        ids = [int(x) for x in grp.replace(" ", "").split(",") if x]
+        if ids:
+            groups.append(ids)
+    return groups or None
+
+
+def collective_bytes_by_link(hlo_text: str, pod_size: int = 256) -> Dict[str, int]:
+    """Splits per-device collective payload bytes into 'dcn' (the group spans
+    devices in different pods, i.e. ids differing by >= pod_size) vs 'ici'."""
+    out = {"dcn": 0, "ici": 0, "unknown": 0}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m or f"{m.group(1)}-done(" in line:
+            continue
+        head = line.split("=", 1)[0] + "=" + line.split("=", 1)[1].split(m.group(1))[0]
+        bytes_ = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(head))
+        groups = _line_groups(line)
+        if groups is None:
+            out["unknown"] += bytes_
+            continue
+        crosses = any(
+            (min(g) // pod_size) != (max(g) // pod_size) for g in groups if g
+        )
+        out["dcn" if crosses else "ici"] += bytes_
+    return out

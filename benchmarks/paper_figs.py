@@ -1,0 +1,198 @@
+"""One benchmark per paper table/figure (Sec. VI).  Each returns CSV rows
+(name, us_per_call, derived) where `derived` carries the figure's headline
+quantity; full traces are written to runs/bench/*.json.
+
+fast mode (default) shortens the horizons so the suite completes on one CPU
+core; pass fast=False (benchmarks.run --full) for paper-scale horizons.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import BQCSCodec, FedQCSConfig, flatten_to_blocks
+from repro.core.gamp import GampConfig
+from repro.paper import mlp as paper_mlp
+
+OUT_DIR = "runs/bench"
+
+
+def _dump(name, payload):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, name + ".json"), "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+def _row(name, wall_s, calls, derived):
+    us = 1e6 * wall_s / max(calls, 1)
+    return f"{name},{us:.1f},{derived}"
+
+
+_FAST_STEPS = 120
+_FULL_STEPS = 600
+
+
+def fig2_prior_fit(fast=True):
+    """Fig. 2: Bernoulli Gaussian-mixture fit of local gradient sub-vectors.
+    derived = max CDF deviation (KS statistic) between empirical gradients
+    and the EM-fitted BG-mixture."""
+    from repro.core.gamp import make_init_theta, _input_channel, _em_update
+    from repro.core.sparsify import block_sparsify
+    from repro.data.mnist import load
+
+    key = jax.random.PRNGKey(0)
+    params = paper_mlp.init_mlp(key)
+    (xtr, ytr, xte, yte), _ = load(0)
+    g = paper_mlp.device_grad(params, jnp.asarray(xtr[:64]), jnp.asarray(ytr[:64]))
+    blocks, _, _ = flatten_to_blocks(g, 1591)
+    sparse, _ = block_sparsify(blocks, 159)
+    t0 = time.time()
+    # EM fit: iterate the scalar channel at high SNR to learn theta.
+    nb = sparse.shape[0]
+    # init component spread from the NONZERO energy (the blocks are ~90%
+    # zeros; a whole-block std would park every component inside the spike)
+    s_frac = 159.0 / 1591.0
+    sigma = jnp.maximum(jnp.std(sparse, axis=1), 1e-9) / jnp.sqrt(s_frac)
+    theta = make_init_theta(nb, 3, sigma)
+    nu = jnp.full(sparse.shape, (0.05 * float(jnp.std(sparse))) ** 2 + 1e-12)
+    for _ in range(50):
+        _, _, lp0, lp, mp, pp = _input_channel(sparse, nu, theta)
+        theta = _em_update(theta, lp0, lp, mp, pp)
+    wall = time.time() - t0
+    # KS distance on block 0
+    lam0, lam, mu, phi = [np.asarray(t) for t in theta]
+    xs = np.sort(np.asarray(sparse[0]))
+    emp = np.arange(1, xs.size + 1) / xs.size
+    from math import erf, sqrt
+
+    def model_cdf(x):
+        c = lam0[0] * (x >= 0)
+        for l in range(3):
+            c = c + lam[0, l] * 0.5 * (1 + erf((x - mu[0, l]) / sqrt(2 * max(phi[0, l], 1e-18))))
+        return c
+
+    ks = max(abs(model_cdf(float(x)) - e) for x, e in zip(xs, emp))
+    _dump("fig2_prior_fit", {"ks": ks, "theta0": [float(lam0[0])]})
+    return [_row("fig2_prior_fit", wall, 50, f"ks={ks:.3f}")]
+
+
+def fig3_accuracy_nmse(fast=True):
+    """Fig. 3: accuracy + NMSE at 1 bit/entry for all five frameworks."""
+    steps = _FAST_STEPS if fast else _FULL_STEPS
+    fed = FedQCSConfig(reduction_ratio=3, bits=3, s_ratio=0.1,
+                       gamp_iters=15 if fast else 25, gamp_variance_mode="scalar")
+    rows, payload = [], {}
+    methods = ["none", "fedqcs-ea", "fedqcs-ae", "qcs-qiht", "signsgd"]
+    if fast:
+        methods = ["none", "fedqcs-ea", "fedqcs-ae", "signsgd"]
+    for m in methods:
+        r = paper_mlp.run_federated(m, steps=steps, fed_cfg=fed, eval_every=max(steps // 8, 1))
+        nm = float(np.mean(r.nmses)) if r.nmses else 0.0
+        payload[m] = dataclasses.asdict(r)
+        rows.append(_row(f"fig3[{m}]", r.wall_s, steps,
+                         f"acc={r.accs[-1]:.3f};nmse={nm:.3f};bits={r.bits_per_entry}"))
+    _dump("fig3_accuracy_nmse", payload)
+    return rows
+
+
+def fig4_overhead(fast=True):
+    """Fig. 4: accuracy vs communication overhead (Q=1..6 at R=3)."""
+    steps = _FAST_STEPS if fast else _FULL_STEPS
+    qs = (1, 3, 6) if fast else (1, 2, 3, 4, 5, 6)
+    rows, payload = [], {}
+    for q in qs:
+        fed = FedQCSConfig(reduction_ratio=3, bits=q, s_ratio=0.1,
+                           gamp_iters=15 if fast else 25, gamp_variance_mode="scalar")
+        r = paper_mlp.run_federated("fedqcs-ae", steps=steps, fed_cfg=fed,
+                                    eval_every=max(steps // 4, 1), record_nmse=False)
+        payload[f"Q{q}"] = dataclasses.asdict(r)
+        rows.append(_row(f"fig4[Q={q},R=3]", r.wall_s, steps,
+                         f"acc={r.accs[-1]:.3f};bits={q/3.0:.2f}"))
+    _dump("fig4_overhead", payload)
+    return rows
+
+
+def fig5_rq_grid(fast=True):
+    """Fig. 5: accuracy across (R,Q) at fixed Q/R (1 bit and 0.5 bit)."""
+    steps = _FAST_STEPS if fast else _FULL_STEPS
+    combos = [(2, 2), (3, 3), (4, 4)] if fast else [(2, 2), (3, 3), (4, 4), (4, 2), (6, 3), (8, 4)]
+    rows, payload = [], {}
+    for r_, q_ in combos:
+        fed = FedQCSConfig(reduction_ratio=r_, bits=q_, s_ratio=0.1,
+                           gamp_iters=15 if fast else 25, gamp_variance_mode="scalar")
+        rr = paper_mlp.run_federated("fedqcs-ea", steps=steps, fed_cfg=fed,
+                                     eval_every=max(steps // 4, 1), record_nmse=False)
+        payload[f"R{r_}Q{q_}"] = dataclasses.asdict(rr)
+        rows.append(_row(f"fig5[R={r_},Q={q_}]", rr.wall_s, steps, f"acc={rr.accs[-1]:.3f}"))
+    _dump("fig5_rq_grid", payload)
+    return rows
+
+
+def fig6_sparsity(fast=True):
+    """Fig. 6: accuracy vs S_ratio at (R,Q)=(3,3)."""
+    steps = _FAST_STEPS if fast else _FULL_STEPS
+    srs = (0.05, 0.1, 0.2) if fast else (0.02, 0.05, 0.1, 0.15, 0.2, 0.3)
+    rows, payload = [], {}
+    for sr in srs:
+        fed = FedQCSConfig(reduction_ratio=3, bits=3, s_ratio=sr,
+                           gamp_iters=15 if fast else 25, gamp_variance_mode="scalar")
+        r = paper_mlp.run_federated("fedqcs-ae", steps=steps, fed_cfg=fed,
+                                    eval_every=max(steps // 4, 1), record_nmse=False)
+        payload[f"s{sr}"] = dataclasses.asdict(r)
+        rows.append(_row(f"fig6[s={sr}]", r.wall_s, steps, f"acc={r.accs[-1]:.3f}"))
+    _dump("fig6_sparsity", payload)
+    return rows
+
+
+def table1_complexity(fast=True):
+    """Table I: measured PS reconstruction cost per round for the QCS
+    frameworks (+ the analytic complexity orders)."""
+    from repro.core import bussgang
+    from repro.core.gamp import em_gamp, qem_gamp
+    from repro.core.baselines import qiht_reconstruct
+
+    fed = FedQCSConfig(block_size=1591, reduction_ratio=3, bits=3, s_ratio=0.1, gamp_iters=25)
+    codec = BQCSCodec(fed)
+    k, nb = (8, 10) if fast else (30, 10)
+    rng = np.random.default_rng(0)
+    blocks = jnp.asarray(rng.standard_t(4, (k, nb, fed.block_size)) * 0.01, jnp.float32)
+    codes, alphas = [], []
+    for i in range(k):
+        c, a, _ = codec.compress_blocks(blocks[i], jnp.zeros_like(blocks[i]))
+        codes.append(c)
+        alphas.append(a)
+    codes, alphas = jnp.stack(codes), jnp.stack(alphas)
+    rhos = jnp.full((k,), 1.0 / k)
+    gamp = GampConfig(iters=fed.gamp_iters, variance_mode="scalar", tol=0.0)
+    rows = []
+
+    def timed(name, fn, order):
+        fn()  # compile
+        t0 = time.time()
+        reps = 3
+        for _ in range(reps):
+            jax.block_until_ready(fn())
+        rows.append(_row(f"table1[{name}]", time.time() - t0, reps, f"order={order}"))
+
+    m = fed.m
+    timed("fedqcs-ea",
+          lambda: qem_gamp(codes.reshape(-1, m), alphas.reshape(-1), codec.a, codec.quantizer, gamp),
+          "O(K*B*M*N*I)")
+    def ae():
+        y = bussgang.aggregate_codes(codes, alphas, rhos, codec.quantizer)
+        nu = bussgang.effective_noise_var(alphas, rhos, codec.quantizer)
+        return em_gamp(y, nu, codec.a, gamp)
+    timed("fedqcs-ae(G=1)", ae, "O(G*B*M*N*I)")
+    timed("qcs-qiht",
+          lambda: qiht_reconstruct(codes.reshape(-1, m), alphas.reshape(-1), codec.a,
+                                   codec.quantizer, fed.s, iters=25),
+          "O(K*B*M*N*I)")
+    _dump("table1_complexity", {"rows": rows})
+    return rows

@@ -1,0 +1,287 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline analysis from compiled dry-run artifacts (single-pod 16x16 mesh).
+
+Methodology (see EXPERIMENTS.md #Roofline): XLA's cost_analysis counts a
+while-loop body ONCE, so layer-scanned full-depth modules under-report
+FLOPs/bytes.  We therefore compile shallow *fully-unrolled* probe variants of
+each architecture (1 and 2 layers; 3 probes when two distinct stacks exist)
+at the cell's full width/batch, solve for the per-layer and fixed costs, and
+extrapolate to full depth:
+
+    total(L) = fixed + L * per_layer          (exact: costs are additive)
+
+Terms per (arch x shape), all per-chip (cost_analysis reports the per-device
+partitioned module):
+
+    compute_s    = HLO_FLOPs / 197e12          (bf16 peak, TPU v5e)
+    memory_s     = HLO_bytes / 819e9           (HBM bandwidth)
+    collective_s = collective_bytes / 50e9     (ICI per-link)
+
+plus MODEL_FLOPS = 6*N_active*tokens (train) / 2*N_active*tokens (fwd-only),
+and the usefulness ratio MODEL/HLO.
+
+    PYTHONPATH=src python -m benchmarks.roofline --all
+    PYTHONPATH=src python -m benchmarks.roofline --arch qwen2-7b --shape train_4k
+    PYTHONPATH=src python -m benchmarks.roofline --report   # markdown table
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+PEAK_FLOPS = 197e12  # bf16 / chip (v5e)
+HBM_BW = 819e9  # B/s / chip
+LINK_BW = 50e9  # B/s / link (ICI)
+CHIPS = 256
+
+OUT_DIR = "runs/roofline"
+DRYRUN_DIR = "runs/dryrun"
+
+
+def _probe_plan(cfg):
+    """Returns (probe_overrides, combine) where combine(list_of_cost_dicts)
+    -> full-depth extrapolated costs."""
+    fam = cfg.family
+    if fam == "audio":
+        probes = [
+            {"n_encoder_layers": 1, "n_layers": 1},
+            {"n_encoder_layers": 2, "n_layers": 1},
+            {"n_encoder_layers": 1, "n_layers": 2},
+        ]
+
+        def combine(cs):
+            enc = {k: cs[1][k] - cs[0][k] for k in cs[0]}
+            dec = {k: cs[2][k] - cs[0][k] for k in cs[0]}
+            return {
+                k: cs[0][k] - enc[k] - dec[k]
+                + cfg.n_encoder_layers * enc[k] + cfg.n_layers * dec[k]
+                for k in cs[0]
+            }
+
+        return probes, combine
+    if fam == "moe" and cfg.first_dense_layers:
+        probes = [
+            {"first_dense_layers": 1, "n_layers": 2},   # 1 dense + 1 moe
+            {"first_dense_layers": 2, "n_layers": 3},   # 2 dense + 1 moe
+            {"first_dense_layers": 1, "n_layers": 3},   # 1 dense + 2 moe
+        ]
+
+        def combine(cs):
+            dense = {k: cs[1][k] - cs[0][k] for k in cs[0]}
+            moe = {k: cs[2][k] - cs[0][k] for k in cs[0]}
+            n_moe = cfg.n_layers - cfg.first_dense_layers
+            return {
+                k: cs[0][k] - dense[k] - moe[k]
+                + cfg.first_dense_layers * dense[k] + n_moe * moe[k]
+                for k in cs[0]
+            }
+
+        return probes, combine
+    if fam == "hybrid":
+        probes = [{"n_layers": cfg.attn_every}, {"n_layers": 2 * cfg.attn_every}]
+        groups = cfg.n_layers // cfg.attn_every
+
+        def combine(cs):
+            per = {k: cs[1][k] - cs[0][k] for k in cs[0]}
+            return {k: cs[0][k] - per[k] + groups * per[k] for k in cs[0]}
+
+        return probes, combine
+    probes = [{"n_layers": 1}, {"n_layers": 2}]
+
+    def combine(cs):
+        per = {k: cs[1][k] - cs[0][k] for k in cs[0]}
+        return {k: cs[0][k] - per[k] + cfg.n_layers * per[k] for k in cs[0]}
+
+    return probes, combine
+
+
+def _compile_probe(cfg, shape: str, mesh):
+    """Compiles one probe; returns {'flops', 'bytes', 'coll'} per device."""
+    import jax
+
+    from hlo_analysis import collective_bytes
+    from repro.models import model as model_api
+    from repro.optim.adam import OptConfig
+    from repro.runtime import steps
+
+    cell = model_api.SHAPES[shape]
+
+    def attach(sds_tree, sh_tree):
+        return jax.tree_util.tree_map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            sds_tree, sh_tree,
+        )
+
+    if cell.kind == "train":
+        opt = OptConfig(state_dtype="int8" if cfg.param_count() > 50e9 else "float32")
+        state = steps.init_train_state(cfg, opt, None, jax.random.PRNGKey(0), abstract=True)
+        st_in = attach(state, steps.train_state_shardings(state, mesh, False))
+        batch = model_api.input_specs(cfg, shape)
+        b_in = attach(batch, steps.batch_shardings(cfg, shape, mesh))
+        fn = steps.make_train_step(cfg, opt, None, mesh, donate=True)
+        compiled = fn.lower(st_in, b_in).compile()
+    elif cell.kind == "prefill":
+        params = steps.abstract_params(cfg)
+        p_in = attach(params, steps.sane_param_shardings(params, mesh))
+        batch = model_api.input_specs(cfg, shape)
+        b_in = attach(batch, steps.batch_shardings(cfg, shape, mesh))
+        fn = steps.make_prefill_step(cfg, mesh)
+        compiled = fn.lower(p_in, b_in).compile()
+    else:
+        params = steps.abstract_params(cfg)
+        p_in = attach(params, steps.sane_param_shardings(params, mesh))
+        specs = model_api.input_specs(cfg, shape)
+        inputs = attach(specs, steps.batch_shardings(cfg, shape, mesh))
+        fn = steps.make_decode_step(cfg, mesh, donate=True)
+        compiled = fn.lower(p_in, inputs["cache"], inputs["tokens"], inputs["pos"]).compile()
+    cost = dict(compiled.cost_analysis() or {})
+    coll = collective_bytes(compiled.as_text()).get("total", 0)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(coll),
+    }
+
+
+def _model_flops(cfg, shape) -> float:
+    """6*N_active*tokens for training, 2*N_active*tokens forward-only (global,
+    dense-equivalent convention: attention flops excluded)."""
+    from repro.models import model as model_api
+
+    cell = model_api.SHAPES[shape]
+    n_active = cfg.active_param_count()
+    if cell.kind == "train":
+        return 6.0 * n_active * cell.seq * cell.batch
+    if cell.kind == "prefill":
+        return 2.0 * n_active * cell.seq * cell.batch
+    return 2.0 * n_active * cell.batch  # decode: one token per sequence
+
+
+def roofline_cell(arch: str, shape: str, out_dir: str = OUT_DIR, skip_existing=True):
+    import dataclasses as dc
+
+    import jax
+
+    from repro.configs.registry import get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import model as model_api
+
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape}.json")
+    if skip_existing and os.path.exists(path):
+        rec = json.load(open(path))
+        if rec.get("status") in ("ok", "skip"):
+            return rec
+    cfg = get_config(arch)
+    rec = {"arch": arch, "shape": shape}
+    ok, reason = model_api.supports_cell(cfg, shape)
+    if not ok:
+        rec.update(status="skip", reason=reason)
+        json.dump(rec, open(path, "w"), indent=1)
+        return rec
+    mesh = make_production_mesh(multi_pod=False)
+    t0 = time.time()
+    try:
+        probes, combine = _probe_plan(cfg)
+        costs = []
+        for over in probes:
+            pcfg = dc.replace(cfg, unroll_layers=True, **over)
+            costs.append(_compile_probe(pcfg, shape, mesh))
+        total = combine(costs)
+        mf_global = _model_flops(cfg, shape)
+        mf_dev = mf_global / CHIPS
+        compute_s = total["flops"] / PEAK_FLOPS
+        memory_s = total["bytes"] / HBM_BW
+        coll_s = total["coll"] / LINK_BW
+        dom = max(
+            (("compute", compute_s), ("memory", memory_s), ("collective", coll_s)),
+            key=lambda kv: kv[1],
+        )[0]
+        bound_s = max(compute_s, memory_s, coll_s)
+        rec.update(
+            status="ok",
+            probes=costs,
+            hlo_flops_dev=total["flops"],
+            hlo_bytes_dev=total["bytes"],
+            coll_bytes_dev=total["coll"],
+            compute_s=compute_s,
+            memory_s=memory_s,
+            collective_s=coll_s,
+            dominant=dom,
+            model_flops_global=mf_global,
+            model_flops_dev=mf_dev,
+            useful_ratio=mf_dev / max(total["flops"], 1.0),
+            # fraction of the bound the pure-compute term occupies: how close
+            # the cell would run to roofline if perfectly overlapped.
+            mfu_upper_bound=(mf_dev / PEAK_FLOPS) / max(bound_s, 1e-12),
+            wall_s=round(time.time() - t0, 1),
+        )
+        print(
+            f"[roofline] {arch} {shape}: C={compute_s*1e3:.2f}ms M={memory_s*1e3:.2f}ms "
+            f"X={coll_s*1e3:.2f}ms dom={dom} useful={rec['useful_ratio']:.2f} "
+            f"mfu_ub={rec['mfu_upper_bound']:.2f}"
+        )
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}"[:1500],
+                   traceback=traceback.format_exc()[-3000:])
+        print(f"[roofline] ERROR {arch} {shape}: {type(e).__name__} {str(e)[:150]}")
+    json.dump(rec, open(path, "w"), indent=1)
+    return rec
+
+
+def report(out_dir: str = OUT_DIR) -> str:
+    import glob
+
+    rows = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        rows.append(json.load(open(f)))
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | MODEL/HLO | MFU-UB |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("status") == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | -- | -- | -- | SKIP: {r['reason'][:40]} | -- | -- |")
+        elif r.get("status") == "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+                f"| {r['collective_s']:.3e} | {r['dominant']} | {r['useful_ratio']:.2f} "
+                f"| {r['mfu_upper_bound']:.2f} |"
+            )
+        else:
+            lines.append(f"| {r.get('arch')} | {r.get('shape')} | ERR | | | | | |")
+    return "\n".join(lines)
+
+
+def main():
+    sys.path.insert(0, os.path.dirname(__file__))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--report", action="store_true")
+    ap.add_argument("--no-skip", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+    if args.report:
+        print(report(args.out))
+        return
+    from repro.configs.registry import ARCHS
+    from repro.models import model as model_api
+
+    cells = (
+        [(a, s) for a in ARCHS for s in model_api.SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    for arch, shape in cells:
+        roofline_cell(arch, shape, out_dir=args.out, skip_existing=not args.no_skip)
+
+
+if __name__ == "__main__":
+    main()

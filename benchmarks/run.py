@@ -1,0 +1,89 @@
+"""Benchmark harness: one function per paper table/figure + kernel micros.
+
+    PYTHONPATH=src python -m benchmarks.run            # fast mode
+    PYTHONPATH=src python -m benchmarks.run --full     # paper-scale horizons
+    PYTHONPATH=src python -m benchmarks.run --only fig3,table1
+
+Prints ``name,us_per_call,derived`` CSV; full traces land in runs/bench/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def kernel_micro(fast=True):
+    """Microbench the three Pallas kernels (interpret mode on CPU: validates
+    the call path and gives relative-cost numbers, not TPU wall times)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import sensing
+    from repro.core.quantizer import design_lloyd_max
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    nb, n, r = (128, 1024, 4)
+    m = n // r
+    blocks = jnp.asarray(rng.normal(0, 1, (nb, n)), jnp.float32)
+    a = sensing.sensing_matrix(jax.random.PRNGKey(0), m, n)
+    quant = design_lloyd_max(4)
+    rows = []
+
+    def timed(name, fn, derived=""):
+        jax.block_until_ready(fn())
+        t0 = time.time()
+        reps = 5
+        for _ in range(reps):
+            jax.block_until_ready(fn())
+        rows.append(f"{name},{1e6 * (time.time() - t0) / reps:.1f},{derived}")
+
+    timed("kernel[bqcs_encode]", lambda: ops.bqcs_encode(blocks, a, quant),
+          f"nb={nb};N={n};M={m}")
+    timed("kernel[block_topk]", lambda: ops.block_sparsify(blocks, 102), "s=102")
+    y = jnp.asarray(rng.normal(0, 1, (nb, m)), jnp.float32)
+    nu = jnp.full((nb,), 0.05)
+    en = jnp.full((nb,), 1.0)
+    timed("kernel[gamp_ae_run]", lambda: ops.gamp_ae_run(y, nu, a, en, iters=10),
+          "iters=10")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    fast = not args.full
+
+    from benchmarks import paper_figs
+
+    benches = {
+        "fig2": paper_figs.fig2_prior_fit,
+        "fig3": paper_figs.fig3_accuracy_nmse,
+        "fig4": paper_figs.fig4_overhead,
+        "fig5": paper_figs.fig5_rq_grid,
+        "fig6": paper_figs.fig6_sparsity,
+        "table1": paper_figs.table1_complexity,
+        "kernels": kernel_micro,
+    }
+    selected = [s for s in args.only.split(",") if s] or list(benches)
+    print("name,us_per_call,derived")
+    failed = 0
+    for name in selected:
+        try:
+            for row in benches[name](fast=fast):
+                print(row, flush=True)
+        except Exception as e:
+            failed += 1
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Distributed LM training with FedQCS cross-pod gradient compression.
+
+    PYTHONPATH=src python examples/distributed_train.py --steps 40
+    PYTHONPATH=src python examples/distributed_train.py --arch qwen2-7b --steps 40
+    PYTHONPATH=src python examples/distributed_train.py --inject-failure 20
+
+Runs a reduced config of the chosen architecture on a simulated
+(pod=2, data=2, model=2) mesh, with: FedQCS compressed cross-pod reduction,
+checkpoint every 10 steps, optional pod-failure injection (the step keeps
+going on the surviving pod via rho renormalization), and exact restart.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.checkpoint.checkpointer import Checkpointer  # noqa: E402
+from repro.configs.registry import smoke_config  # noqa: E402
+from repro.core.compression import FedQCSConfig  # noqa: E402
+from repro.data.synthetic import TokenDataset  # noqa: E402
+from repro.launch.mesh import make_debug_mesh  # noqa: E402
+from repro.optim.adam import OptConfig  # noqa: E402
+from repro.runtime import steps  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--ckpt-dir", default="runs/example_ckpt")
+    ap.add_argument("--inject-failure", type=int, default=-1,
+                    help="step at which pod 1 dies for 5 steps")
+    ap.add_argument("--no-fedqcs", action="store_true")
+    args = ap.parse_args()
+
+    mesh = make_debug_mesh(2, 2, 2)
+    cfg = smoke_config(args.arch)
+    fed = None if args.no_fedqcs else FedQCSConfig(
+        block_size=255, reduction_ratio=3, bits=3, s_ratio=0.05,
+        gamp_iters=15, gamp_variance_mode="scalar",
+    )
+    opt = OptConfig(lr=3e-3, warmup_steps=5, decay_steps=2000)
+    ds = TokenDataset(cfg.vocab_size, batch=16, seq=64, seed=0)
+    ckpt = Checkpointer(args.ckpt_dir, keep=2)
+
+    state = steps.init_train_state(cfg, opt, fed, jax.random.PRNGKey(0), n_pods=2)
+    start = 0
+    if ckpt.latest_step() is not None:
+        state, start = ckpt.restore(state)
+        print(f"[restore] resumed from step {start}")
+    step_fn = steps.make_train_step(cfg, opt, fed, mesh, donate=False)
+
+    if fed is not None:
+        nb = state["residual"].shape[1]
+        bits = nb * (fed.m * fed.bits + 32)
+        print(f"[wire] compressed payload/pod/step: {bits/8/1024:.0f} KiB "
+              f"({fed.bits_per_entry:.2f} bits/entry; fp32 all-reduce would be "
+              f"{nb*fed.block_size*32/8/1024:.0f} KiB)")
+
+    for t in range(start, args.steps):
+        if fed is not None:
+            alive = 0.0 if (args.inject_failure >= 0 and args.inject_failure <= t < args.inject_failure + 5) else 1.0
+            state["participating"] = jnp.asarray([1.0, alive])
+        state, metrics = step_fn(state, ds.get_batch(t))
+        if t % 5 == 0 or t == args.steps - 1:
+            note = " [pod1 DOWN]" if fed is not None and float(state["participating"][1]) == 0 else ""
+            print(f"step {t:4d}  loss {float(metrics['loss']):.4f}{note}")
+        if t and t % 10 == 0:
+            ckpt.save(t, state)
+    ckpt.wait()
+    print("done; checkpoints in", args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

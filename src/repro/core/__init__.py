@@ -1,0 +1,18 @@
+"""FedQCS core: the paper's contribution as composable JAX modules.
+
+Submodules: quantizer (Lloyd-Max + Bussgang constants), sparsify (block top-S
++ error feedback), sensing (shared Gaussian projections), gamp (EM-GAMP /
+Q-EM-GAMP), bussgang (Prop. 1 aggregation), compression (BQCS codec over
+pytrees), reconstruction (EA / AE strategies), baselines (SignSGD,
+QCS-Dither, QCS-QIHT), api (one-call interface).
+"""
+
+from repro.core.api import (  # noqa: F401
+    BQCSCodec,
+    CompressorState,
+    FedQCSConfig,
+    compress,
+    init_state,
+    make_codec,
+    reconstruct,
+)

@@ -1,0 +1,81 @@
+"""One-call FedQCS API over gradient pytrees.
+
+This is the composable module the rest of the framework (and external users)
+consume:
+
+    codec = fedqcs.make_codec(FedQCSConfig(...))
+    state = fedqcs.init_state(codec, grads_template)
+    payload, state = fedqcs.compress(codec, grads, state)      # worker side
+    ghat = fedqcs.reconstruct(codec, payloads, rhos, mode=...)  # PS side
+
+For the distributed (in-step, cross-pod) path see runtime/collectives.py,
+which uses the same codec under shard_map.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Sequence
+
+import jax.numpy as jnp
+
+from repro.core.compression import (
+    BQCSCodec,
+    CompressedGradient,
+    FedQCSConfig,
+    blocks_to_tree,
+    flatten_to_blocks,
+)
+from repro.core.reconstruction import aggregate_and_estimate, estimate_and_aggregate
+
+__all__ = [
+    "FedQCSConfig",
+    "BQCSCodec",
+    "make_codec",
+    "init_state",
+    "compress",
+    "reconstruct",
+    "CompressorState",
+]
+
+
+@dataclasses.dataclass
+class CompressorState:
+    """Worker-side persistent state: the error-feedback residual blocks."""
+
+    residual: jnp.ndarray  # (nblocks, N)
+
+
+def make_codec(cfg: FedQCSConfig) -> BQCSCodec:
+    return BQCSCodec(cfg)
+
+
+def init_state(codec: BQCSCodec, grads_template: Any) -> CompressorState:
+    return CompressorState(residual=codec.zero_residual(grads_template))
+
+
+def compress(codec: BQCSCodec, grads: Any, state: CompressorState):
+    """Worker side: returns (CompressedGradient, tree-spec, new state)."""
+    payload, spec, new_res = codec.compress_tree(grads, state.residual)
+    return payload, spec, CompressorState(residual=new_res)
+
+
+def reconstruct(
+    codec: BQCSCodec,
+    payloads: Sequence[CompressedGradient],
+    rhos: Sequence[float],
+    spec: Any,
+    mode: str = "ae",
+    groups: int = 1,
+) -> Any:
+    """PS side: fuses K payloads into the reconstructed gradient pytree."""
+    codes = jnp.stack([p.codes for p in payloads])
+    alphas = jnp.stack([p.alpha for p in payloads])
+    rhos = jnp.asarray(rhos, jnp.float32)
+    if mode == "ea":
+        blocks = estimate_and_aggregate(codec, codes, alphas, rhos)
+    elif mode == "ae":
+        blocks = aggregate_and_estimate(codec, codes, alphas, rhos, groups=groups)
+    else:
+        raise ValueError(f"unknown mode {mode!r} (want 'ea' or 'ae')")
+    return blocks_to_tree(blocks, spec, payloads[0].nbar)

@@ -1,0 +1,163 @@
+"""Baseline frameworks the paper compares against (Sec. VI).
+
+  * SignSGD with majority vote [12]: 1 bit/entry, sign + vote + global scale.
+  * QCS-Dither [23]: dithered *uniform* quantization after a structured
+    (Hadamard x Rademacher) projection; linear (adjoint) estimator at the PS.
+  * QCS-QIHT [24][25][36]: BQCS compression, but reconstruction via quantized
+    iterative hard thresholding instead of Q-EM-GAMP (needs S known).
+
+All operate on the same (nblocks, N) block view as the FedQCS codec so the
+benchmark harness can swap them in one line.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sensing, sparsify
+from repro.core.quantizer import LloydMaxQuantizer, decode, design_lloyd_max, encode, quantize
+
+__all__ = [
+    "signsgd_compress",
+    "signsgd_aggregate",
+    "DitherCodec",
+    "qiht_reconstruct",
+]
+
+
+# ---------------------------------------------------------------------------
+# SignSGD with majority vote [12]
+# ---------------------------------------------------------------------------
+
+
+def signsgd_compress(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Per-entry sign in {-1, +1} (int8 on the wire: 1 bit/entry)."""
+    return jnp.where(blocks >= 0, 1, -1).astype(jnp.int8)
+
+
+def signsgd_aggregate(signs: jnp.ndarray, lr_scale: float = 1.0) -> jnp.ndarray:
+    """Majority vote across workers: sign(sum_k sign(g_k)).
+
+    Args: signs (K, nb, N) int8.  Returns (nb, N) f32 in {-1, +1} * lr_scale.
+    """
+    vote = jnp.sum(signs.astype(jnp.int32), axis=0)
+    return jnp.where(vote >= 0, 1.0, -1.0).astype(jnp.float32) * lr_scale
+
+
+# ---------------------------------------------------------------------------
+# QCS-Dither [23]: Hadamard x Rademacher sensing + dithered uniform quant.
+# ---------------------------------------------------------------------------
+
+
+def _fwht(x: jnp.ndarray) -> jnp.ndarray:
+    """Fast Walsh-Hadamard transform along the last axis (power-of-2 length),
+    un-normalized (H @ x with entries +-1)."""
+    n = x.shape[-1]
+    if n & (n - 1):
+        raise ValueError(f"FWHT needs power-of-2 length, got {n}")
+    h = 1
+    shape = x.shape
+    x = x.reshape(-1, n)
+    while h < n:
+        x = x.reshape(-1, n // (2 * h), 2, h)
+        a = x[:, :, 0, :]
+        b = x[:, :, 1, :]
+        x = jnp.stack([a + b, a - b], axis=2)
+        h *= 2
+    return x.reshape(shape)
+
+
+@dataclasses.dataclass
+class DitherCodec:
+    """QCS-Dither: y = S H D g (D = random Rademacher diag, H = Hadamard,
+    S = row subsampling), dithered uniform quantization of y, linear
+    reconstruction g_hat = D H^T S^T y_dq / N.
+
+    The dither u ~ Unif(-delta/2, delta/2) must be shared with the PS (the
+    extra overhead the paper criticizes); we regenerate it from a per-step
+    seed on both sides, and *account* the overhead in wire_bits.
+    """
+
+    n: int
+    m: int
+    bits: int
+    seed: int = 7
+
+    def __post_init__(self):
+        key = jax.random.PRNGKey(self.seed)
+        krad, krow = jax.random.split(key)
+        self.rademacher = jnp.where(
+            jax.random.bernoulli(krad, 0.5, (self.n,)), 1.0, -1.0
+        ).astype(jnp.float32)
+        self.rows = jax.random.choice(krow, self.n, (self.m,), replace=False)
+
+    def _project(self, blocks: jnp.ndarray) -> jnp.ndarray:
+        z = blocks * self.rademacher[None, :]
+        y = _fwht(z) / jnp.sqrt(jnp.asarray(self.n, jnp.float32))
+        return y[:, self.rows]  # (nb, M); rows of orthonormal H D
+
+    def _backproject(self, y: jnp.ndarray, nb: int) -> jnp.ndarray:
+        full = jnp.zeros((nb, self.n), jnp.float32).at[:, self.rows].set(y)
+        z = _fwht(full) / jnp.sqrt(jnp.asarray(self.n, jnp.float32))
+        return z * self.rademacher[None, :]
+
+    def compress(self, blocks: jnp.ndarray, key: jax.Array):
+        """Returns (codes int32, scale, dither_key).  Uniform quantizer with
+        range +-4*std, 2**bits levels, additive dither."""
+        y = self._project(blocks)
+        scale = jnp.maximum(jnp.std(y, axis=-1, keepdims=True), 1e-12) * 4.0
+        delta = 2.0 * scale / (2**self.bits)
+        dither = jax.random.uniform(key, y.shape, minval=-0.5, maxval=0.5) * delta
+        q = jnp.clip(jnp.round((y + dither) / delta), -(2 ** (self.bits - 1)), 2 ** (self.bits - 1) - 1)
+        return q.astype(jnp.int32), delta, dither
+
+    def reconstruct(self, codes: jnp.ndarray, delta: jnp.ndarray, dither: jnp.ndarray):
+        """Linear estimator: subtract dither, backproject with the adjoint
+        (orthonormal rows => least-squares on the sampled subspace), and
+        rescale by N/M to unbias the subsampled energy."""
+        y = codes.astype(jnp.float32) * delta - dither
+        nb = codes.shape[0]
+        return self._backproject(y, nb) * (self.n / self.m)
+
+
+# ---------------------------------------------------------------------------
+# QCS-QIHT [36]: quantized iterative hard thresholding.
+# ---------------------------------------------------------------------------
+
+
+def qiht_reconstruct(
+    codes: jnp.ndarray,  # (nb, M) uint8 Lloyd-Max codes
+    alpha: jnp.ndarray,  # (nb,)
+    a: jnp.ndarray,  # (M, N)
+    quantizer: LloydMaxQuantizer,
+    s: int,
+    iters: int = 50,
+    step: float = 1.0,
+) -> jnp.ndarray:
+    """QIHT: g <- H_S(g + mu A^T (q_dq - Q(alpha A g)) / alpha), then rescale
+    the result so ||g_hat|| matches the norm implied by alpha (as the paper's
+    QCS-QIHT baseline does)."""
+    nb, m = codes.shape
+    n = a.shape[1]
+    q_dq = decode(codes, quantizer)  # (nb, M)
+    alive = alpha > 0
+    safe_alpha = jnp.where(alive, alpha, 1.0)[:, None]
+
+    def body(_, g):
+        xa = safe_alpha * (g @ a.T)
+        resid = q_dq - quantize(xa, quantizer)
+        g = g + step * (resid @ a) / safe_alpha
+        g, _ = sparsify.block_sparsify(g, s)
+        return g
+
+    g0 = jnp.zeros((nb, n), jnp.float32)
+    g = jax.lax.fori_loop(0, iters, body, g0)
+    # Norm rescale: true ||g_block|| = sqrt(M)/alpha.
+    norms = jnp.maximum(jnp.linalg.norm(g, axis=-1, keepdims=True), 1e-12)
+    target = jnp.sqrt(jnp.asarray(m, jnp.float32)) / safe_alpha
+    g = g / norms * target
+    return jnp.where(alive[:, None], g, 0.0)

@@ -1,0 +1,71 @@
+"""Bussgang linearization and aggregate-and-estimate combining (Sec. IV-B).
+
+Proposition 1: for the N(0,1)-optimal Lloyd-Max quantizer and x ~ N(0, I),
+
+    Q(x) = gamma_Q * x + d,   E[d] = 0,  cov(d) = (psi_Q - gamma_Q^2) I,
+    d uncorrelated with x.
+
+Therefore the weighted sum of *dequantized* codes
+
+    q_tilde = sum_k rho_k / (gamma_Q alpha_k) * q_k
+            = A (sum_k rho_k g_k) + d_tilde                      (eq. 23)
+
+is a *linear* AWGN observation of the aggregated gradient with
+
+    nu = (psi_Q - gamma_Q^2)/gamma_Q^2 * sum_k (rho_k/alpha_k)^2  (eq. 24).
+
+The linearity is what makes the cross-pod collective a plain sum: on hardware,
+`q_tilde` is produced by a `psum` over the pod axis of locally-scaled
+dequantized codes (see runtime/collectives.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.quantizer import LloydMaxQuantizer, decode
+
+__all__ = ["bussgang_weight", "aggregate_codes", "effective_noise_var", "signal_energy"]
+
+
+def bussgang_weight(rho: jnp.ndarray, alpha: jnp.ndarray, quantizer: LloydMaxQuantizer):
+    """Per-(worker, block) combining weight rho_k / (gamma_Q alpha_{k,b}).
+
+    alpha == 0 (empty block) contributes weight 0.
+    """
+    safe = jnp.where(alpha > 0, alpha, 1.0)
+    w = rho / (quantizer.gamma * safe)
+    return jnp.where(alpha > 0, w, 0.0)
+
+
+def aggregate_codes(
+    codes: jnp.ndarray,  # (K, nb, M) uint8 codes from K workers
+    alphas: jnp.ndarray,  # (K, nb)
+    rhos: jnp.ndarray,  # (K,)
+    quantizer: LloydMaxQuantizer,
+) -> jnp.ndarray:
+    """q_tilde (nb, M): the Bussgang-weighted aggregate of eq. 23."""
+    deq = decode(codes, quantizer)  # (K, nb, M)
+    w = bussgang_weight(rhos[:, None], alphas, quantizer)  # (K, nb)
+    return jnp.sum(w[..., None] * deq, axis=0)
+
+
+def effective_noise_var(
+    alphas: jnp.ndarray,  # (K, nb)
+    rhos: jnp.ndarray,  # (K,)
+    quantizer: LloydMaxQuantizer,
+) -> jnp.ndarray:
+    """nu_{g,b} (nb,): AWGN variance of the effective distortion (eq. 24)."""
+    safe = jnp.where(alphas > 0, alphas, 1.0)
+    terms = jnp.where(alphas > 0, (rhos[:, None] / safe) ** 2, 0.0)
+    return quantizer.kappa * jnp.sum(terms, axis=0)
+
+
+def signal_energy(alphas: jnp.ndarray, rhos: jnp.ndarray, m: int, n: int) -> jnp.ndarray:
+    """Per-entry energy of the aggregated block, used for GAMP init:
+    E[(g_sum)_n^2] ~= sum_k rho_k^2 ||g_k||^2 / N = sum_k rho_k^2 M/alpha_k^2 / N.
+    (Cross terms vanish in expectation for independent worker gradients.)
+    """
+    safe = jnp.where(alphas > 0, alphas, 1.0)
+    terms = jnp.where(alphas > 0, (rhos[:, None] ** 2) * m / jnp.square(safe), 0.0)
+    return jnp.sum(terms, axis=0) / n

@@ -1,0 +1,225 @@
+"""BQCS end-to-end gradient codec over pytrees (paper Sec. III).
+
+Pipeline per step, per worker/pod:
+
+    grads (pytree) --flatten+pad--> (nblocks, N) blocks
+      + residual (error feedback, eq. 8)
+      -> block top-S sparsify (residual out, eq. 7)
+      -> project with shared A, scale alpha = sqrt(M)/||.||  (eq. 9)
+      -> Lloyd-Max Q-bit encode  (eq. 10)
+      -> bit-pack codes into uint32 words (the wire payload)
+
+Wire cost per step per worker: nblocks * (M*Q bits + 32 bits for alpha)
+  ~= Q/R bits per gradient entry (Sec. III-B).
+
+The codec is stateless except for the error-feedback residual, which the
+caller owns (it lives in the TrainState so it is checkpointed).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sensing, sparsify
+from repro.core.quantizer import LloydMaxQuantizer, design_lloyd_max, encode, decode
+
+__all__ = ["FedQCSConfig", "BQCSCodec", "CompressedGradient", "flatten_to_blocks", "blocks_to_tree"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FedQCSConfig:
+    """Protocol parameters shared by every worker and the PS."""
+
+    block_size: int = 1024  # N
+    reduction_ratio: int = 4  # R = N / M
+    bits: int = 2  # Q
+    s_ratio: float = 0.1  # S = floor(s_ratio * N) kept per block
+    gamp_iters: int = 25
+    gamp_components: int = 3  # L
+    gamp_variance_mode: str = "exact"
+    # "topk" = exact lax.top_k; "bisect" = fixed-iteration threshold search
+    # (compares/reductions only).  Use "bisect" in distributed steps: XLA
+    # partitions top_k's sort by REPLICATING the operand across the mesh
+    # (measured: 30.5 GB/step cross-pod for qwen2-7b -- EXPERIMENTS.md #Perf
+    # iteration 3c), while bisect partitions trivially.
+    sparsifier: str = "topk"
+    seed: int = 1234  # sensing-matrix seed (protocol constant)
+    use_kernels: bool = False  # route hot paths through Pallas kernels
+    wire_mode: str = "gather_codes"  # or "psum_dequant" (see DESIGN.md)
+
+    @property
+    def m(self) -> int:
+        return self.block_size // self.reduction_ratio
+
+    @property
+    def s(self) -> int:
+        return max(1, int(self.s_ratio * self.block_size))
+
+    @property
+    def bits_per_entry(self) -> float:
+        """Q/R: wire bits per gradient entry (excl. the negligible alphas)."""
+        return self.bits / self.reduction_ratio
+
+
+@dataclasses.dataclass
+class CompressedGradient:
+    """The wire payload of one worker for one step."""
+
+    codes: jnp.ndarray  # (nblocks, M) uint8 indices (or packed words)
+    alpha: jnp.ndarray  # (nblocks,) f32 scales
+    nbar: int  # original flat length (for unpadding)
+
+    def wire_bits(self, bits: int) -> int:
+        nb, m = self.codes.shape[:2]
+        return nb * (m * bits + 32)
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> blocks plumbing
+# ---------------------------------------------------------------------------
+
+
+def flatten_to_blocks(tree: Any, n: int, row_multiple: int = 1) -> Tuple[jnp.ndarray, Any, int]:
+    """Concatenates all leaves into one vector, zero-pads to a multiple of N,
+    reshapes to (nblocks, N).  ``row_multiple`` additionally pads nblocks up
+    to a multiple (so the (data, model) sharding of the block view is even).
+    Returns (blocks, treedef-like spec, nbar)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    flat = jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves])
+    nbar = flat.shape[0]
+    rows = -(-nbar // n)
+    rows = -(-rows // row_multiple) * row_multiple
+    pad = rows * n - nbar
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    blocks = flat.reshape(rows, n)
+    shapes = [(l.shape, l.dtype) for l in leaves]
+    return blocks, (treedef, shapes), nbar
+
+
+def flatten_to_blocks_batched(tree: Any, n: int, row_multiple: int = 1):
+    """Batched variant: every leaf carries a leading ``pods`` axis; returns
+    (pods, nblocks, N) blocks plus the UNBATCHED spec (for blocks_to_tree on
+    the aggregated result)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    pods = leaves[0].shape[0]
+    flat = jnp.concatenate([l.reshape(pods, -1).astype(jnp.float32) for l in leaves], axis=1)
+    nbar = flat.shape[1]
+    rows = -(-nbar // n)
+    rows = -(-rows // row_multiple) * row_multiple
+    pad = rows * n - nbar
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pods, pad), flat.dtype)], axis=1)
+    blocks = flat.reshape(pods, rows, n)
+    shapes = [(l.shape[1:], l.dtype) for l in leaves]
+    return blocks, (treedef, shapes), nbar
+
+
+def blocks_to_tree(blocks: jnp.ndarray, spec: Any, nbar: int) -> Any:
+    """Inverse of :func:`flatten_to_blocks`."""
+    treedef, shapes = spec
+    flat = blocks.reshape(-1)[:nbar]
+    leaves = []
+    off = 0
+    for shape, dtype in shapes:
+        size = int(np.prod(shape)) if shape else 1
+        leaves.append(flat[off : off + size].reshape(shape).astype(dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# bit packing (wire format)
+# ---------------------------------------------------------------------------
+
+
+def pack_codes(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Packs Q-bit indices into uint32 words, little-endian within the word.
+
+    (nb, M) uint8 -> (nb, ceil(M / per_word)) uint32, per_word = 32 // bits.
+    """
+    per_word = 32 // bits
+    nb, m = codes.shape
+    pad = (-m) % per_word
+    if pad:
+        codes = jnp.concatenate([codes, jnp.zeros((nb, pad), codes.dtype)], axis=1)
+    grouped = codes.reshape(nb, -1, per_word).astype(jnp.uint32)
+    shifts = (jnp.arange(per_word, dtype=jnp.uint32) * bits)[None, None, :]
+    return jnp.sum(grouped << shifts, axis=-1).astype(jnp.uint32)
+
+
+def unpack_codes(words: jnp.ndarray, bits: int, m: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_codes` -> (nb, m) uint8."""
+    per_word = 32 // bits
+    shifts = (jnp.arange(per_word, dtype=jnp.uint32) * bits)[None, None, :]
+    mask = jnp.uint32((1 << bits) - 1)
+    out = ((words[..., None] >> shifts) & mask).astype(jnp.uint8)
+    return out.reshape(words.shape[0], -1)[:, :m]
+
+
+# ---------------------------------------------------------------------------
+# The codec
+# ---------------------------------------------------------------------------
+
+
+class BQCSCodec:
+    """Stateless BQCS encoder/decoder bound to a FedQCSConfig.
+
+    The sensing matrix and quantizer are derived deterministically from the
+    config, so constructing the same codec on every pod yields the same
+    protocol -- no matrix ever crosses the wire.
+    """
+
+    def __init__(self, cfg: FedQCSConfig):
+        self.cfg = cfg
+        self.quantizer: LloydMaxQuantizer = design_lloyd_max(cfg.bits)
+        key = jax.random.PRNGKey(cfg.seed)
+        self._a = sensing.sensing_matrix(key, cfg.m, cfg.block_size)
+
+    @property
+    def a(self) -> jnp.ndarray:
+        return self._a
+
+    # -- encode ------------------------------------------------------------
+    def compress_blocks(self, blocks: jnp.ndarray, residual: jnp.ndarray):
+        """(blocks + residual) -> (codes, alpha, new_residual).  Eqs. 7-10."""
+        cfg = self.cfg
+        carry = blocks + residual
+        if cfg.use_kernels:
+            from repro.kernels import ops as kops
+
+            sparse, new_residual = kops.block_sparsify(carry, cfg.s)
+            codes, alpha = kops.bqcs_encode(sparse, self._a, self.quantizer)
+        else:
+            if cfg.sparsifier == "bisect":
+                sparse, new_residual = sparsify.block_sparsify_threshold(carry, cfg.s)
+            else:
+                sparse, new_residual = sparsify.block_sparsify(carry, cfg.s)
+            x, alpha = sensing.project_blocks(sparse, self._a.T)
+            codes = encode(x, self.quantizer)
+        return codes, alpha, new_residual
+
+    def compress_tree(self, grads: Any, residual_blocks: jnp.ndarray):
+        blocks, spec, nbar = flatten_to_blocks(grads, self.cfg.block_size)
+        codes, alpha, new_res = self.compress_blocks(blocks, residual_blocks)
+        return CompressedGradient(codes, alpha, nbar), spec, new_res
+
+    def zero_residual(self, grads_like: Any) -> jnp.ndarray:
+        blocks, _, _ = flatten_to_blocks(grads_like, self.cfg.block_size)
+        return jnp.zeros_like(blocks)
+
+    # -- wire --------------------------------------------------------------
+    def pack(self, codes: jnp.ndarray) -> jnp.ndarray:
+        return pack_codes(codes, self.cfg.bits)
+
+    def unpack(self, words: jnp.ndarray) -> jnp.ndarray:
+        return unpack_codes(words, self.cfg.bits, self.cfg.m)
+
+    # -- decode helpers ------------------------------------------------------
+    def dequantize(self, codes: jnp.ndarray) -> jnp.ndarray:
+        return decode(codes, self.quantizer)

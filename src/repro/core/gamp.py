@@ -1,0 +1,352 @@
+"""EM-GAMP / Q-EM-GAMP (paper Procedure 2) -- batched over gradient blocks.
+
+This is the PS-side reconstruction engine.  Two output channels:
+
+  * quantized (Q-EM-GAMP, estimate-and-aggregate): the observation is the code
+    index; the channel posterior is a truncated-Gaussian moment match between
+    the Lloyd-Max decision thresholds (eqs. 12-16).
+  * awgn (EM-GAMP, aggregate-and-estimate): the observation is the Bussgang
+    linearized aggregate q_tilde = A g + d, d ~ N(0, nu I) (eqs. 23-24);
+    channel posterior is the Gaussian product rule.
+
+The input channel is the Bernoulli Gaussian-mixture prior (eq. 11) with
+EM-learned hyperparameters theta = (lam0, {lam_l, mu_l, phi_l}) (eq. 17).
+
+Everything is batched over the leading ``nblocks`` axis so each GAMP step is
+two (or four, in exact-variance mode) ``(nblocks, N) x (N, M)`` GEMMs -- the
+MXU-friendly layout.  A single sensing matrix A is shared by every block
+(protocol property, see sensing.py).
+
+Variance modes:
+  * "exact":   per-entry nu_p / nu_r via GEMMs with A**2 (paper Procedure 2).
+  * "scalar":  iid-ensemble approximation |A_mn|^2 ~= 1/M, reducing the
+               variance GEMMs to row-sums (2 GEMMs per iteration instead of 4).
+               This is the standard large-system GAMP simplification and is the
+               production default (see EXPERIMENTS.md #Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import LloydMaxQuantizer
+
+__all__ = ["GampConfig", "GampState", "qem_gamp", "em_gamp", "make_init_theta"]
+
+_EPS = 1e-12
+_TRUNC_CLIP = 9.0  # standardize-clip for truncated-normal stability in f32
+
+
+@dataclasses.dataclass(frozen=True)
+class GampConfig:
+    """Hyperparameters of the (Q-)EM-GAMP solver."""
+
+    n_components: int = 3  # L, Gaussian-mixture components
+    iters: int = 25  # I_GAMP (fixed trip count: jit/scan-friendly)
+    tol: float = 1e-5  # tau_GAMP early-freeze tolerance
+    damping: float = 1.0  # 1.0 = undamped (paper); <1 damps ghat updates
+    variance_mode: str = "exact"  # "exact" | "scalar"
+    em: bool = True  # run EM hyperparameter learning (step 15)
+    lam0_init: float = 0.9  # initial zero-probability (paper Sec. VI)
+
+
+class GampState(tuple):
+    """(ghat, nu_g, shat, theta, converged) -- opaque scan carry."""
+
+
+# ---------------------------------------------------------------------------
+# Prior (input channel): Bernoulli Gaussian-mixture.
+# ---------------------------------------------------------------------------
+
+
+def make_init_theta(nblocks: int, L: int, sigma: jnp.ndarray, lam0: float = 0.9):
+    """Paper's initialization (Sec. VI): mixture means spread over the signal
+    range, uniform weights on the non-zero part.
+
+    Args:
+      nblocks: number of blocks (leading batch axis).
+      L: number of Gaussian components.
+      sigma: (nblocks,) per-block signal scale (sqrt of per-entry energy).
+      lam0: initial sparsity (P[g == 0]).
+    """
+    sigma = jnp.asarray(sigma, jnp.float32)
+    gmax = 3.0 * sigma[:, None]  # +-3 sigma covers the init range
+    gmin = -gmax
+    ls = jnp.arange(1, L + 1, dtype=jnp.float32)[None, :]
+    mu = gmin + (2.0 * ls - 1.0) / (2.0 * L) * (gmax - gmin)
+    phi = jnp.broadcast_to(((gmax - gmin) / L) ** 2 / 12.0, mu.shape)
+    lam = jnp.full((nblocks, L), (1.0 - lam0) / L, jnp.float32)
+    lam0v = jnp.full((nblocks,), lam0, jnp.float32)
+    return (lam0v, lam, mu, phi)
+
+
+def _gaussian_pdf(x, mean, var):
+    var = jnp.maximum(var, _EPS)
+    return jnp.exp(-0.5 * jnp.square(x - mean) / var) / jnp.sqrt(2.0 * jnp.pi * var)
+
+
+def _input_channel(rhat, nu_r, theta):
+    """Posterior mean/var of g given rhat = g + N(0, nu_r), g ~ BG(theta).
+
+    Returns (ghat, nu_g, lam_post0, lam_post, mu_post, phi_post) -- the
+    posterior pieces are reused by the EM update (eq. 17).
+    Shapes: rhat/nu_r (nb, N); theta components (nb,)/(nb, L).
+    """
+    lam0, lam, mu, phi = theta
+    nu_r = jnp.maximum(nu_r, _EPS)
+    r = rhat[..., None]  # (nb, N, 1)
+    v = nu_r[..., None]  # (nb, N, 1)
+    muc = mu[:, None, :]  # (nb, 1, L)
+    phic = phi[:, None, :]
+    lamc = lam[:, None, :]
+    beta0 = lam0[:, None] * _gaussian_pdf(rhat, 0.0, nu_r)  # (nb, N)
+    beta = lamc * _gaussian_pdf(r, muc, v + phic)  # (nb, N, L)
+    denom = jnp.maximum(beta0 + jnp.sum(beta, axis=-1), _EPS)
+    lam_post0 = beta0 / denom
+    lam_post = beta / denom[..., None]
+    mu_post = (r * phic + muc * v) / jnp.maximum(v + phic, _EPS)
+    phi_post = v * phic / jnp.maximum(v + phic, _EPS)
+    ghat = jnp.sum(lam_post * mu_post, axis=-1)
+    second = jnp.sum(lam_post * (phi_post + jnp.square(mu_post)), axis=-1)
+    nu_g = jnp.maximum(second - jnp.square(ghat), _EPS)
+    return ghat, nu_g, lam_post0, lam_post, mu_post, phi_post
+
+
+def _em_update(theta, lam_post0, lam_post, mu_post, phi_post):
+    """EM hyperparameter refresh (step 15 / eq. 17), batched per block."""
+    _, _, mu, _ = theta
+    n = lam_post.shape[1]
+    lam0_new = jnp.mean(lam_post0, axis=1)
+    lam_sum = jnp.sum(lam_post, axis=1)  # (nb, L)
+    lam_new = lam_sum / n
+    safe = jnp.maximum(lam_sum, _EPS)
+    mu_new = jnp.sum(lam_post * mu_post, axis=1) / safe
+    mu_old = mu[:, None, :]
+    phi_new = (
+        jnp.sum(lam_post * (jnp.square(mu_old - mu_post) + phi_post), axis=1) / safe
+    )
+    # Renormalize weights to sum to one (guards fp drift) and keep every
+    # weight strictly inside (0, 1): a component collapsing to exactly zero
+    # can never be revived by EM and destabilizes the posterior ratios.
+    lam0_new = jnp.clip(lam0_new, 1e-6, 1.0 - 1e-6)
+    lam_new = jnp.maximum(lam_new, 1e-8)
+    total = lam0_new + jnp.sum(lam_new, axis=-1)
+    total = jnp.maximum(total, _EPS)
+    return (lam0_new / total, lam_new / total[:, None], mu_new, jnp.maximum(phi_new, _EPS))
+
+
+# ---------------------------------------------------------------------------
+# Output channels.
+# ---------------------------------------------------------------------------
+
+
+def _ndtr(x):
+    return 0.5 * (1.0 + jax.lax.erf(x / jnp.sqrt(2.0).astype(x.dtype)))
+
+
+def _npdf(x):
+    return jnp.exp(-0.5 * jnp.square(x)) / jnp.sqrt(2.0 * jnp.pi).astype(x.dtype)
+
+
+def _quantized_channel(phat, nu_p, codes, lo_tau, hi_tau):
+    """Truncated-Gaussian posterior of x ~ N(phat, nu_p) given
+    x in (lo_tau[code], hi_tau[code]]  (eqs. 12-16).
+
+    Numerically hardened: when the prior N(phat, nu_p) puts ~zero mass in the
+    observed bin (|standardized boundary| large), the exact ratio formulas
+    lose all signal in f32 (0/0 -> "no correction"), which is a positive
+    feedback loop that diverges GAMP.  In that regime the true posterior
+    concentrates at the bin boundary nearest to phat, so we fall back to
+    projecting phat into the bin with a small tail variance ~ nu_p / a^2 --
+    the correct asymptotic truncated-normal moments.
+    """
+    nu_p = jnp.maximum(nu_p, _EPS)
+    sd = jnp.sqrt(nu_p)
+    lo = lo_tau[codes.astype(jnp.int32)]
+    hi = hi_tau[codes.astype(jnp.int32)]
+    a = (lo - phat) / sd
+    b = (hi - phat) / sd
+    # Far-tail detection: entire bin is > TRUNC_CLIP sds away on one side.
+    far = jnp.minimum(jnp.abs(a), jnp.abs(b)) > _TRUNC_CLIP
+    ac = jnp.clip(a, -_TRUNC_CLIP, _TRUNC_CLIP)
+    bc = jnp.clip(b, -_TRUNC_CLIP, _TRUNC_CLIP)
+    z = jnp.maximum(_ndtr(bc) - _ndtr(ac), 1e-12)
+    pa, pb = _npdf(ac), _npdf(bc)
+    ratio1 = (pa - pb) / z
+    ratio2 = (ac * pa - bc * pb) / z
+    xpost_exact = phat + sd * ratio1
+    nu_exact = nu_p * jnp.maximum(1.0 + ratio2 - jnp.square(ratio1), 1e-8)
+    # Asymptotic fallback: mean just inside the nearest boundary, tail var.
+    amin = jnp.minimum(jnp.abs(a), jnp.abs(b))
+    edge = jnp.clip(phat, lo, hi)  # projection onto the bin
+    inward = jnp.where(phat < lo, 1.0, -1.0)  # direction into the bin
+    xpost_far = edge + inward * sd / jnp.maximum(amin, 1.0)
+    nu_far = nu_p / jnp.maximum(jnp.square(amin), 1.0)
+    xpost = jnp.where(far, xpost_far, xpost_exact)
+    nu_x = jnp.where(far, nu_far, nu_exact)
+    # Posterior variance can never exceed the prior variance.
+    nu_x = jnp.minimum(nu_x, nu_p)
+    return xpost, nu_x
+
+
+def _awgn_channel(phat, nu_p, y, nu_d):
+    """Gaussian product posterior for y = x + N(0, nu_d) (paper Sec. IV-B)."""
+    nu_p = jnp.maximum(nu_p, _EPS)
+    nu_d = jnp.maximum(nu_d, _EPS)
+    xpost = (phat * nu_d + y * nu_p) / (nu_p + nu_d)
+    nu_x = nu_p * nu_d / (nu_p + nu_d)
+    return xpost, nu_x
+
+
+# ---------------------------------------------------------------------------
+# The GAMP loop.
+# ---------------------------------------------------------------------------
+
+
+def _gamp_run(
+    out_channel,
+    a: jnp.ndarray,  # (M, N)
+    alpha: jnp.ndarray,  # (nb,) effective per-block scaling of A
+    init_var: jnp.ndarray,  # (nb,) per-entry prior energy of g
+    cfg: GampConfig,
+    nblocks: int,
+    n: int,
+    m: int,
+):
+    a_t = a.T  # (N, M)
+    a2 = jnp.square(a)  # (M, N)
+    a2_t = a2.T
+    alpha = jnp.asarray(alpha, jnp.float32)
+    alive = alpha > 0.0
+    safe_alpha = jnp.where(alive, alpha, 1.0)
+    al2 = jnp.square(safe_alpha)[:, None]
+
+    sigma = jnp.sqrt(jnp.maximum(init_var, _EPS))
+    theta0 = make_init_theta(nblocks, cfg.n_components, sigma, cfg.lam0_init)
+    ghat0 = jnp.zeros((nblocks, n), jnp.float32)
+    nu_g0 = jnp.broadcast_to(jnp.maximum(init_var, _EPS)[:, None], (nblocks, n)).astype(
+        jnp.float32
+    )
+    shat0 = jnp.zeros((nblocks, m), jnp.float32)
+
+    scalar_var = cfg.variance_mode == "scalar"
+
+    def body(carry, _):
+        ghat, nu_g, shat, theta = carry
+        ghat_old = ghat
+        if scalar_var:
+            nu_p = al2 / m * jnp.sum(nu_g, axis=-1, keepdims=True)  # (nb, 1)
+            nu_p = jnp.broadcast_to(nu_p, (nblocks, m))
+        else:
+            nu_p = al2 * (nu_g @ a2_t)  # (nb, M)
+        nu_p = jnp.maximum(nu_p, _EPS)
+        phat = safe_alpha[:, None] * (ghat @ a_t) - nu_p * shat
+        xpost, nu_x = out_channel(phat, nu_p)
+        shat_new = (xpost - phat) / nu_p
+        nu_s = jnp.maximum((1.0 - nu_x / nu_p) / nu_p, _EPS)
+        if scalar_var:
+            nu_r = 1.0 / jnp.maximum(
+                al2 / m * jnp.sum(nu_s, axis=-1, keepdims=True), _EPS
+            )
+            nu_r = jnp.broadcast_to(nu_r, (nblocks, n))
+        else:
+            nu_r = 1.0 / jnp.maximum(al2 * (nu_s @ a2), _EPS)
+        rhat = ghat + nu_r * (safe_alpha[:, None] * (shat_new @ a))
+        ghat_new, nu_g_new, lp0, lp, mp, pp = _input_channel(rhat, nu_r, theta)
+        theta_new = _em_update(theta, lp0, lp, mp, pp) if cfg.em else theta
+        if cfg.damping < 1.0:
+            d = cfg.damping
+            ghat_new = d * ghat_new + (1.0 - d) * ghat_old
+            shat_new = d * shat_new + (1.0 - d) * shat
+            nu_g_new = d * nu_g_new + (1.0 - d) * nu_g
+        delta = jnp.sum(jnp.square(ghat_new - ghat_old), axis=-1)
+        ref = jnp.maximum(jnp.sum(jnp.square(ghat_old), axis=-1), _EPS)
+        converged = delta < cfg.tol * ref
+        # Early-freeze: blocks that converged stop moving entirely (the
+        # paper's break, expressed scan-compatibly with a static trip count).
+        keepc = converged[:, None]
+        ghat_new = jnp.where(keepc, ghat_old, ghat_new)
+        nu_g_new = jnp.where(keepc, nu_g, nu_g_new)
+        shat_new = jnp.where(keepc, shat, shat_new)
+        theta_new = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(
+                converged.reshape((-1,) + (1,) * (new.ndim - 1)), old, new
+            ),
+            theta_new,
+            theta,
+        )
+        return (ghat_new, nu_g_new, shat_new, theta_new), None
+
+    (ghat, nu_g, _, theta), _ = jax.lax.scan(
+        body, (ghat0, nu_g0, shat0, theta0), None, length=cfg.iters
+    )
+    ghat = jnp.where(alive[:, None], ghat, 0.0)
+    return ghat, nu_g, theta
+
+
+def qem_gamp(
+    codes: jnp.ndarray,  # (nb, M) uint8 Lloyd-Max code indices
+    alpha: jnp.ndarray,  # (nb,) transmitted scale factors
+    a: jnp.ndarray,  # (M, N) sensing matrix
+    quantizer: LloydMaxQuantizer,
+    cfg: GampConfig,
+) -> jnp.ndarray:
+    """Q-EM-GAMP (Procedure 2): MMSE estimate of each block from its codes.
+
+    Returns (nb, N) reconstructed blocks (pre-concatenation).
+    """
+    nb, m = codes.shape
+    n = a.shape[1]
+    taus = quantizer.jnp_thresholds()
+    big = jnp.asarray([_TRUNC_CLIP * 4.0], jnp.float32)
+    lo_tau = jnp.concatenate([-big, taus])
+    hi_tau = jnp.concatenate([taus, big])
+    # Per-entry prior energy: E[g_n^2] = ||g||^2 / N = M / (N alpha^2).
+    alive = alpha > 0
+    init_var = jnp.where(alive, m / (n * jnp.square(jnp.where(alive, alpha, 1.0))), 1.0)
+    out = partial(_quantized_channel, codes=codes, lo_tau=lo_tau, hi_tau=hi_tau)
+    ghat, _, _ = _gamp_run(
+        lambda p, v: out(p, v), a, alpha, init_var, cfg, nb, n, m
+    )
+    # Norm guard: the PS *knows* the true block norm (||g|| = sqrt(M)/alpha
+    # is transmitted); a diverged AMP fixed point can only manifest as an
+    # inflated estimate, so clip to 2x the true norm.  Protects the rare
+    # per-block divergence without touching converged blocks.
+    true_norm = jnp.where(alive, jnp.sqrt(jnp.float32(m)) / jnp.where(alive, alpha, 1.0), 0.0)
+    est_norm = jnp.linalg.norm(ghat, axis=-1)
+    scale = jnp.minimum(1.0, 2.0 * true_norm / jnp.maximum(est_norm, 1e-30))
+    return ghat * scale[:, None]
+
+
+def em_gamp(
+    y: jnp.ndarray,  # (nb, M) linear observations  y = A g + noise
+    noise_var: jnp.ndarray,  # (nb,) AWGN variance per block (eq. 24)
+    a: jnp.ndarray,  # (M, N)
+    cfg: GampConfig,
+    init_var: Optional[jnp.ndarray] = None,  # (nb,) per-entry signal energy
+) -> jnp.ndarray:
+    """EM-GAMP on a noisy *unquantized* observation (aggregate-and-estimate).
+
+    Returns (nb, N) reconstructed (already rho-weighted, aggregated) blocks.
+    """
+    nb, m = y.shape
+    n = a.shape[1]
+    if init_var is None:
+        # E per-entry energy of g from the observation: E||y||^2 = R E||g||^2
+        # per entry... ||y||^2/M ~= ||g||^2/M (A has unit column-energy rows:
+        # E|Ag|_m^2 = ||g||^2/M), so ||g||^2 ~= ||y||^2 and per-entry = /N.
+        init_var = jnp.maximum(jnp.sum(jnp.square(y), axis=-1) - m * noise_var, _EPS) / n
+    alpha = jnp.ones((nb,), jnp.float32)
+    nvar = jnp.asarray(noise_var, jnp.float32)[:, None]
+    out = lambda p, v: _awgn_channel(p, v, y, nvar)
+    ghat, _, _ = _gamp_run(out, a, alpha, jnp.asarray(init_var, jnp.float32), cfg, nb, n, m)
+    # Norm guard (see qem_gamp): expected ||g_sum||^2 = init_var * N.
+    exp_norm = jnp.sqrt(jnp.maximum(init_var * n, 0.0))
+    est_norm = jnp.linalg.norm(ghat, axis=-1)
+    scale = jnp.minimum(1.0, 2.0 * exp_norm / jnp.maximum(est_norm, 1e-30))
+    return ghat * scale[:, None]

@@ -1,0 +1,85 @@
+"""PS-side gradient reconstruction strategies (paper Sec. IV, Procedure 1).
+
+  * estimate_and_aggregate (FedQCS-EA, steps 12-14): Q-EM-GAMP per worker,
+    then rho-weighted sum.  Best NMSE, complexity O(K B M N I).
+  * aggregate_and_estimate (FedQCS-AE, steps 16-20): Bussgang-combine within
+    each of G groups, EM-GAMP per group, sum groups.  O(G B M N I).
+
+Both consume the stacked payloads of all K workers:
+    codes  (K, nblocks, M) uint8
+    alphas (K, nblocks)    f32
+    rhos   (K,)            f32   (sum to 1; zero for dead/evicted workers)
+
+Partial participation: a failed worker contributes rho_k = 0 and its codes are
+ignored exactly (its Bussgang weight and noise contribution vanish), so losing
+a pod degrades gradient quality instead of failing the step.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import bussgang
+from repro.core.compression import BQCSCodec
+from repro.core.gamp import GampConfig, em_gamp, qem_gamp
+
+__all__ = ["estimate_and_aggregate", "aggregate_and_estimate", "gamp_config_from"]
+
+
+def gamp_config_from(codec: BQCSCodec, iters: Optional[int] = None) -> GampConfig:
+    cfg = codec.cfg
+    return GampConfig(
+        n_components=cfg.gamp_components,
+        iters=iters if iters is not None else cfg.gamp_iters,
+        variance_mode=cfg.gamp_variance_mode,
+    )
+
+
+def estimate_and_aggregate(
+    codec: BQCSCodec,
+    codes: jnp.ndarray,  # (K, nb, M)
+    alphas: jnp.ndarray,  # (K, nb)
+    rhos: jnp.ndarray,  # (K,)
+    gamp: Optional[GampConfig] = None,
+) -> jnp.ndarray:
+    """FedQCS-EA: returns the reconstructed global blocks (nb, N)."""
+    gamp = gamp or gamp_config_from(codec)
+    k, nb, m = codes.shape
+    # Batch all K*nb recovery problems into one GAMP run (they share A).
+    flat_codes = codes.reshape(k * nb, m)
+    flat_alpha = alphas.reshape(k * nb)
+    ghat = qem_gamp(flat_codes, flat_alpha, codec.a, codec.quantizer, gamp)
+    ghat = ghat.reshape(k, nb, -1)
+    return jnp.sum(rhos[:, None, None] * ghat, axis=0)
+
+
+def aggregate_and_estimate(
+    codec: BQCSCodec,
+    codes: jnp.ndarray,  # (K, nb, M)
+    alphas: jnp.ndarray,  # (K, nb)
+    rhos: jnp.ndarray,  # (K,)
+    groups: int = 1,  # G
+    gamp: Optional[GampConfig] = None,
+) -> jnp.ndarray:
+    """FedQCS-AE: Bussgang-aggregate within groups, EM-GAMP per group, sum."""
+    gamp = gamp or gamp_config_from(codec)
+    k, nb, m = codes.shape
+    n = codec.cfg.block_size
+    if k % groups != 0:
+        raise ValueError(f"K={k} not divisible by G={groups}")
+    per = k // groups
+    q = codec.quantizer
+    out = jnp.zeros((nb, n), jnp.float32)
+    ys, nus, energies = [], [], []
+    for g in range(groups):
+        sl = slice(g * per, (g + 1) * per)
+        ys.append(bussgang.aggregate_codes(codes[sl], alphas[sl], rhos[sl], q))
+        nus.append(bussgang.effective_noise_var(alphas[sl], rhos[sl], q))
+        energies.append(bussgang.signal_energy(alphas[sl], rhos[sl], m, n))
+    y = jnp.concatenate(ys, axis=0)  # (G*nb, M)
+    nu = jnp.concatenate(nus, axis=0)
+    energy = jnp.concatenate(energies, axis=0)
+    ghat = em_gamp(y, nu, codec.a, gamp, init_var=energy)
+    return jnp.sum(ghat.reshape(groups, nb, n), axis=0)

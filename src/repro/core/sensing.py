@@ -1,0 +1,64 @@
+"""Sensing matrices for the dimension-reduction stage (paper Sec. III-A).
+
+The paper draws A in R^{M x N} iid N(0, 1/M) -- the classical RIP ensemble --
+and *shares the same A across all devices, blocks, and steps* (it is part of
+the protocol, like the quantizer codebook).  We therefore generate A from a
+fixed seed so every pod / the PS can materialize it independently without any
+communication.
+
+Two layouts are provided:
+  * ``sensing_matrix``      -> A   (M, N), paper orientation (y = A g).
+  * ``sensing_matrix_t``    -> A^T (N, M), the GEMM-friendly layout used by the
+    batched path ``Y = G @ A^T`` with G (nblocks, N).
+
+``scale_factor`` computes alpha_{k,b} = sqrt(M)/||g_block|| (eq. 9 discussion),
+which normalizes every projected entry to ~ N(0,1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "sensing_matrix",
+    "sensing_matrix_t",
+    "scale_factor",
+    "project_blocks",
+]
+
+
+def sensing_matrix(key: jax.Array, m: int, n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """A in R^{m x n}, entries iid N(0, 1/m)."""
+    return jax.random.normal(key, (m, n), dtype=dtype) / jnp.sqrt(jnp.asarray(m, dtype))
+
+
+def sensing_matrix_t(key: jax.Array, m: int, n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """A^T in R^{n x m} (same entries as :func:`sensing_matrix`)."""
+    return sensing_matrix(key, m, n, dtype).T
+
+
+def scale_factor(blocks: jnp.ndarray, m: int, eps: float = 1e-20) -> jnp.ndarray:
+    """alpha per block: sqrt(M) / ||g_block||, (nblocks,).
+
+    Zero blocks get alpha = 0 (their projection is zero anyway and the
+    receiver treats alpha==0 as an empty block).
+    """
+    norms = jnp.linalg.norm(blocks, axis=-1)
+    return jnp.where(norms > eps, jnp.sqrt(jnp.asarray(m, blocks.dtype)) / norms, 0.0)
+
+
+def project_blocks(blocks: jnp.ndarray, a_t: jnp.ndarray) -> jnp.ndarray:
+    """x = alpha * (A @ g) for every block, batched as one GEMM.
+
+    Args:
+      blocks: (nblocks, N) sparse gradient blocks.
+      a_t: (N, M) transposed sensing matrix.
+
+    Returns:
+      (x, alpha): (nblocks, M) unit-variance projections and (nblocks,) scales.
+    """
+    m = a_t.shape[1]
+    alpha = scale_factor(blocks, m)
+    x = (blocks @ a_t) * alpha[:, None]
+    return x, alpha

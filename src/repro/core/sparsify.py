@@ -1,0 +1,82 @@
+"""Block sparsification with error feedback (paper Sec. III-A, eqs. 7-8).
+
+The gradient vector is split into blocks of size N; each block keeps only its
+top-S magnitude entries.  The dropped mass is *not* lost: it is returned as a
+residual that the caller accumulates into the next step's gradient
+(``g_bar^{(t+1)} = grad^{(t+1)} + Delta^{(t+1)}``), the standard error-feedback
+mechanism the paper adopts from Amiri & Gunduz.
+
+All functions operate on a stacked ``(nblocks, N)`` view so that every block is
+processed by one vectorized primitive (XLA-friendly; no per-block Python loop).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["block_topk_mask", "block_sparsify", "block_sparsify_threshold"]
+
+
+def block_topk_mask(blocks: jnp.ndarray, s: int) -> jnp.ndarray:
+    """Boolean mask of the top-``s`` magnitude entries per block.
+
+    Args:
+      blocks: (nblocks, N) gradient blocks.
+      s: number of entries to keep per block (static).
+
+    Returns:
+      (nblocks, N) bool mask with exactly ``s`` True per row (ties broken by
+      jax.lax.top_k's deterministic ordering).
+    """
+    n = blocks.shape[-1]
+    if s >= n:
+        return jnp.ones(blocks.shape, dtype=bool)
+    mag = jnp.abs(blocks)
+    _, idx = jax.lax.top_k(mag, s)  # (nblocks, s)
+    mask = jnp.zeros(blocks.shape, dtype=bool)
+    rows = jnp.arange(blocks.shape[0])[:, None]
+    return mask.at[rows, idx].set(True)
+
+
+def block_sparsify(blocks: jnp.ndarray, s: int):
+    """BlockSparse(.): keeps top-S per block; returns (sparse, residual).
+
+    ``sparse + residual == blocks`` exactly (error-feedback identity, eq. 7).
+    """
+    mask = block_topk_mask(blocks, s)
+    sparse = jnp.where(mask, blocks, 0.0)
+    return sparse, blocks - sparse
+
+
+def block_sparsify_threshold(blocks: jnp.ndarray, s: int, bisect_iters: int = 24):
+    """Threshold-selection variant: per-block magnitude threshold found by
+    bisection instead of an exact top-k sort.
+
+    This is the TPU-native formulation used by the Pallas kernel
+    (``kernels/block_topk``): it avoids data-dependent gather/scatter, using
+    only reductions and compares.  Keeps *approximately* S entries per block
+    (exact when magnitudes are distinct up to the bisection resolution).
+
+    Returns (sparse, residual) like :func:`block_sparsify`.
+    """
+    mag = jnp.abs(blocks)
+    hi = jnp.max(mag, axis=-1, keepdims=True)
+    lo = jnp.zeros_like(hi)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        count = jnp.sum(mag >= mid, axis=-1, keepdims=True)
+        # too many survivors -> raise threshold; too few -> lower it.
+        lo = jnp.where(count > s, mid, lo)
+        hi = jnp.where(count > s, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, bisect_iters, body, (lo, hi))
+    thresh = hi  # smallest examined threshold keeping <= s entries
+    mask = mag >= thresh
+    # Guarantee at least one survivor per block (max always kept).
+    mask = mask | (mag == jnp.max(mag, axis=-1, keepdims=True))
+    sparse = jnp.where(mask, blocks, 0.0)
+    return sparse, blocks - sparse

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for FedQCS hot spots (validated in interpret mode).
+
+Kernels: bqcs_encode (fused scale+project+quantize), block_topk (bisection
+top-S sparsify), gamp_step (fused EM-GAMP iteration).  Public entry points
+live in ops.py; pure-jnp oracles in ref.py.
+"""

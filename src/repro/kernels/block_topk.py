@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: per-block magnitude top-S selection by bisection.
+
+The paper's BlockSparse() keeps the top-S magnitudes per block.  Exact top-k
+needs a sort (data-dependent gather) which maps poorly to the TPU vector
+unit; instead we find a per-block magnitude *threshold* by fixed-iteration
+bisection -- only compares and row reductions, fully in VMEM -- and mask.
+With >= 24 iterations the threshold resolves to ~1e-7 of the block's dynamic
+range, i.e. exact top-S whenever magnitudes are distinct at f32 resolution
+(ties keep all tied entries; the count may then exceed S by the tie size,
+which only *adds* information and keeps the error-feedback identity exact).
+
+Outputs both the sparsified block and the residual (blocks - sparse), so the
+error-feedback update (eq. 7) is one fused pass.
+
+Grid: one program per TB-row tile of (nblocks, N).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TB = 128
+BISECT_ITERS = 26
+
+
+def _topk_kernel(x_ref, sparse_ref, resid_ref, *, s: int, iters: int):
+    x = x_ref[...]  # (TB, N)
+    mag = jnp.abs(x)
+    hi = jnp.max(mag, axis=1, keepdims=True)  # (TB, 1)
+    lo = jnp.zeros_like(hi)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        count = jnp.sum((mag >= mid).astype(jnp.int32), axis=1, keepdims=True)
+        too_many = count > s
+        lo = jnp.where(too_many, mid, lo)
+        hi = jnp.where(too_many, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    thresh = hi  # keeps <= s entries (up to ties / bisection resolution)
+    keep = (mag >= thresh) | (mag == jnp.max(mag, axis=1, keepdims=True))
+    sparse = jnp.where(keep, x, 0.0)
+    sparse_ref[...] = sparse
+    resid_ref[...] = x - sparse
+
+
+@functools.partial(jax.jit, static_argnames=("s", "tb", "iters", "interpret"))
+def block_topk_pallas(
+    blocks: jnp.ndarray,  # (nb, N) f32, nb % tb == 0
+    s: int,
+    tb: int = DEFAULT_TB,
+    iters: int = BISECT_ITERS,
+    interpret: bool = False,
+):
+    nb, n = blocks.shape
+    assert nb % tb == 0, (nb, tb)
+    kernel = functools.partial(_topk_kernel, s=s, iters=iters)
+    sparse, resid = pl.pallas_call(
+        kernel,
+        grid=(nb // tb,),
+        in_specs=[pl.BlockSpec((tb, n), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, n), jnp.float32),
+            jax.ShapeDtypeStruct((nb, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(blocks)
+    return sparse, resid

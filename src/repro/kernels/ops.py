@@ -1,0 +1,129 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles: row padding to tile multiples, interpret-mode selection (the kernels
+execute in interpret mode on CPU -- the TPU lowering is the target), dtype
+plumbing, and a full GAMP driver (`gamp_ae_run`) that scans the fused
+`gamp_step` kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import LloydMaxQuantizer
+from repro.kernels import bqcs_encode as _enc
+from repro.kernels import block_topk as _topk
+from repro.kernels import gamp_step as _gstep
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x: jnp.ndarray, tb: int) -> Tuple[jnp.ndarray, int]:
+    nb = x.shape[0]
+    pad = (-nb) % tb
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+    return x, nb
+
+
+def bqcs_encode(
+    blocks: jnp.ndarray, a: jnp.ndarray, quantizer: LloydMaxQuantizer, tb: int | None = None
+):
+    """Fused scale+project+quantize.  blocks (nb, N), a (M, N).
+
+    Returns (codes uint8 (nb, M), alpha (nb,)).
+    """
+    tb = tb or min(_enc.DEFAULT_TB, max(8, blocks.shape[0]))
+    padded, nb = _pad_rows(blocks.astype(jnp.float32), tb)
+    codes, alpha = _enc.bqcs_encode_pallas(
+        padded, a.T, quantizer.jnp_thresholds(), tb=tb, interpret=_interpret()
+    )
+    return codes[:nb].astype(jnp.uint8), alpha[:nb]
+
+
+def block_sparsify(blocks: jnp.ndarray, s: int, tb: int | None = None):
+    """Bisection top-S sparsify.  Returns (sparse, residual)."""
+    tb = tb or min(_topk.DEFAULT_TB, max(8, blocks.shape[0]))
+    padded, nb = _pad_rows(blocks.astype(jnp.float32), tb)
+    sparse, resid = _topk.block_topk_pallas(padded, s, tb=tb, interpret=_interpret())
+    return sparse[:nb], resid[:nb]
+
+
+def gamp_step(
+    ghat, nu_g, shat, theta, y, nu_d, a, n_components: int = 3, em: bool = True,
+    tb: int | None = None,
+):
+    """One fused AE GAMP iteration (see gamp_step.py for contract)."""
+    tb = tb or min(_gstep.DEFAULT_TB, max(8, ghat.shape[0]))
+    nb = ghat.shape[0]
+    pad = (-nb) % tb
+    if pad:
+        padf = lambda x: jnp.concatenate(
+            [x, jnp.ones((pad,) + x.shape[1:], x.dtype)], axis=0
+        )
+        ghat, nu_g, shat, theta, y, nu_d = map(padf, (ghat, nu_g, shat, theta, y, nu_d))
+    outs = _gstep.gamp_step_pallas(
+        ghat, nu_g, shat, theta, y, nu_d, a,
+        n_components=n_components, em=em, tb=tb, interpret=_interpret(),
+    )
+    return tuple(o[:nb] for o in outs)
+
+
+@functools.partial(jax.jit, static_argnames=("n_components", "iters", "em"))
+def gamp_ae_run(
+    y: jnp.ndarray,  # (nb, M) Bussgang-aggregated observations
+    nu_d: jnp.ndarray,  # (nb,) effective AWGN variance (eq. 24)
+    a: jnp.ndarray,  # (M, N)
+    init_var: jnp.ndarray,  # (nb,) per-entry signal energy
+    n_components: int = 3,
+    iters: int = 25,
+    em: bool = True,
+    lam0: float = 0.9,
+) -> jnp.ndarray:
+    """Full AE reconstruction using the fused kernel: scan of gamp_step.
+
+    Equivalent to core.gamp.em_gamp(variance_mode='scalar', tol=0) -- the
+    kernel path runs a fixed trip count with no early-freeze (static work for
+    the scheduler; see DESIGN.md).
+    """
+    nb, m = y.shape
+    n = a.shape[1]
+    L = n_components
+    sigma = jnp.sqrt(jnp.maximum(init_var, 1e-12))
+    gmax = 3.0 * sigma[:, None]
+    ls = jnp.arange(1, L + 1, dtype=jnp.float32)[None, :]
+    mu0 = -gmax + (2.0 * ls - 1.0) / (2.0 * L) * (2.0 * gmax)
+    phi0 = jnp.broadcast_to((2.0 * gmax / L) ** 2 / 12.0, mu0.shape)
+    theta0 = jnp.concatenate(
+        [
+            jnp.full((nb, 1), lam0, jnp.float32),
+            jnp.full((nb, L), (1.0 - lam0) / L, jnp.float32),
+            mu0,
+            phi0,
+        ],
+        axis=1,
+    )
+    ghat0 = jnp.zeros((nb, n), jnp.float32)
+    nu_g0 = jnp.broadcast_to(jnp.maximum(init_var, 1e-12)[:, None], (nb, n)).astype(
+        jnp.float32
+    )
+    shat0 = jnp.zeros((nb, m), jnp.float32)
+    nud2 = jnp.asarray(nu_d, jnp.float32)[:, None]
+
+    def body(carry, _):
+        gh, ng, sh, th = carry
+        gh, ng, sh, th = gamp_step(
+            gh, ng, sh, th, y, nud2, a, n_components=n_components, em=em
+        )
+        return (gh, ng, sh, th), None
+
+    (ghat, _, _, _), _ = jax.lax.scan(
+        body, (ghat0, nu_g0, shat0, theta0), None, length=iters
+    )
+    return ghat

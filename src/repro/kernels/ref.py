@@ -1,0 +1,109 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function mirrors its kernel's *semantics* exactly (same math, same
+iteration counts, same tie-breaking) using only jnp ops, so
+``assert_allclose(kernel(...), ref(...))`` is meaningful across shape/dtype
+sweeps.  These are also the implementations used when
+``FedQCSConfig.use_kernels=False``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def bqcs_encode_ref(blocks: jnp.ndarray, a_t: jnp.ndarray, taus: jnp.ndarray):
+    """(nb, N), (N, M), (2^Q-1,) -> codes (nb, M) int32, alpha (nb,)."""
+    m = a_t.shape[1]
+    sq = jnp.sum(blocks * blocks, axis=1, keepdims=True)
+    alive = sq > 1e-30
+    inv_norm = jax.lax.rsqrt(jnp.where(alive, sq, 1.0))
+    alpha = jnp.where(alive, jnp.sqrt(jnp.float32(m)) * inv_norm, 0.0)
+    y = (blocks * alpha) @ a_t
+    codes = jnp.sum((y[:, :, None] > taus[None, None, :]).astype(jnp.int32), axis=-1)
+    return codes, alpha[:, 0]
+
+
+def block_topk_ref(blocks: jnp.ndarray, s: int, iters: int = 26):
+    """Bisection-threshold top-S (mirrors block_topk kernel, incl. ties)."""
+    mag = jnp.abs(blocks)
+    hi = jnp.max(mag, axis=1, keepdims=True)
+    lo = jnp.zeros_like(hi)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        count = jnp.sum((mag >= mid).astype(jnp.int32), axis=1, keepdims=True)
+        too_many = count > s
+        return jnp.where(too_many, mid, lo), jnp.where(too_many, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    keep = (mag >= hi) | (mag == jnp.max(mag, axis=1, keepdims=True))
+    sparse = jnp.where(keep, blocks, 0.0)
+    return sparse, blocks - sparse
+
+
+def gamp_step_ref(ghat, nu_g, shat, theta, y, nu_d, a, n_components=3, em=True):
+    """One scalar-variance AWGN EM-GAMP iteration (mirrors gamp_step kernel).
+
+    theta packed as [lam0 | lam_1..L | mu_1..L | phi_1..L], (nb, 1+3L).
+    """
+    L = n_components
+    m = y.shape[1]
+    n = ghat.shape[1]
+    nu_d = jnp.maximum(nu_d, _EPS)
+    lam0 = theta[:, 0:1]
+    lam = theta[:, 1 : 1 + L]
+    mu = theta[:, 1 + L : 1 + 2 * L]
+    phi = theta[:, 1 + 2 * L : 1 + 3 * L]
+
+    nu_p = jnp.maximum(jnp.sum(nu_g, axis=1, keepdims=True) / m, _EPS)
+    phat = ghat @ a.T - nu_p * shat
+    xpost = (phat * nu_d + y * nu_p) / (nu_p + nu_d)
+    nu_x = nu_p * nu_d / (nu_p + nu_d)
+    shat_new = (xpost - phat) / nu_p
+    nu_s = jnp.maximum((1.0 - nu_x / nu_p) / nu_p, _EPS)
+    nu_r = 1.0 / nu_s
+
+    rhat = ghat + nu_r * (shat_new @ a)
+    inv_sqrt_2pi = 0.3989422804014327
+    v = nu_r
+    r3 = rhat[:, :, None]
+    muc = mu[:, None, :]
+    phic = phi[:, None, :]
+    lamc = lam[:, None, :]
+    beta0 = lam0 * (inv_sqrt_2pi * jax.lax.rsqrt(v)) * jnp.exp(-0.5 * rhat**2 / v)
+    var_l = jnp.maximum(v[:, :, None] + phic, _EPS)
+    diff = r3 - muc
+    beta = lamc * (inv_sqrt_2pi * jax.lax.rsqrt(var_l)) * jnp.exp(
+        -0.5 * diff * diff / var_l
+    )
+    denom = jnp.maximum(beta0 + jnp.sum(beta, axis=-1), _EPS)
+    lam_post0 = beta0 / denom
+    lam_post = beta / denom[:, :, None]
+    mu_post = (r3 * phic + muc * v[:, :, None]) / var_l
+    phi_post = v[:, :, None] * phic / var_l
+    ghat_new = jnp.sum(lam_post * mu_post, axis=-1)
+    second = jnp.sum(lam_post * (phi_post + mu_post * mu_post), axis=-1)
+    nu_g_new = jnp.maximum(second - ghat_new**2, _EPS)
+
+    if em:
+        lam0_new = jnp.mean(lam_post0, axis=1, keepdims=True)
+        lam_sum = jnp.sum(lam_post, axis=1)
+        lam_new = lam_sum / n
+        safe = jnp.maximum(lam_sum, _EPS)
+        mu_new = jnp.sum(lam_post * mu_post, axis=1) / safe
+        phi_new = jnp.sum(lam_post * ((muc - mu_post) ** 2 + phi_post), axis=1) / safe
+        lam0_new = jnp.clip(lam0_new, 1e-6, 1.0 - 1e-6)
+        lam_new = jnp.maximum(lam_new, 1e-8)
+        total = jnp.maximum(lam0_new + jnp.sum(lam_new, axis=1, keepdims=True), _EPS)
+        theta_new = jnp.concatenate(
+            [lam0_new / total, lam_new / total, mu_new, jnp.maximum(phi_new, _EPS)],
+            axis=1,
+        )
+    else:
+        theta_new = theta
+    return ghat_new, nu_g_new, shat_new, theta_new

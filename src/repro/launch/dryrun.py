@@ -1,0 +1,236 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes and record memory/cost/collective analyses.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+
+The two XLA_FLAGS lines above MUST stay the first statements: jax locks the
+device count at first init, and the production meshes need 512 placeholder
+host devices.  (Everything else -- smoke tests, benches -- runs on 1 device.)
+
+Per-cell results land in runs/dryrun/<mesh>__<arch>__<shape>[__variant].json.
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "..", "benchmarks"))
+
+from repro.configs.registry import ARCHS, get_config
+from repro.core.compression import FedQCSConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as model_api
+from repro.models.sharding import param_specs
+from repro.optim.adam import OptConfig
+from repro.runtime import steps
+
+DEFAULT_FED = FedQCSConfig(
+    block_size=1024,
+    reduction_ratio=4,
+    bits=4,
+    s_ratio=0.05,
+    gamp_iters=8,
+    gamp_variance_mode="scalar",
+    sparsifier="bisect",  # partition-friendly top-S (see #Perf iteration 3c)
+)
+
+
+def _with_sharding(sds_tree, sharding_tree):
+    """Attach shardings to a ShapeDtypeStruct tree."""
+
+    def attach(sds, sh):
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh)
+
+    return jax.tree_util.tree_map(attach, sds_tree, sharding_tree)
+
+
+def _opt_cfg(cfg) -> OptConfig:
+    big = cfg.param_count() > 50e9
+    return OptConfig(state_dtype="int8" if big else "float32")
+
+
+def _mem_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    keys = (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "host_argument_size_in_bytes",
+        "host_output_size_in_bytes",
+        "host_temp_size_in_bytes",
+    )
+    return {k: int(getattr(ma, k)) for k in keys if hasattr(ma, k)}
+
+
+def dryrun_cell(
+    arch: str,
+    shape: str,
+    multi_pod: bool,
+    fedqcs: bool = True,
+    out_dir: str = "runs/dryrun",
+    save_hlo: bool = False,
+    impl: str = "auto",
+):
+    from hlo_analysis import collective_bytes, count_ops  # benchmarks/
+
+    cfg = get_config(arch)
+    cell = model_api.SHAPES[shape]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    variant = ""
+    if cell.kind == "train":
+        variant = "__fedqcs" if (fedqcs and multi_pod) else "__baseline"
+        if variant == "__fedqcs" and impl != "auto":
+            variant += f"_{impl}"
+    tag = f"{mesh_name}__{arch}__{shape}{variant}"
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, tag + ".json")
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_name,
+        "variant": variant.strip("_"),
+        "kind": cell.kind,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    ok, reason = model_api.supports_cell(cfg, shape)
+    if not ok:
+        rec["status"] = "skip"
+        rec["reason"] = reason
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[dryrun] SKIP {tag}: {reason}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_pods = mesh.shape.get("pod", 1)
+    t0 = time.time()
+    try:
+        if cell.kind == "train":
+            fed = DEFAULT_FED if (fedqcs and multi_pod) else None
+            opt = _opt_cfg(cfg)
+            state = steps.init_train_state(
+                cfg, opt, fed, jax.random.PRNGKey(0), n_pods=n_pods, abstract=True,
+                mesh=mesh, impl=impl,
+            )
+            shardings = steps.train_state_shardings(state, mesh, fed is not None)
+            state_in = _with_sharding(state, shardings)
+            batch_sds = model_api.input_specs(cfg, shape)
+            batch_in = _with_sharding(batch_sds, steps.batch_shardings(cfg, shape, mesh))
+            step_fn = steps.make_train_step(cfg, opt, fed, mesh, donate=True, impl=impl)
+            lowered = step_fn.lower(state_in, batch_in)
+        elif cell.kind == "prefill":
+            params = steps.abstract_params(cfg)
+            pshard = steps.sane_param_shardings(params, mesh)
+            params_in = _with_sharding(params, pshard)
+            batch_sds = model_api.input_specs(cfg, shape)
+            batch_in = _with_sharding(batch_sds, steps.batch_shardings(cfg, shape, mesh))
+            step_fn = steps.make_prefill_step(cfg, mesh)
+            lowered = step_fn.lower(params_in, batch_in)
+        else:  # decode
+            params = steps.abstract_params(cfg)
+            pshard = steps.sane_param_shardings(params, mesh)
+            params_in = _with_sharding(params, pshard)
+            specs = model_api.input_specs(cfg, shape)
+            shardings = steps.batch_shardings(cfg, shape, mesh)
+            inputs = _with_sharding(specs, shardings)
+            step_fn = steps.make_decode_step(cfg, mesh, donate=True)
+            lowered = step_fn.lower(params_in, inputs["cache"], inputs["tokens"], inputs["pos"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        cost = dict(compiled.cost_analysis() or {})
+        hlo = compiled.as_text()
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            n_devices=mesh.size,
+            cost={k: float(v) for k, v in cost.items() if isinstance(v, (int, float))},
+            memory=_mem_dict(compiled),
+            collective_bytes_per_device=collective_bytes(hlo),
+            collective_ops=count_ops(hlo),
+        )
+        if save_hlo:
+            with open(os.path.join(out_dir, tag + ".hlo"), "w") as f:
+                f.write(hlo)
+        print(
+            f"[dryrun] OK {tag}: compile {t_compile:.0f}s "
+            f"flops={cost.get('flops', 0):.3e} "
+            f"coll={rec['collective_bytes_per_device'].get('total', 0):.3e}B"
+        )
+    except Exception as e:  # record failures -- they are bugs to fix
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"[:2000]
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] ERROR {tag}: {type(e).__name__}: {str(e)[:200]}")
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(model_api.SHAPES), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--baseline", action="store_true", help="train without FedQCS")
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--impl", default="auto")
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    cells = (
+        [(a, s) for a in ARCHS for s in model_api.SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    n_fail = 0
+    for mp in meshes:
+        for arch, shape in cells:
+            out = os.path.join(args.out)
+            if args.skip_existing:
+                cfg0 = get_config(arch)
+                kind = model_api.SHAPES[shape].kind
+                var = ("__fedqcs" if (not args.baseline and mp) else "__baseline") if kind == "train" else ""
+                tag = f"{'2x16x16' if mp else '16x16'}__{arch}__{shape}{var}"
+                pth = os.path.join(out, tag + ".json")
+                if os.path.exists(pth):
+                    import json as _json
+                    st = _json.load(open(pth)).get("status")
+                    if st in ("ok", "skip"):
+                        continue
+            rec = dryrun_cell(
+                arch, shape, mp, fedqcs=not args.baseline, out_dir=out,
+                save_hlo=args.save_hlo, impl=args.impl,
+            )
+            n_fail += rec.get("status") == "error"
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

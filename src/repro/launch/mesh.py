@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+Single pod:  (data=16, model=16)           -- 256 chips (one v5e pod).
+Multi-pod:   (pod=2, data=16, model=16)    -- 512 chips across 2 pods.
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_debug_mesh(pods: int = 2, data: int = 2, model: int = 2):
+    """Small mesh for CPU integration tests (requires
+    XLA_FLAGS=--xla_force_host_platform_device_count>=pods*data*model)."""
+    return jax.make_mesh(
+        (pods, data, model),
+        ("pod", "data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 3,
+    )
+
+
+def make_single_device_mesh():
+    """1x1x1 mesh: lets every code path (shard_map, specs) run on one CPU."""
+    return jax.make_mesh(
+        (1, 1, 1), ("pod", "data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 3,
+    )

@@ -1,0 +1,310 @@
+"""Shared building blocks for the model zoo (pure JAX, functional).
+
+Parameters are plain nested dicts of jnp arrays; every block has an
+``init_*(key, cfg) -> params`` and an ``apply`` function.  Compute runs in the
+config dtype (bf16 by default) with fp32 softmax/norm accumulation; all
+activation tensors pass through logical sharding constraints (sharding.cs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import cs
+
+_INIT_STD = 0.02
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def dense_init(key, shape, dtype, fan_in: Optional[int] = None):
+    scale = _INIT_STD if fan_in is None else (1.0 / jnp.sqrt(fan_in))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def _rope_angles(positions, dim: int, theta: float):
+    """positions (..., S) -> cos/sin (..., S, dim//2), fp32."""
+    half = dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float):
+    """x (B, S, H, dh), positions (B, S) -> rotated x (interleaved halves)."""
+    dh = x.shape[-1]
+    cos, sin = _rope_angles(positions, dh, theta)  # (B, S, dh/2)
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions, theta: float, sections: Tuple[int, int, int]):
+    """Qwen2-VL multimodal RoPE.  positions (3, B, S) = (t, h, w) streams;
+    ``sections`` partitions the *half*-dim; each section rotates with its own
+    position stream."""
+    dh = x.shape[-1]
+    half = dh // 2
+    assert sum(sections) == half, (sections, half)
+    cos_parts, sin_parts = [], []
+    off = 0
+    for i, sec in enumerate(sections):
+        freqs = 1.0 / (theta ** (jnp.arange(off, off + sec, dtype=jnp.float32) / half))
+        ang = positions[i].astype(jnp.float32)[..., None] * freqs  # (B, S, sec)
+        cos_parts.append(jnp.cos(ang))
+        sin_parts.append(jnp.sin(ang))
+        off += sec
+    cos = jnp.concatenate(cos_parts, axis=-1)[:, :, None, :]
+    sin = jnp.concatenate(sin_parts, axis=-1)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional qk-norm / bias / M-RoPE; train + decode paths)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    dh = cfg.head_dim
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.n_heads * dh), dt, d),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads * dh), dt, d),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads * dh), dt, d),
+        "wo": dense_init(ks[3], (cfg.n_heads * dh, d), dt, cfg.n_heads * dh),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * dh,), dt)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * dh,), dt)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * dh,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dt)
+        p["k_norm"] = jnp.ones((dh,), dt)
+    return p
+
+
+def _split_heads(x, n, dh):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, dh)
+
+
+def _sdpa(q, k, v, causal: bool, q_offset=0, kv_len_mask=None):
+    """q (B,Sq,H,dh), k/v (B,Sk,KVH,dh) -> (B,Sq,H,dh).
+
+    Numerics (perf iteration #1, see EXPERIMENTS.md #Perf): the S x S score
+    and probability tensors dominate the HBM term of long-sequence cells, so
+    they are kept in bf16 with an fp32 row-max subtraction and an fp32
+    probability-sum accumulation (flash-attention numerics) -- stable, and
+    half the bytes of the fp32-softmax baseline.
+
+    ``q_offset``: absolute position of q[0] (decode).  ``kv_len_mask``:
+    (B, Sk) bool of valid cache slots (decode)."""
+    b, sq, h, dh = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, dh)
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k) * scale.astype(q.dtype)
+    neg = jnp.asarray(-jnp.inf, scores.dtype)
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(sk)
+        mask = kpos[None, :] <= qpos[:, None]  # (Sq, Sk)
+        scores = jnp.where(mask[None, None, None], scores, neg)
+    if kv_len_mask is not None:
+        scores = jnp.where(kv_len_mask[:, None, None, None, :], scores, neg)
+    # Iteration 1b: the WHOLE S x S chain stays in the compute dtype (bf16);
+    # only the rank-reduced row max / row sum run fp32.  (Iteration 1a cast
+    # to fp32 around exp and was measured byte-neutral -- see #Perf log.)
+    m = jnp.max(scores, axis=-1, keepdims=True).astype(jnp.float32)
+    m = jnp.maximum(m, -1e30)  # rows that are fully masked
+    p = jnp.exp(scores - m.astype(scores.dtype))  # (b,kvh,g,sq,sk) bf16
+    l = jnp.sum(p, axis=-1, dtype=jnp.float32)  # (b,kvh,g,sq) fp32 accum
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v)  # (b,sq,kvh,g,dh)
+    denom = jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]  # (b,sq,kvh,g,1)
+    out = out / denom.astype(out.dtype)
+    return out.reshape(b, sq, h, dh)
+
+
+def apply_attention(
+    p,
+    x,
+    positions,
+    cfg: ModelConfig,
+    causal: bool = True,
+    cache=None,
+    cache_pos=None,
+    cross_kv=None,
+):
+    """Returns (out, new_cache).
+
+    Train/prefill: cache=None, full-sequence causal attention.
+    Decode: cache = {'k','v'} (B, Smax, KVH, dh); cache_pos = scalar write idx.
+    Cross-attn: cross_kv = (k, v) precomputed from the encoder.
+    """
+    b, s, d = x.shape
+    dh = cfg.head_dim
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = _split_heads(q, cfg.n_heads, dh)
+    if cross_kv is None:
+        k = x @ p["wk"]
+        v = x @ p["wv"]
+        if "bk" in p:
+            k, v = k + p["bk"], v + p["bv"]
+        k = _split_heads(k, cfg.n_kv_heads, dh)
+        v = _split_heads(v, cfg.n_kv_heads, dh)
+    else:
+        k, v = cross_kv
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        if cross_kv is None:
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if positions is not None and cross_kv is None:
+        if cfg.mrope_sections is not None:
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    q = cs(q, "batch", "seq", "heads", None)
+
+    new_cache = None
+    if cache is not None and cross_kv is None:
+        # decode: write the new K/V at cache_pos, attend over valid slots.
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        smax = ck.shape[1]
+        valid = jnp.arange(smax)[None, :] <= cache_pos  # (1, Smax)
+        valid = jnp.broadcast_to(valid, (b, smax))
+        ck = cs(ck, "batch", "seq_kv", "kv_heads", None)
+        cv = cs(cv, "batch", "seq_kv", "kv_heads", None)
+        out = _sdpa(q, ck.astype(x.dtype), cv.astype(x.dtype), causal=False, kv_len_mask=valid)
+    else:
+        k = cs(k, "batch", "seq", "kv_heads", None)
+        v = cs(v, "batch", "seq", "kv_heads", None)
+        out = _sdpa(q, k, v, causal=causal)
+    out = out.reshape(b, s, cfg.n_heads * dh)
+    out = out @ p["wo"]
+    return cs(out, "batch", "seq", "dmodel"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU; plain GELU for whisper)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, f: int, dtype, gated: bool = True):
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(ks[0], (d, f), dtype, d),
+        "wo": dense_init(ks[1], (f, d), dtype, f),
+    }
+    if gated:
+        p["wg"] = dense_init(ks[2], (d, f), dtype, d)
+    return p
+
+
+def apply_mlp(p, x):
+    h = x @ p["wi"]
+    if "wg" in p:
+        h = jax.nn.silu(x @ p["wg"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = cs(h, "batch", "seq", "ff")
+    return cs(h @ p["wo"], "batch", "seq", "dmodel")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head / loss
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, cfg: ModelConfig):
+    dt = dtype_of(cfg)
+    p = {"embed": dense_init(key, (cfg.vocab_size, cfg.d_model), dt)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(
+            jax.random.fold_in(key, 1), (cfg.d_model, cfg.vocab_size), dt, cfg.d_model
+        )
+    return p
+
+
+def embed_tokens(p, tokens, cfg: ModelConfig):
+    x = jnp.take(p["embed"], tokens, axis=0)
+    return cs(x, "batch", "seq", "dmodel")
+
+
+def logits_from(p, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        out = x @ p["embed"].T
+    else:
+        out = x @ p["lm_head"]
+    return cs(out, "batch", "seq", "vocab")
+
+
+def softmax_cross_entropy(logits, labels, mask=None):
+    """Mean token CE.  logits (B,S,V) any dtype; labels (B,S) int.
+
+    Byte-diet numerics (perf iteration, EXPERIMENTS.md #Perf): the (B,S,V)
+    logits tensor dominates the HBM term of big-vocab training cells, so the
+    exp() intermediate stays in the logits dtype (bf16) and only the row max
+    and the probability sum run fp32 -- same stable-LSE value, half the
+    bytes of an fp32-upcast softmax."""
+    m = jnp.max(logits.astype(jnp.float32), axis=-1)
+    p = jnp.exp(logits - m[..., None].astype(logits.dtype))  # bf16 (B,S,V)
+    lse = jnp.log(jnp.sum(p, axis=-1, dtype=jnp.float32)) + m
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold.astype(jnp.float32)
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def remat_policy(cfg: ModelConfig):
+    if cfg.remat_policy == "none":
+        return None
+    if cfg.remat_policy == "minimal":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable

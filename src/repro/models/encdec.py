@@ -1,0 +1,193 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment the conv frontend is a STUB: the model consumes
+pre-computed frame embeddings (B, S_frames, d_model) directly (input_specs
+provides them).  Sinusoidal absolute positions, bidirectional encoder
+self-attention, causal decoder self-attention + cross-attention, GELU MLPs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (
+    apply_attention,
+    apply_mlp,
+    dtype_of,
+    embed_tokens,
+    init_attention,
+    init_embed,
+    init_mlp,
+    logits_from,
+    remat_policy,
+    rms_norm,
+    softmax_cross_entropy,
+)
+
+
+def _sinusoid(s: int, d: int, dtype):
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2.0 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def _init_enc_layer(key, cfg: ModelConfig):
+    dt = dtype_of(cfg)
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dt),
+        "attn": init_attention(k1, cfg),
+        "ln2": jnp.ones((cfg.d_model,), dt),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, dt, gated=False),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig):
+    dt = dtype_of(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dt),
+        "self_attn": init_attention(k1, cfg),
+        "ln_x": jnp.ones((cfg.d_model,), dt),
+        "cross_attn": init_attention(k2, cfg),
+        "ln2": jnp.ones((cfg.d_model,), dt),
+        "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, dt, gated=False),
+    }
+
+
+def init_params(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 3)
+    enc_keys = jax.random.split(ks[0], cfg.n_encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "tok": init_embed(ks[2], cfg),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "enc_norm": jnp.ones((cfg.d_model,), dtype_of(cfg)),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "final_norm": jnp.ones((cfg.d_model,), dtype_of(cfg)),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig):
+    b, s, d = frames.shape
+    x = frames.astype(dtype_of(cfg)) + _sinusoid(s, d, dtype_of(cfg))[None]
+    policy = remat_policy(cfg)
+
+    def body(carry, lp):
+        h = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        attn_out, _ = apply_attention(lp["attn"], h, None, cfg, causal=False)
+        x = carry + attn_out
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        return x + apply_mlp(lp["mlp"], h), None
+
+    if policy is not None:
+        body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"], unroll=True if cfg.unroll_layers else 1)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(lp, enc_out, cfg: ModelConfig):
+    b, s, _ = enc_out.shape
+    dh = cfg.head_dim
+    k = (enc_out @ lp["cross_attn"]["wk"]).reshape(b, s, cfg.n_kv_heads, dh)
+    v = (enc_out @ lp["cross_attn"]["wv"]).reshape(b, s, cfg.n_kv_heads, dh)
+    return k, v
+
+
+def _decoder(params, tokens, enc_out, cfg: ModelConfig):
+    b, s = tokens.shape
+    x = embed_tokens(params["tok"], tokens, cfg)
+    x = x + _sinusoid(s, cfg.d_model, x.dtype)[None]
+    policy = remat_policy(cfg)
+
+    def body(carry, lp):
+        h = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        attn_out, _ = apply_attention(lp["self_attn"], h, None, cfg, causal=True)
+        x = carry + attn_out
+        h = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+        ck, cv = _cross_kv(lp, enc_out, cfg)
+        cross_out, _ = apply_attention(lp["cross_attn"], h, None, cfg, causal=False, cross_kv=(ck, cv))
+        x = x + cross_out
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        return x + apply_mlp(lp["mlp"], h), None
+
+    if policy is not None:
+        body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"], unroll=True if cfg.unroll_layers else 1)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def train_loss(params, batch, cfg: ModelConfig):
+    enc_out = encode(params, batch["frames"], cfg)
+    hidden = _decoder(params, batch["tokens"], enc_out, cfg)
+    logits = logits_from(params["tok"], hidden, cfg)
+    return softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+def init_cache(cfg: ModelConfig, batch: int, smax: int, enc_len: int = 1500):
+    """Decoder self-attn KV cache + precomputed cross K/V (from prefill)."""
+    dt = dtype_of(cfg)
+    L, dh = cfg.n_layers, cfg.head_dim
+    return {
+        "k": jnp.zeros((L, batch, smax, cfg.n_kv_heads, dh), dt),
+        "v": jnp.zeros((L, batch, smax, cfg.n_kv_heads, dh), dt),
+        "cross_k": jnp.zeros((L, batch, enc_len, cfg.n_kv_heads, dh), dt),
+        "cross_v": jnp.zeros((L, batch, enc_len, cfg.n_kv_heads, dh), dt),
+    }
+
+
+def prefill(params, batch, cfg: ModelConfig, smax: int):
+    """Encoder pass -> cross K/V cache (+ empty self cache, BOS logits)."""
+    enc_out = encode(params, batch["frames"], cfg)
+    b = enc_out.shape[0]
+
+    def per_layer(lp):
+        return _cross_kv(lp, enc_out, cfg)
+
+    cross_k, cross_v = jax.vmap(per_layer)(params["dec_layers"])  # (L,B,S,KVH,dh)
+    cache = init_cache(cfg, b, smax, enc_len=enc_out.shape[1])
+    cache["cross_k"], cache["cross_v"] = cross_k, cross_v
+    bos = jnp.zeros((b, 1), jnp.int32)
+    logits, cache = decode_step(params, cache, bos, jnp.int32(0), cfg)
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    b = tokens.shape[0]
+    x = embed_tokens(params["tok"], tokens, cfg)
+    # position pos sinusoid
+    posv = jnp.asarray(pos, jnp.float32)
+    d = cfg.d_model
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = posv / jnp.power(10000.0, 2.0 * dim / d)
+    x = x + jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None].astype(x.dtype)
+
+    self_cache = {"k": cache["k"], "v": cache["v"]}
+
+    def body(carry, xs):
+        lp, lc, ck, cv = xs
+        h = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        attn_out, nc = apply_attention(
+            lp["self_attn"], h, None, cfg, causal=False, cache=lc, cache_pos=pos
+        )
+        x = carry + attn_out
+        h = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+        cross_out, _ = apply_attention(
+            lp["cross_attn"], h, None, cfg, causal=False, cross_kv=(ck.astype(h.dtype), cv.astype(h.dtype))
+        )
+        x = x + cross_out
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        return x + apply_mlp(lp["mlp"], h), nc
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec_layers"], self_cache, cache["cross_k"], cache["cross_v"]),
+        unroll=True if cfg.unroll_layers else 1,
+    )
+    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from(params["tok"], hidden, cfg)
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = new_self["k"], new_self["v"]
+    return logits, new_cache

@@ -1,0 +1,182 @@
+"""Zamba2-style hybrid: Mamba-2 backbone with a weight-SHARED attention block
+invoked after every ``attn_every`` SSM layers (the Zamba trick: one set of
+transformer weights amortized over the depth).
+
+Layer stacks are reshaped (groups, attn_every, ...) and run as a nested scan;
+the shared block's params are closed over, so XLA sees true weight reuse.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as ssm_mod
+from repro.models.common import (
+    apply_attention,
+    apply_mlp,
+    dtype_of,
+    embed_tokens,
+    init_attention,
+    init_embed,
+    init_mlp,
+    logits_from,
+    remat_policy,
+    rms_norm,
+    softmax_cross_entropy,
+)
+
+
+def _n_groups(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.attn_every == 0
+    return cfg.n_layers // cfg.attn_every
+
+
+def init_params(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 5)
+    dt = dtype_of(cfg)
+    keys = jax.random.split(ks[0], cfg.n_layers)
+    mamba = jax.vmap(lambda k: ssm_mod.init_mamba(k, cfg))(keys)
+    return {
+        "tok": init_embed(ks[1], cfg),
+        "mamba_layers": mamba,
+        "shared": {
+            "ln1": jnp.ones((cfg.d_model,), dt),
+            "attn": init_attention(ks[2], cfg),
+            "ln2": jnp.ones((cfg.d_model,), dt),
+            "mlp": init_mlp(ks[3], cfg.d_model, cfg.d_ff, dt),
+        },
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+
+
+def _reshape_groups(stack, g, per):
+    return jax.tree_util.tree_map(lambda v: v.reshape((g, per) + v.shape[1:]), stack)
+
+
+def _shared_block(sp, x, positions, cfg, cache=None, cache_pos=None):
+    h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+    attn_out, new_cache = apply_attention(
+        sp["attn"], h, positions, cfg,
+        causal=cache is None, cache=cache, cache_pos=cache_pos,
+    )
+    x = x + attn_out
+    h = rms_norm(x, sp["ln2"], cfg.norm_eps)
+    return x + apply_mlp(sp["mlp"], h), new_cache
+
+
+def train_loss(params, batch, cfg: ModelConfig):
+    tokens, labels = batch["tokens"], batch["labels"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = embed_tokens(params["tok"], tokens, cfg)
+    g = _n_groups(cfg)
+    stacks = _reshape_groups(params["mamba_layers"], g, cfg.attn_every)
+    policy = remat_policy(cfg)
+
+    def inner(carry, lp):
+        return ssm_mod.apply_mamba_train(lp, carry, cfg) + carry, None
+
+    def outer(carry, group_params):
+        x, _ = jax.lax.scan(inner, carry, group_params, unroll=True if cfg.unroll_layers else 1)
+        x, _ = _shared_block(params["shared"], x, positions, cfg)
+        return x, None
+
+    if policy is not None:
+        outer = jax.checkpoint(outer, policy=policy, prevent_cse=False)
+    x, _ = jax.lax.scan(outer, x, stacks, unroll=True if cfg.unroll_layers else 1)
+    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from(params["tok"], hidden, cfg)
+    return softmax_cross_entropy(logits, labels, batch.get("mask"))
+
+
+def prefill(params, batch, cfg: ModelConfig):
+    """Full-sequence prefill: SSD final states per mamba layer + shared-attn
+    K/V per group invocation; returns (last-position logits, cache)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = embed_tokens(params["tok"], tokens, cfg)
+    g = _n_groups(cfg)
+    stacks = _reshape_groups(params["mamba_layers"], g, cfg.attn_every)
+    sp = params["shared"]
+    dh = cfg.head_dim
+    from repro.models.common import apply_rope
+
+    def inner(carry, lp):
+        out, lcache = ssm_mod.apply_mamba_prefill(lp, carry, cfg)
+        return carry + out, lcache
+
+    def outer(carry, group_params):
+        x, mcache = jax.lax.scan(
+            inner, carry, group_params, unroll=True if cfg.unroll_layers else 1
+        )
+        # capture shared-attn K/V for this invocation
+        h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+        k = (h @ sp["attn"]["wk"]).reshape(b, s, cfg.n_kv_heads, dh)
+        v = (h @ sp["attn"]["wv"]).reshape(b, s, cfg.n_kv_heads, dh)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        x, _ = _shared_block(sp, x, positions, cfg)
+        return x, (mcache, {"k": k, "v": v})
+
+    x, (mcache, ac) = jax.lax.scan(
+        outer, x, stacks, unroll=True if cfg.unroll_layers else 1
+    )
+    cache = {
+        "mamba": jax.tree_util.tree_map(
+            lambda v: v.reshape((cfg.n_layers,) + v.shape[2:]), mcache
+        ),
+        "attn": ac,
+    }
+    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from(params["tok"], hidden[:, -1:], cfg)
+    return logits, cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, smax: int):
+    g = _n_groups(cfg)
+    dt = dtype_of(cfg)
+    dh = cfg.head_dim
+    mamba = jax.vmap(lambda _: ssm_mod.init_mamba_cache(cfg, batch, dt))(
+        jnp.arange(cfg.n_layers)
+    )
+    return {
+        "mamba": mamba,  # leaves (L, B, ...)
+        "attn": {
+            "k": jnp.zeros((g, batch, smax, cfg.n_kv_heads, dh), dt),
+            "v": jnp.zeros((g, batch, smax, cfg.n_kv_heads, dh), dt),
+        },
+    }
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    b = tokens.shape[0]
+    x = embed_tokens(params["tok"], tokens, cfg)
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    g = _n_groups(cfg)
+    per = cfg.attn_every
+    stacks = _reshape_groups(params["mamba_layers"], g, per)
+    mcache = _reshape_groups(cache["mamba"], g, per)
+
+    def inner(carry, xs):
+        lp, lc = xs
+        out, nc = ssm_mod.apply_mamba_decode(lp, carry, cfg, lc)
+        return out + carry, nc
+
+    def outer(carry, xs):
+        group_params, group_mcache, ac = xs
+        x, new_mcache = jax.lax.scan(inner, carry, (group_params, group_mcache), unroll=True if cfg.unroll_layers else 1)
+        x, new_ac = _shared_block(params["shared"], x, positions, cfg, cache=ac, cache_pos=pos)
+        return x, (new_mcache, new_ac)
+
+    x, (new_mcache, new_ac) = jax.lax.scan(outer, x, (stacks, mcache, cache["attn"]), unroll=True if cfg.unroll_layers else 1)
+    new_cache = {
+        "mamba": jax.tree_util.tree_map(
+            lambda v: v.reshape((cfg.n_layers,) + v.shape[2:]), new_mcache
+        ),
+        "attn": new_ac,
+    }
+    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from(params["tok"], hidden, cfg)
+    return logits, new_cache

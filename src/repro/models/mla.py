@@ -1,0 +1,104 @@
+"""Multi-head Latent Attention (DeepSeek-V3) with absorbed-matmul decoding.
+
+Train/prefill: decompress latents into full per-head K/V (standard GEMMs).
+Decode: the *compressed* latent c_kv (kv_lora_rank) + shared rope-key are the
+KV cache -- (kv_rank + rope_dim) floats/token instead of 2*H*dh -- and the
+up-projections are absorbed into the query/output transforms (the production
+MLA trick), so decode attention contracts against the latent directly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import apply_rope, dense_init, dtype_of, rms_norm
+from repro.models.sharding import cs
+
+
+def init_mla(key, cfg: ModelConfig):
+    d = cfg.d_model
+    dt = dtype_of(cfg)
+    h = cfg.n_heads
+    qk_nope, qk_rope, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "w_dq": dense_init(ks[0], (d, cfg.q_lora_rank), dt, d),
+        "q_norm_lr": jnp.ones((cfg.q_lora_rank,), dt),
+        "w_uq": dense_init(ks[1], (cfg.q_lora_rank, h * (qk_nope + qk_rope)), dt, cfg.q_lora_rank),
+        "w_dkv": dense_init(ks[2], (d, cfg.kv_lora_rank), dt, d),
+        "kv_norm_lr": jnp.ones((cfg.kv_lora_rank,), dt),
+        "w_kr": dense_init(ks[3], (d, qk_rope), dt, d),
+        "w_uk": dense_init(ks[4], (cfg.kv_lora_rank, h * qk_nope), dt, cfg.kv_lora_rank),
+        "w_uv": dense_init(ks[5], (cfg.kv_lora_rank, h * dv), dt, cfg.kv_lora_rank),
+        "wo": dense_init(ks[6], (h * dv, d), dt, h * dv),
+    }
+
+
+def _queries(p, x, positions, cfg: ModelConfig):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qk_nope, qk_rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = rms_norm(x @ p["w_dq"], p["q_norm_lr"], cfg.norm_eps)
+    q = (cq @ p["w_uq"]).reshape(b, s, h, qk_nope + qk_rope)
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def apply_mla_train(p, x, positions, cfg: ModelConfig):
+    """Full-sequence causal MLA (decompressed path)."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qk_nope, qk_rope, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _queries(p, x, positions, cfg)
+    ckv = rms_norm(x @ p["w_dkv"], p["kv_norm_lr"], cfg.norm_eps)  # (B,S,r)
+    k_nope = (ckv @ p["w_uk"]).reshape(b, s, h, qk_nope)
+    v = (ckv @ p["w_uv"]).reshape(b, s, h, dv)
+    k_rope = apply_rope((x @ p["w_kr"])[:, :, None, :], positions, cfg.rope_theta)
+    k_rope = jnp.broadcast_to(k_rope, (b, s, h, qk_rope))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kk = jnp.concatenate([k_nope, k_rope], axis=-1)
+    q = cs(q, "batch", "seq", "heads", None)
+    kk = cs(kk, "batch", "seq", "heads", None)
+    scale = 1.0 / jnp.sqrt(jnp.float32(qk_nope + qk_rope))
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, kk).astype(jnp.float32) * scale
+    mask = jnp.arange(s)[None, :] <= jnp.arange(s)[:, None]
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v).reshape(b, s, h * dv)
+    return cs(out @ p["wo"], "batch", "seq", "dmodel")
+
+
+def apply_mla_decode(p, x, positions, cfg: ModelConfig, cache, cache_pos):
+    """Absorbed decode: cache = {'ckv' (B,Smax,r), 'kr' (B,Smax,rope)}."""
+    b, s, _ = x.shape  # s == 1
+    h = cfg.n_heads
+    qk_nope, qk_rope, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    q_nope, q_rope = _queries(p, x, positions, cfg)
+
+    ckv_new = rms_norm(x @ p["w_dkv"], p["kv_norm_lr"], cfg.norm_eps)
+    kr_new = apply_rope((x @ p["w_kr"])[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, cache_pos, 0))
+    kr = jax.lax.dynamic_update_slice(cache["kr"], kr_new.astype(cache["kr"].dtype), (0, cache_pos, 0))
+    new_cache = {"ckv": ckv, "kr": kr}
+    ckv = cs(ckv, "batch", "seq_kv", None)
+    kr = cs(kr, "batch", "seq_kv", None)
+
+    # Absorb W_uk into q:  q_abs (B,1,H,r)
+    w_uk = p["w_uk"].reshape(r, h, qk_nope)
+    q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)
+    scores = (
+        jnp.einsum("bqhr,bsr->bhqs", q_abs, ckv.astype(x.dtype))
+        + jnp.einsum("bqhd,bsd->bhqs", q_rope, kr.astype(x.dtype))
+    ).astype(jnp.float32) / jnp.sqrt(jnp.float32(qk_nope + qk_rope))
+    smax = ckv.shape[1]
+    valid = jnp.arange(smax)[None, None, None, :] <= cache_pos
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", probs, ckv.astype(x.dtype))  # latent ctx
+    w_uv = p["w_uv"].reshape(r, h, dv)
+    out = jnp.einsum("bqhr,rhd->bqhd", ctx, w_uv).reshape(b, s, h * dv)
+    return cs(out @ p["wo"], "batch", "seq", "dmodel"), new_cache

@@ -1,0 +1,149 @@
+"""Unified model API: family dispatch + per-shape input specs.
+
+Every architecture exposes the same five entry points regardless of family:
+  init_params(cfg, key)           -- eval_shape-able (dry-run never allocates)
+  train_loss(params, batch, cfg)  -- scalar loss
+  prefill(params, batch, cfg)     -- (last logits, filled cache)
+  decode_step(params, cache, tokens, pos, cfg)
+  init_cache(cfg, batch, smax)
+
+`input_specs(cfg, shape)` produces ShapeDtypeStruct stand-ins for every input
+of the corresponding step -- the dry-run contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, ssm_lm, transformer
+from repro.models.common import dtype_of
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str  # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+_VIS_FRAC = 4  # vlm: 1/4 of the sequence budget is patch embeddings
+_AUDIO_TEXT_FRAC = 8  # audio: text tokens are 1/8 of the frame budget
+
+
+def _module(cfg: ModelConfig):
+    return {
+        "dense": transformer,
+        "moe": transformer,
+        "vlm": transformer,
+        "ssm": ssm_lm,
+        "hybrid": hybrid,
+        "audio": encdec,
+    }[cfg.family]
+
+
+def init_params(cfg: ModelConfig, key):
+    return _module(cfg).init_params(cfg, key)
+
+
+def train_loss(params, batch, cfg: ModelConfig):
+    return _module(cfg).train_loss(params, batch, cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, smax: int):
+    return _module(cfg).init_cache(cfg, batch, smax)
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    return _module(cfg).decode_step(params, cache, tokens, pos, cfg)
+
+
+def prefill(params, batch, cfg: ModelConfig, smax: int | None = None):
+    mod = _module(cfg)
+    if cfg.family == "audio":
+        return mod.prefill(params, batch, cfg, smax or batch["frames"].shape[1])
+    return mod.prefill(params, batch, cfg)
+
+
+def supports_cell(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    """Whether (arch x shape) is in contract; (ok, reason-if-not)."""
+    cell = SHAPES[shape]
+    if cell.name == "long_500k" and not cfg.subquadratic:
+        return False, "long_500k requires sub-quadratic attention (see DESIGN.md)"
+    if cell.kind == "decode" and not cfg.supports_decode:
+        return False, "architecture has no decode step"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> Dict[str, Any]:
+    """Returns the batch pytree (train/prefill) or decode inputs as specs."""
+    cell = SHAPES[shape]
+    b, s = cell.batch, cell.seq
+    dt = dtype_of(cfg)
+    if cell.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            sv = s // _VIS_FRAC
+            st = s - sv
+            specs = {
+                "tokens": _i32((b, st)),
+                "patches": jax.ShapeDtypeStruct((b, sv, cfg.d_model), dt),
+                "positions": _i32((3, b, s)),
+            }
+            if cell.kind == "train":
+                specs["labels"] = _i32((b, st))
+            return specs
+        if cfg.family == "audio":
+            st = max(64, s // _AUDIO_TEXT_FRAC)
+            specs = {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)}
+            if cell.kind == "train":
+                specs["tokens"] = _i32((b, st))
+                specs["labels"] = _i32((b, st))
+            return specs
+        specs = {"tokens": _i32((b, s))}
+        if cell.kind == "train":
+            specs["labels"] = _i32((b, s))
+        return specs
+    # decode
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+    return {
+        "tokens": _i32((b, 1)),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "cache": cache,
+    }
+
+
+def make_batch(cfg: ModelConfig, shape: str, key) -> Dict[str, Any]:
+    """Materializes a random batch matching input_specs (smoke tests/bench)."""
+    specs = input_specs(cfg, shape)
+
+    def fill(spec):
+        if spec.dtype == jnp.int32:
+            if spec.shape and spec.shape[0] == 3 and len(spec.shape) == 3:
+                return jnp.broadcast_to(
+                    jnp.arange(spec.shape[-1], dtype=jnp.int32), spec.shape
+                )
+            return jax.random.randint(key, spec.shape, 0, max(2, cfg.vocab_size), jnp.int32) % cfg.vocab_size
+        return jax.random.normal(key, spec.shape, jnp.float32).astype(spec.dtype) * 0.02
+
+    return jax.tree_util.tree_map(fill, specs)

@@ -1,0 +1,88 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch (EP over 'model').
+
+TPU-native dispatch (no per-token dynamic shapes): tokens are replicated k
+times, argsorted by assigned expert, ranked within their expert group, and
+scattered into an (E, C, D) buffer with capacity C = ceil(T*k/E * cf); the
+expert GEMMs are then three dense (E, C, *) einsums that shard cleanly with
+experts on the 'model' mesh axis.  Overflow tokens beyond capacity drop to a
+trash slot (standard capacity-factor semantics); their combine weight is
+simply lost, which upper-bounds the drop impact by the router entropy.
+
+Router: softmax over E, top-k, renormalized (Qwen3 style).  Optional shared
+experts (DeepSeek style) run as a plain dense MLP on every token.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import apply_mlp, dense_init, dtype_of, init_mlp
+from repro.models.sharding import cs
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32, d),
+        "experts": {
+            "wi": dense_init(ks[1], (e, d, f), dt, d),
+            "wg": dense_init(ks[2], (e, d, f), dt, d),
+            "wo": dense_init(ks[3], (e, f, d), dt, f),
+        },
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(
+            ks[4], d, cfg.n_shared_experts * (cfg.shared_d_ff or f), dt
+        )
+    return p
+
+
+def apply_moe(p, x, cfg: ModelConfig):
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.n_experts_per_tok
+    e = cfg.n_experts
+    cap = int((t * k) / e * cfg.capacity_factor + 1)
+
+    xt = x.reshape(t, d)
+    logits = (xt.astype(jnp.float32)) @ p["router"]  # (T, E) fp32 routing
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)  # (T, k)
+    topw = topw / jnp.maximum(jnp.sum(topw, axis=-1, keepdims=True), 1e-9)
+
+    flat_e = topi.reshape(-1)  # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    flat_w = topw.reshape(-1).astype(x.dtype)
+
+    order = jnp.argsort(flat_e)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    counts = jnp.bincount(se, length=e)  # (E,)
+    start = jnp.cumsum(counts) - counts
+    pos = jnp.arange(t * k) - start[se]
+    keep = pos < cap
+    dest = jnp.where(keep, se * cap + pos, e * cap)  # overflow -> trash slot
+
+    gathered = jnp.take(xt, st, axis=0)  # (T*k, D)
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[dest].set(gathered)
+    h = buf[: e * cap].reshape(e, cap, d)
+    h = cs(h, "experts", None, None)
+
+    wi, wg, wo = p["experts"]["wi"], p["experts"]["wg"], p["experts"]["wo"]
+    act = jnp.einsum("ecd,edf->ecf", h, wi) * jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", h, wg)
+    )
+    act = cs(act, "experts", None, None)
+    out = jnp.einsum("ecf,efd->ecd", act, wo)
+    out_buf = jnp.concatenate(
+        [out.reshape(e * cap, d), jnp.zeros((1, d), x.dtype)], axis=0
+    )
+    ys = jnp.take(out_buf, dest, axis=0) * sw[:, None]  # (T*k, D)
+    y = jnp.zeros((t, d), x.dtype).at[st].add(ys)
+
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], x).reshape(t, d)
+    return cs(y.reshape(b, s, d), "batch", "seq", "dmodel")

@@ -1,0 +1,202 @@
+"""Mamba-2 (SSD, state-space duality) blocks: chunked train scan + O(1) decode.
+
+Implements the minimal SSD algorithm of the Mamba-2 paper (chunkwise:
+intra-chunk quadratic term + inter-chunk state recurrence), with a single
+B/C group (ngroups=1) broadcast over heads, a short causal depthwise conv on
+(x|B|C), softplus dt with learned bias, and a gated RMSNorm before out_proj.
+
+Decode carries (conv_state (B, k-1, C_conv), ssm_state (B, H, P, N)) and does
+the exact single-step recurrence -- the sub-quadratic property that makes the
+long_500k serving shape tractable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, dtype_of, rms_norm
+from repro.models.sharding import cs
+
+
+def _conv_channels(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state  # x | B | C
+
+
+def init_mamba(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * di + 2 * n + h  # z | x | B | C | dt
+    return {
+        "in_proj": dense_init(ks[0], (d, proj_out), dt, d),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv_kernel, _conv_channels(cfg)), dt),
+        "conv_b": jnp.zeros((_conv_channels(cfg),), dt),
+        "a_log": jnp.zeros((h,), jnp.float32),  # A = -exp(a_log) in (-1, 0]
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "gate_norm": jnp.ones((di,), dt),
+        "out_proj": dense_init(ks[2], (di, d), dt, di),
+    }
+
+
+def _segsum(x):
+    """(..., l) -> (..., l, l) with out[i,j] = sum_{j<k<=i} x[k]; -inf above diag."""
+    l = x.shape[-1]
+    csum = jnp.cumsum(x, axis=-1)
+    seg = csum[..., :, None] - csum[..., None, :]
+    mask = jnp.arange(l)[:, None] >= jnp.arange(l)[None, :]
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _ssd_chunked(xh, dta, bm, cm, chunk: int):
+    """Chunked SSD scan.
+
+    xh  (B, T, H, P)   inputs (already dt-weighted)
+    dta (B, T, H)      dt * A  (negative)
+    bm  (B, T, N), cm (B, T, N)   single-group B/C
+    Returns y (B, T, H, P) and final state (B, H, P, N).
+    """
+    b, t, h, p = xh.shape
+    n = bm.shape[-1]
+    t0 = t
+    pad = (-t) % chunk
+    if pad:  # zero-dt padding is a no-op on the recurrence (exp(0)=1, dB x=0)
+        zf = lambda x: jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+        xh, dta, bm, cm = zf(xh), zf(dta), zf(bm), zf(cm)
+        t = t + pad
+    c = t // chunk
+    x_ = xh.reshape(b, c, chunk, h, p)
+    a_ = dta.reshape(b, c, chunk, h).transpose(0, 3, 1, 2)  # (B,H,C,L)
+    b_ = bm.reshape(b, c, chunk, n)
+    c__ = cm.reshape(b, c, chunk, n)
+
+    a_cum = jnp.cumsum(a_, axis=-1)  # (B,H,C,L)
+    # 1. intra-chunk (quadratic attention-like) term
+    ll = jnp.exp(_segsum(a_))  # (B,H,C,L,L)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", c__, b_, ll, x_)
+    # 2. per-chunk final states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)  # (B,H,C,L)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", b_, decay_states, x_)
+    # 3. inter-chunk recurrence over the C chunk axis
+    init = jnp.zeros_like(states[:, :1])
+    states = jnp.concatenate([init, states], axis=1)  # (B,C+1,H,P,N)
+    a_last = jnp.pad(a_cum[..., -1], ((0, 0), (0, 0), (1, 0)))  # (B,H,C+1)
+    decay_chunk = jnp.exp(_segsum(a_last))  # (B,H,C+1,C+1)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states)
+    states, final = new_states[:, :-1], new_states[:, -1]
+    # 4. state -> output contribution
+    out_decay = jnp.exp(a_cum)  # (B,H,C,L)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", c__, states, out_decay)
+    y = (y_diag + y_off).reshape(b, t, h, p)[:, :t0]
+    return y, final
+
+
+def _causal_conv(u, w, bias):
+    """Depthwise causal conv along time.  u (B,T,C), w (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(k):
+        out = out + pad[:, i : i + u.shape[1], :] * w[i]
+    return out + bias
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + di + 2 * n]
+    dt = zxbcdt[..., di + di + 2 * n :]
+    return z, xbc, dt
+
+
+def apply_mamba_train(p, x, cfg: ModelConfig):
+    b, t, d = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ph = cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs, bm, cm = xbc[..., :di], xbc[..., di : di + n], xbc[..., di + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    a = -jnp.exp(p["a_log"])  # (H,)
+    xh = xs.reshape(b, t, h, ph)
+    xh = cs(xh, "batch", "seq", "heads", None)
+    y, _ = _ssd_chunked(
+        (xh * dt[..., None]).astype(jnp.float32),
+        dt * a,
+        bm.astype(jnp.float32),
+        cm.astype(jnp.float32),
+        cfg.ssm_chunk,
+    )
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, t, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return cs(y @ p["out_proj"], "batch", "seq", "dmodel")
+
+
+def apply_mamba_prefill(p, x, cfg: ModelConfig):
+    """Train-path forward that ALSO returns the decode cache (conv window +
+    final SSD state) so serving can continue from position T."""
+    b, t, d = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ph = cfg.ssm_head_dim
+    k = cfg.ssm_conv_kernel
+    zxbcdt = x @ p["in_proj"]
+    z, xbc_pre, dt = _split_proj(zxbcdt, cfg)
+    conv_state = xbc_pre[:, -(k - 1) :, :]  # last K-1 pre-conv inputs
+    xbc = jax.nn.silu(_causal_conv(xbc_pre, p["conv_w"], p["conv_b"]))
+    xs, bm, cm = xbc[..., :di], xbc[..., di : di + n], xbc[..., di + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    xh = xs.reshape(b, t, h, ph)
+    y, final_state = _ssd_chunked(
+        (xh * dt[..., None]).astype(jnp.float32),
+        dt * a,
+        bm.astype(jnp.float32),
+        cm.astype(jnp.float32),
+        cfg.ssm_chunk,
+    )
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, t, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = cs(y @ p["out_proj"], "batch", "seq", "dmodel")
+    return out, {"conv": conv_state, "ssm": final_state}
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_kernel - 1, _conv_channels(cfg)), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+    }
+
+
+def apply_mamba_decode(p, x, cfg: ModelConfig, cache):
+    """x (B, 1, D); exact one-step recurrence.  Returns (y, new_cache)."""
+    b, _, d = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ph = cfg.ssm_head_dim
+    zxbcdt = x[:, 0] @ p["in_proj"]  # (B, proj)
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    window = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:]
+    xs, bm, cm = xbc[..., :di], xbc[..., di : di + n], xbc[..., di + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt * a)  # (B,H)
+    xh = xs.reshape(b, h, ph).astype(jnp.float32)
+    ssm = cache["ssm"] * da[:, :, None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", xh, bm.astype(jnp.float32), dt
+    )
+    y = jnp.einsum("bhpn,bn->bhp", ssm, cm.astype(jnp.float32))
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(b, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"conv": new_conv, "ssm": ssm}

@@ -1,0 +1,83 @@
+"""Pure Mamba-2 language model (attention-free; SSD blocks only)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as ssm_mod
+from repro.models.common import (
+    dtype_of,
+    embed_tokens,
+    init_embed,
+    logits_from,
+    remat_policy,
+    rms_norm,
+    softmax_cross_entropy,
+)
+
+
+def init_params(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 2)
+    keys = jax.random.split(ks[0], cfg.n_layers)
+    return {
+        "tok": init_embed(ks[1], cfg),
+        "layers": jax.vmap(lambda k: ssm_mod.init_mamba(k, cfg))(keys),
+        "final_norm": jnp.ones((cfg.d_model,), dtype_of(cfg)),
+    }
+
+
+def train_loss(params, batch, cfg: ModelConfig):
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = embed_tokens(params["tok"], tokens, cfg)
+    policy = remat_policy(cfg)
+
+    def body(carry, lp):
+        return carry + ssm_mod.apply_mamba_train(lp, carry, cfg), None
+
+    if policy is not None:
+        body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"], unroll=True if cfg.unroll_layers else 1)
+    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from(params["tok"], hidden, cfg)
+    return softmax_cross_entropy(logits, labels, batch.get("mask"))
+
+
+def prefill(params, batch, cfg: ModelConfig):
+    """Full-sequence prefill: (last-position logits, per-layer state cache)."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params["tok"], tokens, cfg)
+
+    def body(carry, lp):
+        out, lcache = ssm_mod.apply_mamba_prefill(lp, carry, cfg)
+        return carry + out, lcache
+
+    x, cache = jax.lax.scan(
+        body, x, params["layers"], unroll=True if cfg.unroll_layers else 1
+    )
+    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from(params["tok"], hidden[:, -1:], cfg)
+    return logits, cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, smax: int):
+    del smax  # state size is O(1) in sequence length -- the point of SSMs
+    return jax.vmap(lambda _: ssm_mod.init_mamba_cache(cfg, batch, dtype_of(cfg)))(
+        jnp.arange(cfg.n_layers)
+    )
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    del pos  # state carries all history
+    x = embed_tokens(params["tok"], tokens, cfg)
+
+    def body(carry, xs):
+        lp, lc = xs
+        out, nc = ssm_mod.apply_mamba_decode(lp, carry, cfg, lc)
+        return carry + out, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache), unroll=True if cfg.unroll_layers else 1)
+    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from(params["tok"], hidden, cfg)
+    return logits, new_cache

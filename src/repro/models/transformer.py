@@ -1,0 +1,298 @@
+"""Decoder-only transformer family: dense GQA, MoE, MLA (+MTP), and the
+VLM backbone (M-RoPE with patch-embedding inputs).
+
+Layers are *stacked* (leading L axis) and executed with jax.lax.scan +
+configurable rematerialization -- the production pattern that keeps HLO size
+and compile time independent of depth.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models.common import (
+    apply_attention,
+    apply_mlp,
+    dense_init,
+    dtype_of,
+    embed_tokens,
+    init_attention,
+    init_embed,
+    init_mlp,
+    logits_from,
+    remat_policy,
+    rms_norm,
+    softmax_cross_entropy,
+)
+from repro.models.sharding import cs
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ModelConfig, moe: bool):
+    dt = dtype_of(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), dt),
+        "ln2": jnp.ones((cfg.d_model,), dt),
+    }
+    p["attn"] = mla_mod.init_mla(k1, cfg) if cfg.use_mla else init_attention(k1, cfg)
+    if moe:
+        p["ffn"] = moe_mod.init_moe(k2, cfg)
+    else:
+        p["ffn"] = init_mlp(k2, cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {
+        "tok": init_embed(ks[0], cfg),
+        "final_norm": jnp.ones((cfg.d_model,), dtype_of(cfg)),
+    }
+    n_dense = cfg.first_dense_layers if cfg.is_moe else 0
+    n_main = cfg.n_layers - n_dense
+    if n_dense:
+        keys = jax.random.split(ks[1], n_dense)
+        p["layers_dense"] = jax.vmap(lambda k: _init_layer(k, cfg, moe=False))(keys)
+    keys = jax.random.split(ks[2], n_main)
+    p["layers"] = jax.vmap(lambda k: _init_layer(k, cfg, moe=cfg.is_moe))(keys)
+    if cfg.mtp:
+        km1, km2 = jax.random.split(ks[3])
+        p["mtp"] = {
+            "proj": dense_init(km1, (2 * cfg.d_model, cfg.d_model), dtype_of(cfg), 2 * cfg.d_model),
+            "norm": jnp.ones((cfg.d_model,), dtype_of(cfg)),
+            "layer": _init_layer(km2, cfg, moe=False),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _layer_fwd(lp, x, positions, cfg: ModelConfig, moe: bool):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        attn_out = mla_mod.apply_mla_train(lp["attn"], h, positions, cfg)
+    else:
+        attn_out, _ = apply_attention(lp["attn"], h, positions, cfg, causal=True)
+    x = x + attn_out
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if moe:
+        x = x + moe_mod.apply_moe(lp["ffn"], h, cfg)
+    else:
+        x = x + apply_mlp(lp["ffn"], h)
+    return x
+
+
+def _scan_stack(stack, x, positions, cfg: ModelConfig, moe: bool):
+    policy = remat_policy(cfg)
+
+    def body(carry, lp):
+        return _layer_fwd(lp, carry, positions, cfg, moe), None
+
+    if policy is not None:
+        body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, stack, unroll=True if cfg.unroll_layers else 1)
+    return x
+
+
+def forward_hidden(params, x, positions, cfg: ModelConfig):
+    if "layers_dense" in params:
+        x = _scan_stack(params["layers_dense"], x, positions, cfg, moe=False)
+    x = _scan_stack(params["layers"], x, positions, cfg, moe=cfg.is_moe)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def train_loss(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]  # (B, S)
+    labels = batch["labels"]  # (B, S)
+    b, s = tokens.shape
+    x = embed_tokens(params["tok"], tokens, cfg)
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(x.dtype)  # (B, Sv, D)
+        x = jnp.concatenate([patches, x], axis=1)
+        positions = batch["positions"]  # (3, B, Sv+S) M-RoPE streams
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    hidden = forward_hidden(params, x, positions, cfg)
+    if cfg.family == "vlm":
+        hidden = hidden[:, -s:]  # loss on the text positions only
+    logits = logits_from(params["tok"], hidden, cfg)
+    loss = softmax_cross_entropy(logits, labels, batch.get("mask"))
+    if cfg.mtp:
+        loss = loss + 0.3 * _mtp_loss(params, hidden, tokens, labels, positions, cfg)
+    return loss
+
+
+def _mtp_loss(params, hidden, tokens, labels, positions, cfg: ModelConfig):
+    """DeepSeek-V3 multi-token prediction: at position t, combine h_t with
+    emb(token_{t+1}) and predict token_{t+2} through one extra layer."""
+    mp = params["mtp"]
+    emb_next = embed_tokens(params["tok"], tokens, cfg)[:, 1:]  # emb(t+1 .. )
+    h = hidden[:, :-1]
+    x = jnp.concatenate([rms_norm(h, mp["norm"], cfg.norm_eps), emb_next], axis=-1)
+    x = x @ mp["proj"]
+    pos = positions[..., :-1] if positions.ndim == 2 else positions[..., :-1]
+    x = _layer_fwd(mp["layer"], x, pos, cfg, moe=False)
+    logits = logits_from(params["tok"], x, cfg)
+    return softmax_cross_entropy(logits, labels[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, smax: int):
+    dt = dtype_of(cfg)
+    L = cfg.n_layers
+    if cfg.use_mla:
+        return {
+            "ckv": jnp.zeros((L, batch, smax, cfg.kv_lora_rank), dt),
+            "kr": jnp.zeros((L, batch, smax, cfg.qk_rope_head_dim), dt),
+        }
+    dh = cfg.head_dim
+    return {
+        "k": jnp.zeros((L, batch, smax, cfg.n_kv_heads, dh), dt),
+        "v": jnp.zeros((L, batch, smax, cfg.n_kv_heads, dh), dt),
+    }
+
+
+def _layer_decode(lp, x, positions, cfg: ModelConfig, layer_cache, pos, moe: bool):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        attn_out, new_cache = mla_mod.apply_mla_decode(lp["attn"], h, positions, cfg, layer_cache, pos)
+    else:
+        attn_out, new_cache = apply_attention(
+            lp["attn"], h, positions, cfg, causal=False, cache=layer_cache, cache_pos=pos
+        )
+    x = x + attn_out
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if moe:
+        x = x + moe_mod.apply_moe(lp["ffn"], h, cfg)
+    else:
+        x = x + apply_mlp(lp["ffn"], h)
+    return x, new_cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    """One-token decode.  tokens (B, 1); pos scalar int32 (next write slot).
+
+    Returns (logits (B, 1, V), new_cache)."""
+    b = tokens.shape[0]
+    x = embed_tokens(params["tok"], tokens, cfg)
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(pos[None, None, None], (3, b, 1)).astype(jnp.int32)
+    else:
+        positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+
+    n_dense = cfg.first_dense_layers if cfg.is_moe else 0
+
+    def split_cache(c, lo, hi):
+        return jax.tree_util.tree_map(lambda v: v[lo:hi], c)
+
+    new_caches = []
+    offset = 0
+    for name, moe in (("layers_dense", False), ("layers", cfg.is_moe)):
+        if name not in params:
+            continue
+        stack = params[name]
+        n = jax.tree_util.tree_leaves(stack)[0].shape[0]
+        sub_cache = split_cache(cache, offset, offset + n)
+
+        def body(carry, xs, moe=moe):
+            lp, lc = xs
+            out, nc = _layer_decode(lp, carry, positions, cfg, lc, pos, moe)
+            return out, nc
+
+        x, nc = jax.lax.scan(body, x, (stack, sub_cache), unroll=True if cfg.unroll_layers else 1)
+        new_caches.append(nc)
+        offset += n
+    new_cache = jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs, 0), *new_caches) if len(new_caches) > 1 else new_caches[0]
+    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from(params["tok"], hidden, cfg)
+    return logits, new_cache
+
+
+def prefill(params, batch, cfg: ModelConfig):
+    """Full-sequence prefill: returns (last-position logits, filled cache).
+
+    The cache is rebuilt from the per-layer K/V projections of the forward
+    pass (recomputed outside the scan to keep the train path untouched)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed_tokens(params["tok"], tokens, cfg)
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(x.dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+        positions = batch["positions"]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    # Capture K/V during the scan by extending the body to emit them.
+    def capture_stack(stack, x, moe):
+        policy = remat_policy(cfg)
+
+        def body(carry, lp):
+            h = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+            if cfg.use_mla:
+                ckv = rms_norm(h @ lp["attn"]["w_dkv"], lp["attn"]["kv_norm_lr"], cfg.norm_eps)
+                from repro.models.common import apply_rope
+
+                kr = apply_rope((h @ lp["attn"]["w_kr"])[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+                kv = {"ckv": ckv, "kr": kr}
+                attn_out = mla_mod.apply_mla_train(lp["attn"], h, positions, cfg)
+            else:
+                k = (h @ lp["attn"]["wk"]) + lp["attn"].get("bk", 0.0)
+                v = (h @ lp["attn"]["wv"]) + lp["attn"].get("bv", 0.0)
+                dh = cfg.head_dim
+                k = k.reshape(b, x.shape[1], cfg.n_kv_heads, dh)
+                v = v.reshape(b, x.shape[1], cfg.n_kv_heads, dh)
+                if "k_norm" in lp["attn"]:
+                    k = rms_norm(k, lp["attn"]["k_norm"], cfg.norm_eps)
+                from repro.models.common import apply_mrope, apply_rope
+
+                if cfg.mrope_sections is not None:
+                    k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+                else:
+                    k = apply_rope(k, positions, cfg.rope_theta)
+                kv = {"k": k, "v": v}
+                attn_out, _ = apply_attention(lp["attn"], h, positions, cfg, causal=True)
+            xo = carry + attn_out
+            h2 = rms_norm(xo, lp["ln2"], cfg.norm_eps)
+            if moe:
+                xo = xo + moe_mod.apply_moe(lp["ffn"], h2, cfg)
+            else:
+                xo = xo + apply_mlp(lp["ffn"], h2)
+            return xo, kv
+
+        if policy is not None:
+            body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+        return jax.lax.scan(body, x, stack, unroll=True if cfg.unroll_layers else 1)
+
+    caches = []
+    if "layers_dense" in params:
+        x, kv = capture_stack(params["layers_dense"], x, moe=False)
+        caches.append(kv)
+    x, kv = capture_stack(params["layers"], x, moe=cfg.is_moe)
+    caches.append(kv)
+    cache = (
+        jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs, 0), *caches)
+        if len(caches) > 1
+        else caches[0]
+    )
+    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from(params["tok"], hidden[:, -1:], cfg)
+    return logits, cache

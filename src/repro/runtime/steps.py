@@ -1,0 +1,530 @@
+"""Train / serve step builders: where model, optimizer, FedQCS, and the mesh
+meet.
+
+train step (FedQCS enabled) = shard_map with ONE manual axis ('pod'):
+  - fwd/bwd auto-partitions over (data, model) inside each pod (ICI traffic);
+  - the only cross-pod (DCN) communication is the FedQCS payload exchange in
+    runtime/collectives.py;
+  - every pod runs the (deterministic) reconstruction + optimizer redundantly,
+    so parameters stay bit-identical across pods without a broadcast.
+
+train step (baseline, FedQCS disabled) = plain jit; XLA inserts the full
+uncompressed gradient all-reduce across ('pod','data') -- this is the
+reference point the roofline section compares against.
+
+serve steps (prefill / decode) are plain jit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.compression import (
+    BQCSCodec,
+    FedQCSConfig,
+    blocks_to_tree,
+    flatten_to_blocks,
+    flatten_to_blocks_batched,
+)
+from repro.models import model as model_api
+from repro.models.sharding import ShardingRules, cs, param_specs, use_rules
+from repro.optim import adam
+from repro.runtime.collectives import fedqcs_pod_allreduce, fedqcs_vmapped_allreduce
+
+_ROW_MULTIPLE = 512  # pad FedQCS block rows so (data, model) sharding is even
+
+
+class _with_mesh:
+    """Wraps a jitted callable so every call (and .lower) traces under the
+    mesh context that PartitionSpec sharding constraints require."""
+
+    def __init__(self, mesh, fn):
+        self._mesh = mesh
+        self._fn = fn
+
+    def __call__(self, *args, **kwargs):
+        with jax.set_mesh(self._mesh):
+            return self._fn(*args, **kwargs)
+
+    def lower(self, *args, **kwargs):
+        with jax.set_mesh(self._mesh):
+            return self._fn.lower(*args, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# state
+# ---------------------------------------------------------------------------
+
+
+def make_rules(mesh) -> ShardingRules:
+    return ShardingRules(axis_sizes={k: v for k, v in mesh.shape.items()})
+
+
+def abstract_params(cfg: ModelConfig, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: model_api.init_params(cfg, k), key)
+
+
+def _axis_factor(spec, mesh) -> int:
+    f = 1
+    for entry in spec:
+        if entry is None:
+            continue
+        for a in entry if isinstance(entry, tuple) else (entry,):
+            f *= mesh.shape.get(a, 1)
+    return f
+
+
+def shard_block_geometry(cfg: ModelConfig, fed_cfg: FedQCSConfig, mesh):
+    """Per-device FedQCS blocking (impl='auto_sharded'): returns
+    (nb_local, nbar_local, local_shapes, specs) for the gradient tree."""
+    params = abstract_params(cfg)
+    specs = jax.tree_util.tree_map(
+        lambda s, p: sanitize_spec(s, p.shape, mesh),
+        param_specs(params, axis_sizes=dict(mesh.shape)),
+        params,
+    )
+    leaves = jax.tree_util.tree_leaves(params)
+    spec_leaves = jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    local_shapes, total = [], 0
+    for leaf, spec in zip(leaves, spec_leaves):
+        shape = list(leaf.shape)
+        for i, entry in enumerate(spec):
+            if entry is None:
+                continue
+            size = 1
+            for a in entry if isinstance(entry, tuple) else (entry,):
+                size *= mesh.shape.get(a, 1)
+            shape[i] //= size
+        local_shapes.append(tuple(shape))
+        total += int(np_prod(shape))
+    n = fed_cfg.block_size
+    nb_local = -(-total // n)
+    return nb_local, total, local_shapes, specs
+
+
+def np_prod(shape):
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def init_train_state(
+    cfg: ModelConfig,
+    opt_cfg: adam.OptConfig,
+    fed_cfg: Optional[FedQCSConfig],
+    key,
+    n_pods: int = 1,
+    abstract: bool = False,
+    mesh=None,
+    impl: str = "auto",
+):
+    """Builds (or eval_shapes) the full train state pytree.
+
+    impl='auto_sharded' (needs mesh): the error-feedback residual is blocked
+    per device shard -- global shape (pods, nb_local * n_devices_per_pod, N)."""
+
+    def build(k):
+        params = model_api.init_params(cfg, k)
+        state = {
+            "params": params,
+            "opt": adam.init_state(opt_cfg, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+        if fed_cfg is not None:
+            if impl == "auto_sharded":
+                assert mesh is not None, "auto_sharded needs the mesh"
+                nb_local, _, _, _ = shard_block_geometry(cfg, fed_cfg, mesh)
+                dm = mesh.shape.get("data", 1) * mesh.shape.get("model", 1)
+                state["residual"] = jnp.zeros(
+                    (n_pods, nb_local * dm, fed_cfg.block_size), jnp.float32
+                )
+            else:
+                blocks, _, _ = flatten_to_blocks(
+                    params, fed_cfg.block_size, row_multiple=_ROW_MULTIPLE
+                )
+                state["residual"] = jnp.zeros((n_pods,) + blocks.shape, jnp.float32)
+            state["participating"] = jnp.ones((n_pods,), jnp.float32)
+        return state
+
+    if abstract:
+        return jax.eval_shape(build, key)
+    return build(key)
+
+
+def sanitize_spec(spec: P, shape, mesh) -> P:
+    """Drops PartitionSpec axes whose mesh-size doesn't divide the dim (e.g.
+    vocab 50280 on a 16-way axis) -- clean layouts over padded shards."""
+    axes = []
+    for i, a in enumerate(spec):
+        if a is None:
+            axes.append(None)
+            continue
+        size = 1
+        for ax in (a if isinstance(a, tuple) else (a,)):
+            size *= mesh.shape.get(ax, 1)
+        axes.append(a if (i < len(shape) and shape[i] % size == 0) else None)
+    axes += [None] * (len(shape) - len(axes))
+    return P(*axes)
+
+
+def sane_param_shardings(params, mesh):
+    """NamedSharding pytree for a parameter pytree, divisibility-checked."""
+    specs = param_specs(params, axis_sizes=dict(mesh.shape))
+    return jax.tree_util.tree_map(
+        lambda s, p: NamedSharding(mesh, sanitize_spec(s, p.shape, mesh)), specs, params
+    )
+
+
+def train_state_shardings(state, mesh, fed: bool):
+    """NamedSharding pytree for the train state (params by name rules; opt
+    moments follow their parameter; FedQCS residual over pod x (data,model))."""
+    pspecs = jax.tree_util.tree_map(
+        lambda s, p: sanitize_spec(s, p.shape, mesh),
+        param_specs(state["params"], axis_sizes=dict(mesh.shape)),
+        state["params"],
+    )
+    ns = lambda spec: NamedSharding(mesh, spec)
+    shardings = {
+        "params": jax.tree_util.tree_map(lambda s: ns(s), pspecs),
+        "step": ns(P()),
+    }
+
+    def opt_leaf(spec):
+        return adam.QLeaf(q=ns(spec), scale=ns(P()))
+
+    def map_opt(tree):
+        flat_specs = jax.tree_util.tree_leaves(pspecs)
+        flat, treedef = jax.tree_util.tree_flatten(
+            tree, is_leaf=lambda x: isinstance(x, adam.QLeaf)
+        )
+        out = [
+            opt_leaf(s) if isinstance(l, adam.QLeaf) else ns(s)
+            for l, s in zip(flat, flat_specs)
+        ]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    shardings["opt"] = {k: map_opt(v) for k, v in state["opt"].items()}
+    if fed:
+        shardings["residual"] = ns(P("pod", ("data", "model"), None))
+        shardings["participating"] = ns(P())
+    return shardings
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+
+def _batch_pod_in_specs(batch):
+    """shard_map in_specs: split the batch dim across pods (positions carry
+    the batch dim second)."""
+
+    def spec_for(path, leaf):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        if "positions" in name:
+            return P(None, "pod")
+        return P("pod")
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: adam.OptConfig,
+    fed_cfg: Optional[FedQCSConfig],
+    mesh,
+    donate: bool = True,
+    impl: str = "auto",  # "auto" (vmap over pods) | "shard_map" (manual pod)
+):
+    """Returns step_fn(state, batch) -> (state, metrics), jitted on ``mesh``.
+
+    impl="auto" expresses the per-pod structure with vmap and lets XLA place
+    the cross-pod all-reduce of Bussgang-dequantized codes (psum_dequant
+    wire); impl="shard_map" uses a manual 'pod' axis with an explicit
+    all_gather of bit-packed codes (true Q/R-bit wire).  The shard_map
+    variant trips an XLA GSPMD CHECK-failure on large meshes (upstream bug,
+    see EXPERIMENTS.md #Dry-run), so "auto" is the default.
+    """
+    rules = make_rules(mesh)
+    codec = BQCSCodec(fed_cfg) if fed_cfg is not None else None
+
+    def loss_fn(params, batch):
+        return model_api.train_loss(params, batch, cfg)
+
+    if codec is None:
+        # Baseline: plain jit; XLA all-reduces grads over ('pod','data').
+        def step_fn(state, batch):
+            with use_rules(rules):
+                loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+                new_params, new_opt = adam.update(
+                    opt_cfg, grads, state["opt"], state["params"], state["step"]
+                )
+            new_state = {
+                "params": new_params,
+                "opt": new_opt,
+                "step": state["step"] + 1,
+            }
+            return new_state, {"loss": loss}
+
+        return _with_mesh(mesh, jax.jit(step_fn, donate_argnums=(0,) if donate else ()))
+
+    n = fed_cfg.block_size
+
+    def to_pods(path, leaf, pods):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        if "positions" in name:  # (3, B, S) -> (pods, 3, B/p, S)
+            r = leaf.reshape(leaf.shape[0], pods, -1, *leaf.shape[2:])
+            return jnp.moveaxis(r, 1, 0)
+        return leaf.reshape((pods, -1) + leaf.shape[1:])
+
+    if impl == "auto_sharded":
+        from repro.runtime.collectives import make_sharded_allreduce
+
+        nb_local, nbar_local, local_shapes, pspecs = shard_block_geometry(
+            cfg, fed_cfg, mesh
+        )
+        spec_leaves = jax.tree_util.tree_leaves(
+            pspecs, is_leaf=lambda x: isinstance(x, P)
+        )
+        body = make_sharded_allreduce(codec, mesh, local_shapes, nbar_local)
+        res_spec = P(None, ("data", "model"), None)
+        grad_in_specs = tuple(P(None, *s) for s in spec_leaves)
+        smap = jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(res_spec, P(), *grad_in_specs),
+            out_specs=(res_spec, *spec_leaves),
+            axis_names={"data", "model"},
+            check_vma=False,
+        )
+
+        def step_fn(state, batch):
+            pods = state["residual"].shape[0]
+            pb = jax.tree_util.tree_map_with_path(
+                lambda p, l: to_pods(p, l, pods), batch
+            )
+            with use_rules(rules):
+                losses, grads_pp = jax.vmap(
+                    jax.value_and_grad(loss_fn), in_axes=(None, 0)
+                )(state["params"], pb)
+                part = state["participating"]
+                rhos = part / jnp.maximum(jnp.sum(part), 1.0)
+                grad_leaves = jax.tree_util.tree_leaves(grads_pp)
+                # Perf iteration 3d (measured NEUTRAL -- kept as layout
+                # documentation): pinning per-pod grads to P('pod', *spec)
+                # did not move the remaining pod-spanning backward reduce;
+                # analysis suggests XLA merges that reduction across pods
+                # deliberately because the post-exchange state is provably
+                # pod-identical (it de-duplicates our redundant per-pod
+                # reconstruction work).  See EXPERIMENTS.md #Perf.
+                grad_leaves = [
+                    jax.lax.with_sharding_constraint(g, P("pod", *s))
+                    for g, s in zip(grad_leaves, spec_leaves)
+                ]
+                new_residual, *ghat_leaves = smap(
+                    state["residual"], rhos, *grad_leaves
+                )
+                treedef = jax.tree_util.tree_structure(state["params"])
+                grads = jax.tree_util.tree_unflatten(treedef, ghat_leaves)
+                new_params, new_opt = adam.update(
+                    opt_cfg, grads, state["opt"], state["params"], state["step"]
+                )
+            new_state = {
+                "params": new_params,
+                "opt": new_opt,
+                "step": state["step"] + 1,
+                "residual": new_residual,
+                "participating": state["participating"],
+            }
+            return new_state, {"loss": jnp.mean(losses)}
+
+        return _with_mesh(mesh, jax.jit(step_fn, donate_argnums=(0,) if donate else ()))
+
+    if impl == "auto":
+
+        def step_fn(state, batch):
+            pods = state["residual"].shape[0]
+            pb = jax.tree_util.tree_map_with_path(
+                lambda p, l: to_pods(p, l, pods), batch
+            )
+            with use_rules(rules):
+                losses, grads_pp = jax.vmap(
+                    jax.value_and_grad(loss_fn), in_axes=(None, 0)
+                )(state["params"], pb)
+                blocks_pp, spec, nbar = flatten_to_blocks_batched(
+                    grads_pp, n, row_multiple=_ROW_MULTIPLE
+                )
+                ghat, new_residual = fedqcs_vmapped_allreduce(
+                    blocks_pp, state["residual"], codec, state["participating"]
+                )
+                grads = blocks_to_tree(ghat, spec, nbar)
+                new_params, new_opt = adam.update(
+                    opt_cfg, grads, state["opt"], state["params"], state["step"]
+                )
+            new_state = {
+                "params": new_params,
+                "opt": new_opt,
+                "step": state["step"] + 1,
+                "residual": new_residual,
+                "participating": state["participating"],
+            }
+            return new_state, {"loss": jnp.mean(losses)}
+
+        return _with_mesh(mesh, jax.jit(step_fn, donate_argnums=(0,) if donate else ()))
+
+    def pod_body(params, opt, step, residual, participating, batch):
+        residual = residual[0]  # (1, nb, N) -> (nb, N) pod-local view
+        participating = participating[0]
+        with use_rules(rules):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            blocks, spec, nbar = flatten_to_blocks(grads, n, row_multiple=_ROW_MULTIPLE)
+            blocks = cs(blocks, "blocks", None)
+            ghat, new_residual = fedqcs_pod_allreduce(
+                blocks, residual, codec, axis_name="pod", participating=participating
+            )
+            grads = blocks_to_tree(ghat, spec, nbar)
+            new_params, new_opt = adam.update(opt_cfg, grads, opt, params, step)
+        loss_mean = jax.lax.pmean(loss, "pod")
+        return new_params, new_opt, new_residual[None], loss_mean
+
+    def step_fn(state, batch):
+        smap = jax.shard_map(
+            pod_body,
+            mesh=mesh,
+            in_specs=(P(), P(), P(), P("pod"), P("pod"), _batch_pod_in_specs(batch)),
+            out_specs=(P(), P(), P("pod"), P()),
+            axis_names={"pod"},
+            check_vma=False,
+        )
+        new_params, new_opt, new_residual, loss = smap(
+            state["params"],
+            state["opt"],
+            state["step"],
+            state["residual"],
+            state["participating"],
+            batch,
+        )
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "step": state["step"] + 1,
+            "residual": new_residual,
+            "participating": state["participating"],
+        }
+        return new_state, {"loss": loss}
+
+    return _with_mesh(mesh, jax.jit(step_fn, donate_argnums=(0,) if donate else ()))
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, mesh):
+    rules = make_rules(mesh)
+
+    def prefill_fn(params, batch):
+        with use_rules(rules):
+            smax = None
+            if cfg.family == "audio":
+                smax = batch["frames"].shape[1]
+            return model_api.prefill(params, batch, cfg, smax)
+
+    return _with_mesh(mesh, jax.jit(prefill_fn))
+
+
+def make_decode_step(cfg: ModelConfig, mesh, donate: bool = True):
+    rules = make_rules(mesh)
+
+    def decode_fn(params, cache, tokens, pos):
+        with use_rules(rules):
+            logits, new_cache = model_api.decode_step(params, cache, tokens, pos, cfg)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, logits, new_cache
+
+    return _with_mesh(mesh, jax.jit(decode_fn, donate_argnums=(1,) if donate else ()))
+
+
+# ---------------------------------------------------------------------------
+# input shardings (dry-run + drivers)
+# ---------------------------------------------------------------------------
+
+
+def _bd(mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def _even(dim, mesh, axes):
+    size = 1
+    for a in axes if isinstance(axes, tuple) else (axes,):
+        size *= mesh.shape.get(a, 1)
+    return dim % size == 0 and dim >= size
+
+
+def batch_shardings(cfg: ModelConfig, shape: str, mesh):
+    """NamedSharding pytree matching model_api.input_specs(cfg, shape)."""
+    specs = model_api.input_specs(cfg, shape)
+    bd = _bd(mesh)
+
+    def shard_for(path, leaf):
+        name = "/".join(str(getattr(k, "key", k)) for k in path).lower()
+        shp = leaf.shape
+        if not shp:
+            return NamedSharding(mesh, P())
+        if "positions" in name:
+            ax = bd if _even(shp[1], mesh, bd) else None
+            return NamedSharding(mesh, P(None, ax, *(None,) * (len(shp) - 2)))
+        if name.startswith("cache"):
+            return NamedSharding(mesh, _cache_spec(name, shp, mesh))
+        ax = bd if _even(shp[0], mesh, bd) else None
+        return NamedSharding(mesh, P(ax, *(None,) * (len(shp) - 1)))
+
+    return jax.tree_util.tree_map_with_path(shard_for, specs)
+
+
+def _cache_spec(name: str, shp, mesh) -> P:
+    """KV/state cache layout: batch->data, seq->model (split-KV decode)."""
+    data_ok = lambda d: _even(d, mesh, ("data",))
+    model_ok = lambda d: _even(d, mesh, ("model",))
+    if any(k in name for k in ("ckv", "kr")):  # (L, B, S, r)
+        return P(
+            None,
+            "data" if data_ok(shp[1]) else None,
+            "model" if model_ok(shp[2]) else None,
+            None,
+        )
+    if "conv" in name:  # (L, B, K, C)
+        return P(
+            None,
+            "data" if data_ok(shp[1]) else None,
+            None,
+            "model" if model_ok(shp[3]) else None,
+        )
+    if "ssm" in name:  # (L, B, H, P, N)
+        return P(
+            None,
+            "data" if data_ok(shp[1]) else None,
+            "model" if model_ok(shp[2]) else None,
+            None,
+            None,
+        )
+    if len(shp) == 5:  # (L, B, S, KVH, dh)
+        return P(
+            None,
+            "data" if data_ok(shp[1]) else None,
+            "model" if model_ok(shp[2]) else None,
+            None,
+            None,
+        )
+    return P(*(None,) * len(shp))

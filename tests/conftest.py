@@ -1,0 +1,9 @@
+"""Test-suite device setup: the distributed-system tests (tests/test_system.py)
+need a simulated (pod=2, data=2, model=2) mesh = 8 host devices.  This is
+test-local configuration: the production dry-run sets its own 512-device
+count inside repro/launch/dryrun.py, and benchmarks run with the default
+single device."""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")

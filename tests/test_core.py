@@ -1,0 +1,249 @@
+"""Unit + property tests for the FedQCS core library."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api, bussgang, sensing, sparsify
+from repro.core.compression import (
+    BQCSCodec,
+    FedQCSConfig,
+    blocks_to_tree,
+    flatten_to_blocks,
+    flatten_to_blocks_batched,
+    pack_codes,
+    unpack_codes,
+)
+from repro.core.gamp import GampConfig, em_gamp, qem_gamp
+from repro.core.quantizer import decode, design_lloyd_max, encode, quantize
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# quantizer
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4, 5, 6, 8])
+def test_lloyd_max_fixed_point(bits):
+    q = design_lloyd_max(bits)
+    assert np.all(np.diff(q.levels) > 0)
+    assert np.all(np.diff(q.thresholds) > 0)
+    # At the Lloyd-Max fixed point gamma == psi (centroid condition); the
+    # fixed-point iteration converges geometrically, slower at higher bits.
+    assert abs(q.gamma - q.psi) < 1e-4
+    # Distortion decreases with bits, kappa -> 0.
+    assert q.kappa >= 0
+
+
+def test_lloyd_max_known_values():
+    q1 = design_lloyd_max(1)
+    np.testing.assert_allclose(q1.levels, [-0.7979, 0.7979], atol=1e-3)
+    q2 = design_lloyd_max(2)
+    np.testing.assert_allclose(q2.levels, [-1.510, -0.4528, 0.4528, 1.510], atol=1e-3)
+    assert abs(q2.distortion - 0.1175) < 1e-3
+
+
+def test_bussgang_constants_match_monte_carlo():
+    """Prop. 1: gamma = E[Q(x)x], psi = E[Q(x)^2], distortion uncorrelated."""
+    q = design_lloyd_max(3)
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, 200_000), jnp.float32)
+    qx = quantize(x, q)
+    gamma_mc = float(jnp.mean(qx * x))
+    psi_mc = float(jnp.mean(qx**2))
+    assert abs(gamma_mc - q.gamma) < 5e-3
+    assert abs(psi_mc - q.psi) < 5e-3
+    d = qx - q.gamma * x
+    assert abs(float(jnp.mean(d * x))) < 5e-3  # uncorrelated
+    assert abs(float(jnp.var(d)) - (q.psi - q.gamma**2)) < 5e-3
+
+
+@hypothesis.given(bits=st.integers(1, 8), seed=st.integers(0, 999))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_encode_decode_consistency(bits, seed):
+    q = design_lloyd_max(bits)
+    x = jnp.asarray(np.random.default_rng(seed).normal(0, 1, 512), jnp.float32)
+    codes = encode(x, q)
+    assert int(codes.max()) < 2**bits
+    deq = decode(codes, q)
+    # decode is the nearest level: re-encoding a decoded value is idempotent
+    assert (encode(deq, q) == codes).all()
+
+
+# ---------------------------------------------------------------------------
+# sparsify + error feedback
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(
+    nb=st.integers(1, 6), n=st.sampled_from([32, 100, 256]),
+    s_frac=st.floats(0.05, 0.9), seed=st.integers(0, 99),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_sparsify_identity_and_count(nb, n, s_frac, seed):
+    s = max(1, int(n * s_frac))
+    x = jnp.asarray(np.random.default_rng(seed).normal(0, 1, (nb, n)), jnp.float32)
+    sparse, resid = sparsify.block_sparsify(x, s)
+    np.testing.assert_array_equal(np.asarray(sparse + resid), np.asarray(x))
+    assert (np.count_nonzero(np.asarray(sparse), axis=1) <= s).all()
+    # kept entries dominate dropped
+    sp, rs = np.asarray(sparse), np.asarray(resid)
+    for i in range(nb):
+        kept = np.abs(sp[i][sp[i] != 0])
+        drop = np.abs(rs[i][rs[i] != 0])
+        if kept.size and drop.size:
+            assert kept.min() >= drop.max() - 1e-7
+
+
+# ---------------------------------------------------------------------------
+# packing / flatten plumbing
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(bits=st.sampled_from([1, 2, 3, 4, 5, 6, 8]), m=st.integers(1, 97),
+                  seed=st.integers(0, 99))
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_pack_roundtrip(bits, m, seed):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 2**bits, (4, m)), jnp.uint8)
+    words = pack_codes(codes, bits)
+    assert (unpack_codes(words, bits, m) == codes).all()
+    # wire width: ceil(m / (32//bits)) words
+    assert words.shape == (4, -(-m // (32 // bits)))
+
+
+def test_flatten_roundtrip_pytree():
+    rng = np.random.default_rng(0)
+    tree = {
+        "a": jnp.asarray(rng.normal(0, 1, (13, 7)), jnp.float32),
+        "b": [jnp.asarray(rng.normal(0, 1, (5,)), jnp.bfloat16),
+              jnp.asarray(rng.normal(0, 1, (2, 3, 4)), jnp.float32)],
+    }
+    blocks, spec, nbar = flatten_to_blocks(tree, 32, row_multiple=4)
+    assert blocks.shape[0] % 4 == 0
+    out = blocks_to_tree(blocks, spec, nbar)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=1e-2
+        )
+
+
+def test_flatten_batched_matches_unbatched():
+    rng = np.random.default_rng(1)
+    tree1 = {"w": jnp.asarray(rng.normal(0, 1, (9, 11)), jnp.float32)}
+    tree2 = {"w": jnp.asarray(rng.normal(0, 1, (9, 11)), jnp.float32)}
+    stacked = {"w": jnp.stack([tree1["w"], tree2["w"]])}
+    bb, spec_b, nbar_b = flatten_to_blocks_batched(stacked, 16, row_multiple=2)
+    b1, spec1, nbar1 = flatten_to_blocks(tree1, 16, row_multiple=2)
+    np.testing.assert_array_equal(np.asarray(bb[0]), np.asarray(b1))
+    assert nbar_b == nbar1
+
+
+# ---------------------------------------------------------------------------
+# end-to-end codec + reconstruction
+# ---------------------------------------------------------------------------
+
+
+def test_ea_reconstruction_quality_sparse_signal():
+    """Exactly-sparse Gaussian blocks at paper settings -> low NMSE."""
+    rng = np.random.default_rng(0)
+    n, s, nb = 510, 40, 8
+    g = np.zeros((nb, n), np.float32)
+    for i in range(nb):
+        idx = rng.choice(n, s, replace=False)
+        g[i, idx] = rng.normal(0, 0.1, s)
+    g = jnp.asarray(g)
+    cfg = FedQCSConfig(block_size=n, reduction_ratio=3, bits=3, s_ratio=s / n, gamp_iters=50)
+    codec = BQCSCodec(cfg)
+    codes, alpha, _ = codec.compress_blocks(g, jnp.zeros_like(g))
+    ghat = qem_gamp(codes, alpha, codec.a, codec.quantizer,
+                    GampConfig(iters=50))
+    per_block = np.asarray(
+        jnp.sum((ghat - g) ** 2, axis=1) / jnp.sum(g**2, axis=1)
+    )
+    # AMP has a small per-block failure probability near the phase boundary;
+    # the pipeline's error feedback absorbs stragglers across steps.  Require
+    # typical-case quality + bounded failure count.
+    assert np.median(per_block) < 0.06, per_block
+    assert (per_block < 0.2).sum() >= nb - 1, per_block
+
+
+def test_ae_matches_theorem1_bound():
+    """AE reconstruction (G=1) should not exceed the Thm-1 LMMSE-style bound
+    (evaluated with empirical block stats) by more than fp slack."""
+    rng = np.random.default_rng(2)
+    cfg = FedQCSConfig(block_size=256, reduction_ratio=3, bits=3, s_ratio=0.1, gamp_iters=50)
+    codec = BQCSCodec(cfg)
+    k, nb = 4, 8
+    blocks, codes, alphas = [], [], []
+    for _ in range(k):
+        b = np.zeros((nb, 256), np.float32)
+        for i in range(nb):
+            idx = rng.choice(256, cfg.s, replace=False)
+            b[i, idx] = rng.normal(0, 0.1, cfg.s)
+        b = jnp.asarray(b)
+        c, a, _ = codec.compress_blocks(b, jnp.zeros_like(b))
+        blocks.append(b); codes.append(c); alphas.append(a)
+    rhos = jnp.full((k,), 1.0 / k)
+    from repro.core.reconstruction import aggregate_and_estimate
+
+    gsum = sum(rhos[i] * blocks[i] for i in range(k))
+    ghat = aggregate_and_estimate(codec, jnp.stack(codes), jnp.stack(alphas), rhos)
+    mse = float(jnp.mean(jnp.sum((ghat - gsum) ** 2, axis=1)))
+    # Thm 1 bound with empirical per-block moments
+    q = codec.quantizer
+    var = jnp.sum(jnp.stack([rhos[i] ** 2 * jnp.var(blocks[i], axis=1) for i in range(k)]), 0)
+    musq = jnp.sum(jnp.stack([(rhos[i] * jnp.mean(blocks[i], axis=1)) ** 2 for i in range(k)]), 0)
+    r = cfg.reduction_ratio
+    bound = 256 * var * (1 - var / (r * var + q.kappa * (var + musq)))
+    assert mse <= float(jnp.mean(bound)) * 1.15, (mse, float(jnp.mean(bound)))
+
+
+def test_partial_participation_exactness():
+    """A worker with rho=0 must be *exactly* ignored (failure semantics)."""
+    rng = np.random.default_rng(3)
+    cfg = FedQCSConfig(block_size=128, reduction_ratio=4, bits=3, s_ratio=0.1, gamp_iters=20)
+    codec = BQCSCodec(cfg)
+    b1 = jnp.asarray(rng.normal(0, 0.1, (4, 128)), jnp.float32)
+    b2 = jnp.asarray(rng.normal(0, 0.1, (4, 128)), jnp.float32)
+    garbage = jnp.asarray(rng.normal(0, 100.0, (4, 128)), jnp.float32)
+    out = {}
+    for tag, blocks, rhos in (
+        ("with_dead", [b1, b2, garbage], [0.5, 0.5, 0.0]),
+        ("without", [b1, b2], [0.5, 0.5]),
+    ):
+        cs, as_ = [], []
+        for b in blocks:
+            c, a, _ = codec.compress_blocks(b, jnp.zeros_like(b))
+            cs.append(c); as_.append(a)
+        from repro.core.reconstruction import aggregate_and_estimate
+
+        out[tag] = aggregate_and_estimate(
+            codec, jnp.stack(cs), jnp.stack(as_), jnp.asarray(rhos, jnp.float32)
+        )
+    np.testing.assert_allclose(
+        np.asarray(out["with_dead"]), np.asarray(out["without"]), rtol=1e-4, atol=1e-6
+    )
+
+
+def test_error_feedback_accumulates_everything():
+    """With EF, repeated compression of a CONSTANT gradient transmits the full
+    vector over time: sum of reconstructions -> scaled truth (direction)."""
+    rng = np.random.default_rng(4)
+    cfg = FedQCSConfig(block_size=128, reduction_ratio=3, bits=4, s_ratio=0.05, gamp_iters=30)
+    codec = BQCSCodec(cfg)
+    g = jnp.asarray(rng.normal(0, 0.1, (2, 128)), jnp.float32)
+    residual = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    n_steps = 40  # residual plateaus after ~N/S steps (here 20), then cos climbs
+    for _ in range(n_steps):
+        codes, alpha, residual = codec.compress_blocks(g, residual)
+        ghat = qem_gamp(codes, alpha, codec.a, codec.quantizer, GampConfig(iters=30))
+        acc = acc + ghat
+    acc = acc / n_steps
+    cos = float(jnp.sum(acc * g) / (jnp.linalg.norm(acc) * jnp.linalg.norm(g)))
+    assert cos > 0.9, cos

@@ -1,0 +1,144 @@
+"""Per-kernel allclose tests vs the pure-jnp oracles (interpret mode on CPU),
+with shape/dtype sweeps + hypothesis property tests."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sensing
+from repro.core.quantizer import design_lloyd_max
+from repro.kernels import ops, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# bqcs_encode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("nb,n,r,q", [
+    (16, 256, 4, 3),
+    (7, 512, 2, 1),
+    (130, 1024, 8, 4),
+    (1, 128, 4, 2),
+    (33, 384, 3, 6),
+])
+def test_bqcs_encode_matches_ref(nb, n, r, q):
+    rng = np.random.default_rng(nb * n + q)
+    m = n // r
+    blocks = jnp.asarray(rng.normal(0, 0.1, (nb, n)), jnp.float32)
+    blocks = blocks.at[0].set(0.0)  # dead block path
+    a = sensing.sensing_matrix(jax.random.PRNGKey(1), m, n)
+    quant = design_lloyd_max(q)
+    ck, ak = ops.bqcs_encode(blocks, a, quant)
+    cr, ar = ref.bqcs_encode_ref(blocks, a.T, quant.jnp_thresholds())
+    assert (ck.astype(jnp.int32) == cr).all()
+    np.testing.assert_allclose(np.asarray(ak), np.asarray(ar), rtol=1e-6)
+    assert int(ck.max()) < 2**q
+
+
+def test_bqcs_encode_bf16_input():
+    rng = np.random.default_rng(0)
+    blocks = jnp.asarray(rng.normal(0, 1, (8, 256)), jnp.bfloat16)
+    a = sensing.sensing_matrix(jax.random.PRNGKey(1), 64, 256)
+    quant = design_lloyd_max(2)
+    ck, ak = ops.bqcs_encode(blocks, a, quant)  # wrapper upcasts to f32
+    cr, ar = ref.bqcs_encode_ref(blocks.astype(jnp.float32), a.T, quant.jnp_thresholds())
+    assert (ck.astype(jnp.int32) == cr).all()
+
+
+# ---------------------------------------------------------------------------
+# block_topk
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("nb,n,s", [(16, 256, 20), (5, 128, 1), (40, 512, 64), (3, 1024, 1000)])
+def test_block_topk_matches_ref(nb, n, s):
+    rng = np.random.default_rng(nb + n + s)
+    blocks = jnp.asarray(rng.normal(0, 1, (nb, n)), jnp.float32)
+    sk, rk = ops.block_sparsify(blocks, s)
+    sr, rr = ref.block_topk_ref(blocks, s)
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(sr))
+    np.testing.assert_array_equal(np.asarray(rk), np.asarray(rr))
+
+
+@hypothesis.given(
+    nb=st.integers(1, 12),
+    n=st.sampled_from([64, 128, 256]),
+    s_frac=st.floats(0.01, 0.9),
+    seed=st.integers(0, 2**16),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_block_topk_properties(nb, n, s_frac, seed):
+    """Invariants: sparse+residual == input exactly; kept count in [1, s+ties];
+    kept entries dominate dropped entries in magnitude."""
+    s = max(1, int(s_frac * n))
+    rng = np.random.default_rng(seed)
+    blocks = jnp.asarray(rng.normal(0, 1, (nb, n)), jnp.float32)
+    sparse, resid = ops.block_sparsify(blocks, s)
+    np.testing.assert_array_equal(np.asarray(sparse + resid), np.asarray(blocks))
+    sp, rs = np.asarray(sparse), np.asarray(resid)
+    for i in range(nb):
+        kept = np.abs(sp[i][sp[i] != 0])
+        dropped = np.abs(rs[i][rs[i] != 0])
+        assert 1 <= kept.size
+        if dropped.size and kept.size:
+            assert kept.min() >= dropped.max() - 1e-6
+
+
+# ---------------------------------------------------------------------------
+# gamp_step
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("nb,n,r,L", [(8, 256, 4, 3), (4, 128, 2, 2), (32, 512, 4, 4)])
+def test_gamp_step_matches_ref(nb, n, r, L):
+    rng = np.random.default_rng(nb * n)
+    m = n // r
+    ghat = jnp.asarray(rng.normal(0, 0.1, (nb, n)), jnp.float32)
+    nug = jnp.asarray(rng.uniform(0.01, 0.1, (nb, n)), jnp.float32)
+    shat = jnp.asarray(rng.normal(0, 0.1, (nb, m)), jnp.float32)
+    theta = jnp.concatenate(
+        [
+            jnp.full((nb, 1), 0.9),
+            jnp.full((nb, L), 0.1 / L),
+            jnp.asarray(rng.normal(0, 0.1, (nb, L)), jnp.float32),
+            jnp.full((nb, L), 0.01),
+        ],
+        axis=1,
+    )
+    y = jnp.asarray(rng.normal(0, 1, (nb, m)), jnp.float32)
+    nud = jnp.full((nb, 1), 0.05, jnp.float32)
+    a = sensing.sensing_matrix(jax.random.PRNGKey(2), m, n)
+    outk = ops.gamp_step(ghat, nug, shat, theta, y, nud, a, n_components=L)
+    outr = ref.gamp_step_ref(ghat, nug, shat, theta, y, nud, a, n_components=L)
+    for k, rr in zip(outk, outr):
+        np.testing.assert_allclose(np.asarray(k), np.asarray(rr), rtol=2e-4, atol=1e-6)
+
+
+def test_gamp_ae_run_matches_core_em_gamp():
+    """Full fixed-trip kernel scan == core scalar-variance em_gamp."""
+    from repro.core import bussgang
+    from repro.core.compression import BQCSCodec, FedQCSConfig
+    from repro.core.gamp import GampConfig, em_gamp
+
+    rng = np.random.default_rng(5)
+    cfg = FedQCSConfig(block_size=256, reduction_ratio=3, bits=3, s_ratio=0.08)
+    codec = BQCSCodec(cfg)
+    g = jnp.asarray(rng.standard_t(4, (16, 256)) * 0.01, jnp.float32)
+    c, a, _ = codec.compress_blocks(g, jnp.zeros_like(g))
+    rhos = jnp.ones((1,))
+    y = bussgang.aggregate_codes(c[None], a[None], rhos, codec.quantizer)
+    nu = bussgang.effective_noise_var(a[None], rhos, codec.quantizer)
+    en = bussgang.signal_energy(a[None], rhos, cfg.m, 256)
+    gh_k = ops.gamp_ae_run(y, nu, codec.a, en, iters=20)
+    gh_c = em_gamp(
+        y, nu, codec.a,
+        GampConfig(iters=20, variance_mode="scalar", tol=0.0),
+        init_var=en,
+    )
+    np.testing.assert_allclose(np.asarray(gh_k), np.asarray(gh_c), rtol=1e-3, atol=1e-6)

@@ -1,0 +1,169 @@
+"""End-to-end system behaviour tests: distributed train step (both impls),
+checkpoint/restart exactness, elastic resharding, partial participation,
+int8 optimizer states, and learning progress with compression."""
+
+import os
+import sys
+
+import pytest
+
+# The debug mesh needs >= 8 host devices; set before first jax import.
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.checkpoint.checkpointer import Checkpointer  # noqa: E402
+from repro.configs.registry import smoke_config  # noqa: E402
+from repro.core.compression import FedQCSConfig  # noqa: E402
+from repro.data.synthetic import TokenDataset  # noqa: E402
+from repro.launch.mesh import make_debug_mesh, make_single_device_mesh  # noqa: E402
+from repro.optim.adam import OptConfig, QLeaf  # noqa: E402
+from repro.runtime import steps  # noqa: E402
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 8, reason="needs 8 simulated devices"
+)
+
+CFG = smoke_config("qwen3-0.6b")
+# R=2 keeps the 2-pod aggregated support well inside the AMP-easy phase so
+# the 30-step learning check is fast (R=3/Q=3 is the paper's operating point
+# and is exercised by the benchmarks at longer horizons).
+FED = FedQCSConfig(
+    block_size=256, reduction_ratio=2, bits=4, s_ratio=0.08,
+    gamp_iters=15, gamp_variance_mode="scalar",
+)
+OPT = OptConfig(lr=3e-3, warmup_steps=2, decay_steps=100)
+DS = TokenDataset(CFG.vocab_size, batch=16, seq=32, seed=7)
+
+
+def _train(n, fed=FED, state=None, start=0, mesh=None, impl="auto", opt=OPT):
+    mesh = mesh or make_debug_mesh(2, 2, 2)
+    state = state if state is not None else steps.init_train_state(
+        CFG, opt, fed, jax.random.PRNGKey(0), n_pods=2
+    )
+    fn = steps.make_train_step(CFG, opt, fed, mesh, donate=False, impl=impl)
+    losses = []
+    for i in range(start, start + n):
+        state, m = fn(state, DS.get_batch(i))
+        losses.append(float(m["loss"]))
+    return state, losses
+
+
+def test_fedqcs_training_learns():
+    _, losses = _train(30)
+    assert losses[-1] < losses[0] - 0.05, losses[:: max(len(losses) // 4, 1)]
+
+
+def test_auto_and_shard_map_impls_agree():
+    """Implementation equivalence, asserted where it is well-posed:
+    * the compression pipeline (sparsify -> project -> quantize -> error
+      feedback) must match to fp round-off -> residuals ~identical;
+    * losses identical (same fwd path);
+    * params within ~2*lr: GAMP is a contraction-mapped nonlinear solver, so
+      last-ulp differences in the (mathematically identical) Bussgang
+      aggregation order perturb its output, and one Adam step turns ANY
+      gradient perturbation into an O(lr) parameter difference."""
+    out = {}
+    for impl in ("auto", "shard_map"):
+        st = steps.init_train_state(CFG, OPT, FED, jax.random.PRNGKey(0), n_pods=2)
+        fn = steps.make_train_step(CFG, OPT, FED, mesh_shared(), donate=False, impl=impl)
+        st, m = fn(st, DS.get_batch(0))
+        out[impl] = (float(m["loss"]), st)
+    assert abs(out["auto"][0] - out["shard_map"][0]) < 1e-5
+    for a, b in zip(
+        jax.tree.leaves(out["auto"][1]["residual"]),
+        jax.tree.leaves(out["shard_map"][1]["residual"]),
+    ):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    lr = OPT.lr
+    for a, b in zip(
+        jax.tree.leaves(out["auto"][1]["params"]),
+        jax.tree.leaves(out["shard_map"][1]["params"]),
+    ):
+        d = float(np.max(np.abs(np.asarray(a, np.float32) - np.asarray(b, np.float32))))
+        assert d <= 2.0 * lr, d
+
+
+_MESH = None
+
+
+def mesh_shared():
+    global _MESH
+    if _MESH is None:
+        _MESH = make_debug_mesh(2, 2, 2)
+    return _MESH
+
+
+def test_checkpoint_restart_exact(tmp_path):
+    """Save at step 3, continue to 6; restart from the checkpoint and replay
+    4..6 -> identical parameters (deterministic data keyed by step)."""
+    mesh = make_debug_mesh(2, 2, 2)
+    state, _ = _train(3, mesh=mesh)
+    ckpt = Checkpointer(str(tmp_path), async_save=False)
+    ckpt.save(3, state)
+    cont, _ = _train(3, state=state, start=3, mesh=mesh)
+    template = steps.init_train_state(CFG, OPT, FED, jax.random.PRNGKey(0), n_pods=2)
+    restored, step = ckpt.restore(template)
+    assert step == 3
+    replay, _ = _train(3, state=restored, start=3, mesh=mesh)
+    for a, b in zip(jax.tree.leaves(cont["params"]), jax.tree.leaves(replay["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_elastic_resharding(tmp_path):
+    """A checkpoint saved from the 2x2x2 run restores onto a DIFFERENT mesh
+    (1x1x1) with explicit shardings -- the elastic scale-down path."""
+    state, _ = _train(2)
+    ckpt = Checkpointer(str(tmp_path), async_save=False)
+    ckpt.save(2, state)
+    small_mesh = make_single_device_mesh()
+    template = steps.init_train_state(CFG, OPT, FED, jax.random.PRNGKey(0), n_pods=2)
+    shardings = steps.train_state_shardings(template, small_mesh, fed=True)
+    restored, _ = ckpt.restore(template, shardings=shardings)
+    fn = steps.make_train_step(CFG, OPT, FED, small_mesh, donate=False)
+    restored2, m = fn(restored, DS.get_batch(2))
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_partial_participation_step():
+    """Marking pod 1 dead must still step (rho renormalization) -- failure
+    degrades gradient quality instead of failing the step."""
+    mesh = make_debug_mesh(2, 2, 2)
+    state = steps.init_train_state(CFG, OPT, FED, jax.random.PRNGKey(0), n_pods=2)
+    state["participating"] = jnp.asarray([1.0, 0.0])
+    fn = steps.make_train_step(CFG, OPT, FED, mesh, donate=False)
+    state2, m = fn(state, DS.get_batch(0))
+    assert np.isfinite(float(m["loss"]))
+    moved = sum(
+        float(jnp.sum(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree.leaves(state2["params"]), jax.tree.leaves(state["params"]))
+    )
+    assert moved > 0
+
+
+def test_int8_optimizer_states():
+    opt = OptConfig(lr=3e-3, warmup_steps=2, decay_steps=100, state_dtype="int8")
+    state, losses = _train(10, opt=opt)
+    leaves = jax.tree_util.tree_leaves(
+        state["opt"]["m"], is_leaf=lambda x: isinstance(x, QLeaf)
+    )
+    assert any(isinstance(l, QLeaf) for l in leaves)
+    q = next(l for l in leaves if isinstance(l, QLeaf))
+    assert q.q.dtype == jnp.int8
+    assert losses[-1] < losses[0] + 0.05  # no divergence from quantized states
+
+
+def test_baseline_and_fedqcs_share_data_path():
+    """Baseline (no compression) trains faster or equal at equal steps."""
+    _, fed_losses = _train(12)
+    mesh = make_debug_mesh(2, 2, 2)
+    state_b = steps.init_train_state(CFG, OPT, None, jax.random.PRNGKey(0))
+    fn = steps.make_train_step(CFG, OPT, None, mesh, donate=False)
+    base_losses = []
+    for i in range(12):
+        state_b, m = fn(state_b, DS.get_batch(i))
+        base_losses.append(float(m["loss"]))
+    assert base_losses[-1] <= fed_losses[-1] + 0.05
