@@ -10,14 +10,22 @@ Prints ``name,us_per_call,derived`` CSV; full traces land in runs/bench/.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
 
+BENCH_GAMP_JSON = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), os.pardir, "runs", "bench",
+    "BENCH_gamp.json",
+)
+
 
 def kernel_micro(fast=True):
-    """Microbench the three Pallas kernels (interpret mode on CPU: validates
-    the call path and gives relative-cost numbers, not TPU wall times)."""
+    """Microbench the Pallas kernel entry points (interpret mode on CPU:
+    validates the call path and gives relative-cost numbers, not TPU wall
+    times)."""
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -50,6 +58,74 @@ def kernel_micro(fast=True):
     en = jnp.full((nb,), 1.0)
     timed("kernel[gamp_ae_run]", lambda: ops.gamp_ae_run(y, nu, a, en, iters=10),
           "iters=10")
+    codes = jnp.asarray(rng.integers(0, 2**4, (nb, m)), jnp.uint8)
+    alpha = jnp.asarray(rng.uniform(0.5, 2.0, (nb,)), jnp.float32)
+    timed("kernel[qgamp_ea_run]",
+          lambda: ops.qgamp_ea_run(codes, alpha, a, quant.jnp_thresholds(), iters=10),
+          "iters=10")
+    return rows
+
+
+def gamp_ea_vs_ae(fast=True):
+    """EA vs AE reconstruction micro: fused kernel vs pure-XLA scalar-variance
+    GAMP on identical seeded Bernoulli-GM payloads.  Records every entry in
+    runs/bench/BENCH_gamp.json (consumed by EXPERIMENTS.md #Perf)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import bussgang
+    from repro.core.compression import BQCSCodec, FedQCSConfig
+    from repro.core.gamp import GampConfig, em_gamp, qem_gamp
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    nb, n, iters = (32 if fast else 128), 512, (10 if fast else 25)
+    cfg = FedQCSConfig(block_size=n, reduction_ratio=4, bits=3, s_ratio=0.1)
+    codec = BQCSCodec(cfg)
+    g = np.zeros((nb, n), np.float32)
+    for i in range(nb):
+        idx = rng.choice(n, cfg.s, replace=False)
+        g[i, idx] = rng.normal(0, 0.1, cfg.s)
+    codes, alpha, _ = codec.compress_blocks(jnp.asarray(g), jnp.zeros((nb, n), jnp.float32))
+    rhos = jnp.ones((1,))
+    y = bussgang.aggregate_codes(codes[None], alpha[None], rhos, codec.quantizer)
+    nu = bussgang.effective_noise_var(alpha[None], rhos, codec.quantizer)
+    en = bussgang.signal_energy(alpha[None], rhos, cfg.m, n)
+    gcfg = GampConfig(iters=iters, variance_mode="scalar", tol=0.0)
+    taus = codec.quantizer.jnp_thresholds()
+    # jit the pure-XLA paths once so the comparison measures execution, not
+    # per-call retracing (the kernel drivers are already jitted).
+    ea_xla = jax.jit(lambda c, al: qem_gamp(c, al, codec.a, codec.quantizer, gcfg))
+    ae_xla = jax.jit(lambda yy, nn, ee: em_gamp(yy, nn, codec.a, gcfg, init_var=ee))
+
+    cases = {
+        "ea_kernel[qgamp_ea_run]": lambda: ops.qgamp_ea_run(
+            codes, alpha, codec.a, taus, iters=iters),
+        "ea_xla[qem_gamp]": lambda: ea_xla(codes, alpha),
+        "ae_kernel[gamp_ae_run]": lambda: ops.gamp_ae_run(
+            y, nu, codec.a, en, iters=iters),
+        "ae_xla[em_gamp]": lambda: ae_xla(y, nu, en),
+    }
+    rows, entries = [], []
+    for name, fn in cases.items():
+        jax.block_until_ready(fn())  # compile
+        t0 = time.time()
+        reps = 3
+        for _ in range(reps):
+            jax.block_until_ready(fn())
+        us = 1e6 * (time.time() - t0) / reps
+        derived = f"nb={nb};N={n};M={cfg.m};iters={iters}"
+        rows.append(f"gamp[{name}],{us:.1f},{derived}")
+        entries.append({
+            "name": name, "us_per_call": round(us, 1), "nb": nb, "n": n,
+            "m": cfg.m, "iters": iters, "backend": jax.default_backend(),
+            "interpret": jax.default_backend() != "tpu",
+        })
+    os.makedirs(os.path.dirname(BENCH_GAMP_JSON), exist_ok=True)
+    with open(BENCH_GAMP_JSON, "w") as f:
+        json.dump({"bench": "gamp_ea_vs_ae", "entries": entries}, f, indent=2)
+    rows.append(f"gamp[json],0,{os.path.relpath(BENCH_GAMP_JSON)}")
     return rows
 
 
@@ -70,6 +146,7 @@ def main() -> None:
         "fig6": paper_figs.fig6_sparsity,
         "table1": paper_figs.table1_complexity,
         "kernels": kernel_micro,
+        "gamp": gamp_ea_vs_ae,
     }
     selected = [s for s in args.only.split(",") if s] or list(benches)
     print("name,us_per_call,derived")

@@ -68,7 +68,15 @@ def reconstruct(
     mode: str = "ae",
     groups: int = 1,
 ) -> Any:
-    """PS side: fuses K payloads into the reconstructed gradient pytree."""
+    """PS side: fuses K payloads into the reconstructed gradient pytree.
+
+    mode="ea" (estimate-and-aggregate, Procedure 2) runs one Q-EM-GAMP per
+    worker payload; mode="ae" (aggregate-and-estimate) Bussgang-combines
+    first.  Both route through the fused Pallas kernels when
+    ``codec.cfg.use_kernels`` is set AND ``codec.cfg.gamp_variance_mode ==
+    'scalar'`` (the kernels implement scalar-variance GAMP; exact-variance
+    configs keep the XLA path -- see DESIGN.md).
+    """
     codes = jnp.stack([p.codes for p in payloads])
     alphas = jnp.stack([p.alpha for p in payloads])
     rhos = jnp.asarray(rhos, jnp.float32)

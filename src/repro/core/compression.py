@@ -51,6 +51,11 @@ class FedQCSConfig:
     seed: int = 1234  # sensing-matrix seed (protocol constant)
     use_kernels: bool = False  # route hot paths through Pallas kernels
     wire_mode: str = "gather_codes"  # or "psum_dequant" (see DESIGN.md)
+    # PS reconstruction strategy inside the distributed collectives:
+    # "ae" (aggregate-and-estimate, Bussgang combine then one GAMP) or
+    # "ea" (estimate-and-aggregate, per-worker Q-EM-GAMP then rho-sum).
+    # "ea" needs the per-worker codes, i.e. wire_mode="gather_codes".
+    recon_mode: str = "ae"
 
     @property
     def m(self) -> int:

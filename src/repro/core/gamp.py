@@ -36,7 +36,16 @@ import jax.numpy as jnp
 
 from repro.core.quantizer import LloydMaxQuantizer
 
-__all__ = ["GampConfig", "GampState", "qem_gamp", "em_gamp", "make_init_theta"]
+__all__ = [
+    "GampConfig",
+    "GampState",
+    "qem_gamp",
+    "em_gamp",
+    "make_init_theta",
+    "tau_tables",
+    "block_prior_energy",
+    "norm_guard",
+]
 
 _EPS = 1e-12
 _TRUNC_CLIP = 9.0  # standardize-clip for truncated-normal stability in f32
@@ -166,9 +175,20 @@ def _quantized_channel(phat, nu_p, codes, lo_tau, hi_tau):
     the correct asymptotic truncated-normal moments.
     """
     nu_p = jnp.maximum(nu_p, _EPS)
-    sd = jnp.sqrt(nu_p)
     lo = lo_tau[codes.astype(jnp.int32)]
     hi = hi_tau[codes.astype(jnp.int32)]
+    return trunc_channel_moments(phat, nu_p, lo, hi)
+
+
+def trunc_channel_moments(phat, nu_p, lo, hi):
+    """Truncated-normal moment match on precomputed per-entry bin edges
+    (the body of _quantized_channel after the code->edge lookup).  Shared
+    with the fused kernel (kernels/qgamp_step.py), which fetches lo/hi via a
+    one-hot contraction instead of a gather; everything from here on is
+    plain jnp and must stay the single source of the channel numerics.
+    nu_p must already be clamped positive.
+    """
+    sd = jnp.sqrt(nu_p)
     a = (lo - phat) / sd
     b = (hi - phat) / sd
     # Far-tail detection: entire bin is > TRUNC_CLIP sds away on one side.
@@ -201,6 +221,38 @@ def _awgn_channel(phat, nu_p, y, nu_d):
     xpost = (phat * nu_d + y * nu_p) / (nu_p + nu_d)
     nu_x = nu_p * nu_d / (nu_p + nu_d)
     return xpost, nu_x
+
+
+# ---------------------------------------------------------------------------
+# Protocol constants shared with the fused-kernel drivers (kernels/ops.py).
+# These three definitions ARE the kernel/XLA equivalence contract -- keep the
+# single source of truth here.
+# ---------------------------------------------------------------------------
+
+
+def tau_tables(taus: jnp.ndarray):
+    """Interior Lloyd-Max thresholds (2^Q - 1,) -> (lo_tau, hi_tau) bin-edge
+    tables (2^Q,) with +-4*_TRUNC_CLIP sentinels standing in for +-inf."""
+    big = jnp.asarray([4.0 * _TRUNC_CLIP], jnp.float32)
+    taus = jnp.asarray(taus, jnp.float32)
+    return jnp.concatenate([-big, taus]), jnp.concatenate([taus, big])
+
+
+def block_prior_energy(alpha: jnp.ndarray, m: int, n: int) -> jnp.ndarray:
+    """Per-entry prior energy from the transmitted scale:
+    E[g_n^2] = ||g||^2 / N = M / (N alpha^2); 1.0 for dead blocks."""
+    alive = alpha > 0
+    safe = jnp.where(alive, alpha, 1.0)
+    return jnp.where(alive, m / (n * jnp.square(safe)), 1.0)
+
+
+def norm_guard(ghat: jnp.ndarray, exp_norm: jnp.ndarray) -> jnp.ndarray:
+    """Clip a reconstructed block to 2x its expected norm: a diverged AMP
+    fixed point can only manifest as an inflated estimate, so this protects
+    the rare per-block divergence without touching converged blocks."""
+    est_norm = jnp.linalg.norm(ghat, axis=-1)
+    scale = jnp.minimum(1.0, 2.0 * exp_norm / jnp.maximum(est_norm, 1e-30))
+    return ghat * scale[:, None]
 
 
 # ---------------------------------------------------------------------------
@@ -295,32 +347,45 @@ def qem_gamp(
     a: jnp.ndarray,  # (M, N) sensing matrix
     quantizer: LloydMaxQuantizer,
     cfg: GampConfig,
+    use_pallas: bool = False,
 ) -> jnp.ndarray:
     """Q-EM-GAMP (Procedure 2): MMSE estimate of each block from its codes.
 
     Returns (nb, N) reconstructed blocks (pre-concatenation).
+
+    ``use_pallas`` routes the solve through the fused TPU kernel
+    (kernels/qgamp_step.py via ops.qgamp_ea_run).  The kernel implements
+    scalar-variance GAMP (the large-system simplification the production
+    configs run, EXPERIMENTS.md #Perf) at a fixed trip count with no
+    early-freeze (static work for the scheduler, DESIGN.md), so the dispatch
+    only takes effect when ``cfg.variance_mode == 'scalar'`` and
+    ``cfg.damping == 1.0`` (undamped) -- other configs keep the XLA path
+    rather than silently switching reconstruction algorithms.  ``tol`` is the
+    one accepted deviation: the kernel's fixed trip count vs the XLA path's
+    early-freeze differ by well under the 1e-4 NMSE contract (pinned by
+    tests/test_kernels.py at the default tol).
     """
+    if use_pallas and cfg.variance_mode == "scalar" and cfg.damping == 1.0:
+        from repro.kernels import ops as kops  # deferred: kernels are optional
+
+        return kops.qgamp_ea_run(
+            codes, alpha, a, quantizer.jnp_thresholds(),
+            n_components=cfg.n_components, iters=cfg.iters, em=cfg.em,
+            lam0=cfg.lam0_init,
+        )
     nb, m = codes.shape
     n = a.shape[1]
-    taus = quantizer.jnp_thresholds()
-    big = jnp.asarray([_TRUNC_CLIP * 4.0], jnp.float32)
-    lo_tau = jnp.concatenate([-big, taus])
-    hi_tau = jnp.concatenate([taus, big])
-    # Per-entry prior energy: E[g_n^2] = ||g||^2 / N = M / (N alpha^2).
+    lo_tau, hi_tau = tau_tables(quantizer.jnp_thresholds())
     alive = alpha > 0
-    init_var = jnp.where(alive, m / (n * jnp.square(jnp.where(alive, alpha, 1.0))), 1.0)
+    init_var = block_prior_energy(alpha, m, n)
     out = partial(_quantized_channel, codes=codes, lo_tau=lo_tau, hi_tau=hi_tau)
     ghat, _, _ = _gamp_run(
         lambda p, v: out(p, v), a, alpha, init_var, cfg, nb, n, m
     )
-    # Norm guard: the PS *knows* the true block norm (||g|| = sqrt(M)/alpha
-    # is transmitted); a diverged AMP fixed point can only manifest as an
-    # inflated estimate, so clip to 2x the true norm.  Protects the rare
-    # per-block divergence without touching converged blocks.
+    # The PS *knows* the true block norm (||g|| = sqrt(M)/alpha is
+    # transmitted), so the guard clips against it exactly.
     true_norm = jnp.where(alive, jnp.sqrt(jnp.float32(m)) / jnp.where(alive, alpha, 1.0), 0.0)
-    est_norm = jnp.linalg.norm(ghat, axis=-1)
-    scale = jnp.minimum(1.0, 2.0 * true_norm / jnp.maximum(est_norm, 1e-30))
-    return ghat * scale[:, None]
+    return norm_guard(ghat, true_norm)
 
 
 def em_gamp(
@@ -329,10 +394,13 @@ def em_gamp(
     a: jnp.ndarray,  # (M, N)
     cfg: GampConfig,
     init_var: Optional[jnp.ndarray] = None,  # (nb,) per-entry signal energy
+    use_pallas: bool = False,
 ) -> jnp.ndarray:
     """EM-GAMP on a noisy *unquantized* observation (aggregate-and-estimate).
 
     Returns (nb, N) reconstructed (already rho-weighted, aggregated) blocks.
+    ``use_pallas`` dispatches to the fused kernel (ops.gamp_ae_run) under the
+    same rules as qem_gamp: scalar-variance configs only, fixed trip count.
     """
     nb, m = y.shape
     n = a.shape[1]
@@ -341,12 +409,17 @@ def em_gamp(
         # per entry... ||y||^2/M ~= ||g||^2/M (A has unit column-energy rows:
         # E|Ag|_m^2 = ||g||^2/M), so ||g||^2 ~= ||y||^2 and per-entry = /N.
         init_var = jnp.maximum(jnp.sum(jnp.square(y), axis=-1) - m * noise_var, _EPS) / n
+    if use_pallas and cfg.variance_mode == "scalar" and cfg.damping == 1.0:
+        from repro.kernels import ops as kops  # deferred: kernels are optional
+
+        return kops.gamp_ae_run(
+            y, noise_var, a, jnp.asarray(init_var, jnp.float32),
+            n_components=cfg.n_components, iters=cfg.iters, em=cfg.em,
+            lam0=cfg.lam0_init,
+        )
     alpha = jnp.ones((nb,), jnp.float32)
     nvar = jnp.asarray(noise_var, jnp.float32)[:, None]
     out = lambda p, v: _awgn_channel(p, v, y, nvar)
     ghat, _, _ = _gamp_run(out, a, alpha, jnp.asarray(init_var, jnp.float32), cfg, nb, n, m)
-    # Norm guard (see qem_gamp): expected ||g_sum||^2 = init_var * N.
-    exp_norm = jnp.sqrt(jnp.maximum(init_var * n, 0.0))
-    est_norm = jnp.linalg.norm(ghat, axis=-1)
-    scale = jnp.minimum(1.0, 2.0 * exp_norm / jnp.maximum(est_norm, 1e-30))
-    return ghat * scale[:, None]
+    # Expected ||g_sum||^2 = init_var * N (see norm_guard).
+    return norm_guard(ghat, jnp.sqrt(jnp.maximum(init_var * n, 0.0)))

@@ -43,14 +43,25 @@ def estimate_and_aggregate(
     alphas: jnp.ndarray,  # (K, nb)
     rhos: jnp.ndarray,  # (K,)
     gamp: Optional[GampConfig] = None,
+    use_pallas: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """FedQCS-EA: returns the reconstructed global blocks (nb, N)."""
+    """FedQCS-EA: returns the reconstructed global blocks (nb, N).
+
+    ``use_pallas`` (default: ``codec.cfg.use_kernels``) routes the batched
+    Q-EM-GAMP solve through the fused TPU kernel -- scalar-variance, fixed
+    trip count; see qem_gamp for the exact semantics of that path.
+    """
     gamp = gamp or gamp_config_from(codec)
+    if use_pallas is None:
+        use_pallas = codec.cfg.use_kernels
     k, nb, m = codes.shape
     # Batch all K*nb recovery problems into one GAMP run (they share A).
     flat_codes = codes.reshape(k * nb, m)
     flat_alpha = alphas.reshape(k * nb)
-    ghat = qem_gamp(flat_codes, flat_alpha, codec.a, codec.quantizer, gamp)
+    ghat = qem_gamp(
+        flat_codes, flat_alpha, codec.a, codec.quantizer, gamp,
+        use_pallas=use_pallas,
+    )
     ghat = ghat.reshape(k, nb, -1)
     return jnp.sum(rhos[:, None, None] * ghat, axis=0)
 
@@ -62,9 +73,16 @@ def aggregate_and_estimate(
     rhos: jnp.ndarray,  # (K,)
     groups: int = 1,  # G
     gamp: Optional[GampConfig] = None,
+    use_pallas: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """FedQCS-AE: Bussgang-aggregate within groups, EM-GAMP per group, sum."""
+    """FedQCS-AE: Bussgang-aggregate within groups, EM-GAMP per group, sum.
+
+    ``use_pallas`` (default: ``codec.cfg.use_kernels``) routes the group GAMP
+    solves through the fused kernel under the same rules as em_gamp.
+    """
     gamp = gamp or gamp_config_from(codec)
+    if use_pallas is None:
+        use_pallas = codec.cfg.use_kernels
     k, nb, m = codes.shape
     n = codec.cfg.block_size
     if k % groups != 0:
@@ -81,5 +99,5 @@ def aggregate_and_estimate(
     y = jnp.concatenate(ys, axis=0)  # (G*nb, M)
     nu = jnp.concatenate(nus, axis=0)
     energy = jnp.concatenate(energies, axis=0)
-    ghat = em_gamp(y, nu, codec.a, gamp, init_var=energy)
+    ghat = em_gamp(y, nu, codec.a, gamp, init_var=energy, use_pallas=use_pallas)
     return jnp.sum(ghat.reshape(groups, nb, n), axis=0)

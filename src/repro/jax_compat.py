@@ -1,0 +1,46 @@
+"""Version-compatibility shims for the jax API surface this repo uses.
+
+The codebase targets the current jax API (jax.set_mesh, jax.shard_map with
+``axis_names``/``check_vma``, jax.sharding.AxisType); CI and some dev boxes
+carry jax 0.4.x, where the same functionality lives under different names:
+
+    jax.set_mesh(mesh)            ->  ``with mesh:`` (Mesh is a context mgr)
+    jax.shard_map(axis_names=S)   ->  jax.experimental.shard_map.shard_map
+                                      (auto = all mesh axes NOT in S)
+    check_vma=...                 ->  check_rep=...
+
+Only the call signatures used by runtime/steps.py are covered -- this is a
+shim, not a polyfill of the full API.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def set_mesh(mesh):
+    """Context manager activating ``mesh`` for PartitionSpec constraints."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh  # jax 0.4.x: Mesh itself is the context manager
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None, check_vma=False):
+    """jax.shard_map with the subset-manual ``axis_names`` semantics."""
+    if hasattr(jax, "shard_map"):
+        kwargs = {"check_vma": check_vma}
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kwargs = {"check_rep": bool(check_vma)}
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kwargs["auto"] = auto
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+    )

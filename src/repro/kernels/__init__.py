@@ -1,6 +1,9 @@
 """Pallas TPU kernels for FedQCS hot spots (validated in interpret mode).
 
 Kernels: bqcs_encode (fused scale+project+quantize), block_topk (bisection
-top-S sparsify), gamp_step (fused EM-GAMP iteration).  Public entry points
-live in ops.py; pure-jnp oracles in ref.py.
+top-S sparsify), gamp_step (fused AWGN EM-GAMP iteration, AE path),
+qgamp_step (fused quantized-channel Q-EM-GAMP iteration, EA path).  The
+Bernoulli-GM input channel + EM refresh shared by the two GAMP kernels live
+in gm_prior.py.  Public entry points live in ops.py; pure-jnp oracles in
+ref.py.
 """

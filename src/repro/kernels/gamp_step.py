@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import gm_prior
+
 DEFAULT_TB = 32
 _EPS = 1e-12
 
@@ -47,10 +49,7 @@ def _gamp_step_kernel(
     m = y.shape[1]
     n = ghat.shape[1]
 
-    lam0 = th[:, 0:1]  # (TB, 1)
-    lam = th[:, 1 : 1 + L]  # (TB, L)
-    mu = th[:, 1 + L : 1 + 2 * L]
-    phi = th[:, 1 + 2 * L : 1 + 3 * L]
+    theta_parts = gm_prior.unpack_theta(th, L)
 
     # ---- output side -----------------------------------------------------
     nu_p = jnp.maximum(jnp.sum(nu_g, axis=1, keepdims=True) / m, _EPS)  # (TB,1)
@@ -73,49 +72,12 @@ def _gamp_step_kernel(
         preferred_element_type=jnp.float32,
     )  # (TB, N)
 
-    inv_sqrt_2pi = 0.3989422804014327
-    v = nu_r  # (TB, 1) broadcasts over N
-    r3 = rhat[:, :, None]  # (TB, N, 1)
-    muc = mu[:, None, :]  # (TB, 1, L)
-    phic = phi[:, None, :]
-    lamc = lam[:, None, :]
-    beta0 = lam0 * (inv_sqrt_2pi * jax.lax.rsqrt(v)) * jnp.exp(
-        -0.5 * rhat * rhat / v
-    )  # (TB, N)
-    var_l = v[:, :, None] + phic  # (TB, 1->N?, L) -- v broadcasts
-    var_l = jnp.maximum(var_l, _EPS)
-    diff = r3 - muc
-    beta = lamc * (inv_sqrt_2pi * jax.lax.rsqrt(var_l)) * jnp.exp(
-        -0.5 * diff * diff / var_l
-    )  # (TB, N, L)
-    denom = jnp.maximum(beta0 + jnp.sum(beta, axis=-1), _EPS)  # (TB, N)
-    lam_post0 = beta0 / denom
-    lam_post = beta / denom[:, :, None]
-    mu_post = (r3 * phic + muc * v[:, :, None]) / var_l
-    phi_post = v[:, :, None] * phic / var_l
-    ghat_new = jnp.sum(lam_post * mu_post, axis=-1)  # (TB, N)
-    second = jnp.sum(lam_post * (phi_post + mu_post * mu_post), axis=-1)
-    nu_g_new = jnp.maximum(second - ghat_new * ghat_new, _EPS)
+    ghat_new, nu_g_new, posterior = gm_prior.gm_input_channel(
+        rhat, nu_r, theta_parts
+    )
 
     # ---- EM refresh (eq. 17) ----------------------------------------------
-    if em:
-        lam0_new = jnp.mean(lam_post0, axis=1, keepdims=True)  # (TB, 1)
-        lam_sum = jnp.sum(lam_post, axis=1)  # (TB, L)
-        lam_new = lam_sum / n
-        safe = jnp.maximum(lam_sum, _EPS)
-        mu_new = jnp.sum(lam_post * mu_post, axis=1) / safe
-        phi_new = (
-            jnp.sum(lam_post * ((muc - mu_post) ** 2 + phi_post), axis=1) / safe
-        )
-        lam0_new = jnp.clip(lam0_new, 1e-6, 1.0 - 1e-6)
-        lam_new = jnp.maximum(lam_new, 1e-8)
-        total = jnp.maximum(lam0_new + jnp.sum(lam_new, axis=1, keepdims=True), _EPS)
-        theta_new = jnp.concatenate(
-            [lam0_new / total, lam_new / total, mu_new, jnp.maximum(phi_new, _EPS)],
-            axis=1,
-        )
-    else:
-        theta_new = th
+    theta_new = gm_prior.em_refresh(posterior, n) if em else th
 
     ghat_out[...] = ghat_new
     nug_out[...] = nu_g_new

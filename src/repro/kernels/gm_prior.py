@@ -1,0 +1,99 @@
+"""Shared VPU stages of the fused GAMP kernels.
+
+Both fused Pallas kernels (gamp_step: AWGN/AE path, qgamp_step: quantized/EA
+path) run the *same* input side per iteration -- the Bernoulli
+Gaussian-mixture posterior (eq. 11) and the EM hyperparameter refresh
+(eq. 17) -- on the packed theta layout
+
+    theta = [lam0 | lam_1..L | mu_1..L | phi_1..L]   (TB, 1 + 3L) f32.
+
+The helpers here are plain jnp expressions, so they inline into either
+kernel body (and into interpret mode) without any Pallas-specific types.
+They must stay numerically identical to core/gamp.py's `_input_channel` /
+`_em_update` (the pure-XLA reference) -- the kernel allclose tests pin this.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+_INV_SQRT_2PI = 0.3989422804014327
+
+
+def unpack_theta(th: jnp.ndarray, L: int):
+    """(TB, 1+3L) -> (lam0 (TB,1), lam (TB,L), mu (TB,L), phi (TB,L))."""
+    return (
+        th[:, 0:1],
+        th[:, 1 : 1 + L],
+        th[:, 1 + L : 1 + 2 * L],
+        th[:, 1 + 2 * L : 1 + 3 * L],
+    )
+
+
+def gm_input_channel(rhat, v, theta_parts):
+    """Posterior mean/var of g given rhat = g + N(0, v), g ~ BG(theta).
+
+    rhat: (TB, N); v: (TB, 1) scalar-variance nu_r (broadcasts over N).
+    Returns (ghat_new, nu_g_new, posterior) where posterior is the tuple
+    (lam_post0, lam_post, mu_post, phi_post, muc) reused by `em_refresh`.
+    """
+    lam0, lam, mu, phi = theta_parts
+    r3 = rhat[:, :, None]  # (TB, N, 1)
+    muc = mu[:, None, :]  # (TB, 1, L)
+    phic = phi[:, None, :]
+    lamc = lam[:, None, :]
+    beta0 = lam0 * (_INV_SQRT_2PI * jax.lax.rsqrt(v)) * jnp.exp(
+        -0.5 * rhat * rhat / v
+    )  # (TB, N)
+    var_l = jnp.maximum(v[:, :, None] + phic, _EPS)  # (TB, 1->N, L)
+    diff = r3 - muc
+    beta = lamc * (_INV_SQRT_2PI * jax.lax.rsqrt(var_l)) * jnp.exp(
+        -0.5 * diff * diff / var_l
+    )  # (TB, N, L)
+    denom = jnp.maximum(beta0 + jnp.sum(beta, axis=-1), _EPS)  # (TB, N)
+    lam_post0 = beta0 / denom
+    lam_post = beta / denom[:, :, None]
+    mu_post = (r3 * phic + muc * v[:, :, None]) / var_l
+    phi_post = v[:, :, None] * phic / var_l
+    ghat_new = jnp.sum(lam_post * mu_post, axis=-1)  # (TB, N)
+    second = jnp.sum(lam_post * (phi_post + mu_post * mu_post), axis=-1)
+    nu_g_new = jnp.maximum(second - ghat_new * ghat_new, _EPS)
+    return ghat_new, nu_g_new, (lam_post0, lam_post, mu_post, phi_post, muc)
+
+
+def em_refresh(posterior, n: int):
+    """EM hyperparameter refresh (eq. 17) -> new packed theta (TB, 1+3L)."""
+    lam_post0, lam_post, mu_post, phi_post, muc = posterior
+    lam0_new = jnp.mean(lam_post0, axis=1, keepdims=True)  # (TB, 1)
+    lam_sum = jnp.sum(lam_post, axis=1)  # (TB, L)
+    lam_new = lam_sum / n
+    safe = jnp.maximum(lam_sum, _EPS)
+    mu_new = jnp.sum(lam_post * mu_post, axis=1) / safe
+    phi_new = jnp.sum(lam_post * ((muc - mu_post) ** 2 + phi_post), axis=1) / safe
+    lam0_new = jnp.clip(lam0_new, 1e-6, 1.0 - 1e-6)
+    lam_new = jnp.maximum(lam_new, 1e-8)
+    total = jnp.maximum(lam0_new + jnp.sum(lam_new, axis=1, keepdims=True), _EPS)
+    return jnp.concatenate(
+        [lam0_new / total, lam_new / total, mu_new, jnp.maximum(phi_new, _EPS)],
+        axis=1,
+    )
+
+
+def pack_init_theta(nb: int, L: int, init_var, lam0: float):
+    """Packed-theta variant of core.gamp.make_init_theta (same init)."""
+    sigma = jnp.sqrt(jnp.maximum(init_var, _EPS))
+    gmax = 3.0 * sigma[:, None]
+    ls = jnp.arange(1, L + 1, dtype=jnp.float32)[None, :]
+    mu0 = -gmax + (2.0 * ls - 1.0) / (2.0 * L) * (2.0 * gmax)
+    phi0 = jnp.broadcast_to((2.0 * gmax / L) ** 2 / 12.0, mu0.shape)
+    return jnp.concatenate(
+        [
+            jnp.full((nb, 1), lam0, jnp.float32),
+            jnp.full((nb, L), (1.0 - lam0) / L, jnp.float32),
+            mu0,
+            phi0,
+        ],
+        axis=1,
+    )

@@ -14,10 +14,13 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.gamp import block_prior_energy, norm_guard, tau_tables
 from repro.core.quantizer import LloydMaxQuantizer
 from repro.kernels import bqcs_encode as _enc
 from repro.kernels import block_topk as _topk
 from repro.kernels import gamp_step as _gstep
+from repro.kernels import gm_prior as _gm
+from repro.kernels import qgamp_step as _qstep
 
 
 def _interpret() -> bool:
@@ -30,6 +33,20 @@ def _pad_rows(x: jnp.ndarray, tb: int) -> Tuple[jnp.ndarray, int]:
     if pad:
         x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
     return x, nb
+
+
+def _pad_rows_ones(arrays, tb: int):
+    """Pads every array to a row-multiple of tb with ONES -- the benign fill
+    for GAMP state (zeros would divide-by-zero inside the kernels).  Returns
+    (padded arrays, original nb)."""
+    nb = arrays[0].shape[0]
+    pad = (-nb) % tb
+    if pad:
+        arrays = [
+            jnp.concatenate([x, jnp.ones((pad,) + x.shape[1:], x.dtype)], axis=0)
+            for x in arrays
+        ]
+    return arrays, nb
 
 
 def bqcs_encode(
@@ -61,18 +78,90 @@ def gamp_step(
 ):
     """One fused AE GAMP iteration (see gamp_step.py for contract)."""
     tb = tb or min(_gstep.DEFAULT_TB, max(8, ghat.shape[0]))
-    nb = ghat.shape[0]
-    pad = (-nb) % tb
-    if pad:
-        padf = lambda x: jnp.concatenate(
-            [x, jnp.ones((pad,) + x.shape[1:], x.dtype)], axis=0
-        )
-        ghat, nu_g, shat, theta, y, nu_d = map(padf, (ghat, nu_g, shat, theta, y, nu_d))
+    (ghat, nu_g, shat, theta, y, nu_d), nb = _pad_rows_ones(
+        (ghat, nu_g, shat, theta, y, nu_d), tb
+    )
     outs = _gstep.gamp_step_pallas(
         ghat, nu_g, shat, theta, y, nu_d, a,
         n_components=n_components, em=em, tb=tb, interpret=_interpret(),
     )
     return tuple(o[:nb] for o in outs)
+
+
+def qgamp_step(
+    ghat, nu_g, shat, theta, codes, alpha, lo_tau, hi_tau, a,
+    n_components: int = 3, em: bool = True, tb: int | None = None,
+):
+    """One fused EA Q-GAMP iteration (see qgamp_step.py for contract).
+
+    codes (nb, M) int32; alpha (nb, 1) strictly positive (dead rows must be
+    sanitized to 1.0 by the caller -- the driver below does this).
+    """
+    tb = tb or min(_qstep.DEFAULT_TB, max(8, ghat.shape[0]))
+    (ghat, nu_g, shat, theta, codes, alpha), nb = _pad_rows_ones(
+        (ghat, nu_g, shat, theta, codes, alpha), tb
+    )
+    outs = _qstep.qgamp_step_pallas(
+        ghat, nu_g, shat, theta, codes, alpha, lo_tau, hi_tau, a,
+        n_components=n_components, em=em, tb=tb, interpret=_interpret(),
+    )
+    return tuple(o[:nb] for o in outs)
+
+
+@functools.partial(jax.jit, static_argnames=("n_components", "iters", "em"))
+def qgamp_ea_run(
+    codes: jnp.ndarray,  # (nb, M) uint8/int Lloyd-Max code indices
+    alpha: jnp.ndarray,  # (nb,) transmitted BQCS scales (0 = dead block)
+    a: jnp.ndarray,  # (M, N)
+    taus: jnp.ndarray,  # (2^Q - 1,) interior Lloyd-Max thresholds
+    n_components: int = 3,
+    iters: int = 25,
+    em: bool = True,
+    lam0: float = 0.9,
+) -> jnp.ndarray:
+    """Full EA reconstruction using the fused kernel: scan of qgamp_step.
+
+    Equivalent to core.gamp.qem_gamp(variance_mode='scalar', tol=0) -- the
+    kernel path runs a fixed trip count with no early-freeze (static work for
+    the scheduler; see DESIGN.md), including the same far-tail channel
+    fallback and final norm guard.
+    """
+    nb, m = codes.shape
+    n = a.shape[1]
+    lo_tau, hi_tau = tau_tables(taus)  # shared protocol constant (core.gamp)
+    alpha = jnp.asarray(alpha, jnp.float32)
+    alive = alpha > 0.0
+    safe_alpha = jnp.where(alive, alpha, 1.0)
+    init_var = block_prior_energy(alpha, m, n)
+    # Pad ONCE to a tile multiple (benign ones-rows), scan the raw kernel,
+    # trim once at the end -- no per-iteration pad/trim copies in the scan.
+    tb = min(_qstep.DEFAULT_TB, max(8, nb))
+    (codes_i, alpha2d, init_var_p), _ = _pad_rows_ones(
+        (codes.astype(jnp.int32), safe_alpha[:, None], init_var), tb
+    )
+    nbp = codes_i.shape[0]
+    theta0 = _gm.pack_init_theta(nbp, n_components, init_var_p, lam0)
+    ghat0 = jnp.zeros((nbp, n), jnp.float32)
+    nu_g0 = jnp.broadcast_to(
+        jnp.maximum(init_var_p, 1e-12)[:, None], (nbp, n)
+    ).astype(jnp.float32)
+    shat0 = jnp.zeros((nbp, m), jnp.float32)
+
+    def body(carry, _):
+        gh, ng, sh, th = carry
+        gh, ng, sh, th = _qstep.qgamp_step_pallas(
+            gh, ng, sh, th, codes_i, alpha2d, lo_tau, hi_tau, a,
+            n_components=n_components, em=em, tb=tb, interpret=_interpret(),
+        )
+        return (gh, ng, sh, th), None
+
+    (ghat, _, _, _), _ = jax.lax.scan(
+        body, (ghat0, nu_g0, shat0, theta0), None, length=iters
+    )
+    ghat = jnp.where(alive[:, None], ghat[:nb], 0.0)
+    # The PS knows the true block norm (see core.gamp.qem_gamp).
+    true_norm = jnp.where(alive, jnp.sqrt(jnp.float32(m)) / safe_alpha, 0.0)
+    return norm_guard(ghat, true_norm)
 
 
 @functools.partial(jax.jit, static_argnames=("n_components", "iters", "em"))
@@ -94,36 +183,31 @@ def gamp_ae_run(
     """
     nb, m = y.shape
     n = a.shape[1]
-    L = n_components
-    sigma = jnp.sqrt(jnp.maximum(init_var, 1e-12))
-    gmax = 3.0 * sigma[:, None]
-    ls = jnp.arange(1, L + 1, dtype=jnp.float32)[None, :]
-    mu0 = -gmax + (2.0 * ls - 1.0) / (2.0 * L) * (2.0 * gmax)
-    phi0 = jnp.broadcast_to((2.0 * gmax / L) ** 2 / 12.0, mu0.shape)
-    theta0 = jnp.concatenate(
-        [
-            jnp.full((nb, 1), lam0, jnp.float32),
-            jnp.full((nb, L), (1.0 - lam0) / L, jnp.float32),
-            mu0,
-            phi0,
-        ],
-        axis=1,
+    init_var = jnp.asarray(init_var, jnp.float32)
+    # Pad ONCE to a tile multiple (benign ones-rows), scan the raw kernel,
+    # trim once at the end -- same pattern as qgamp_ea_run below.
+    tb = min(_gstep.DEFAULT_TB, max(8, nb))
+    (y_p, nud2, init_var_p), _ = _pad_rows_ones(
+        (y, jnp.asarray(nu_d, jnp.float32)[:, None], init_var), tb
     )
-    ghat0 = jnp.zeros((nb, n), jnp.float32)
-    nu_g0 = jnp.broadcast_to(jnp.maximum(init_var, 1e-12)[:, None], (nb, n)).astype(
-        jnp.float32
-    )
-    shat0 = jnp.zeros((nb, m), jnp.float32)
-    nud2 = jnp.asarray(nu_d, jnp.float32)[:, None]
+    nbp = y_p.shape[0]
+    theta0 = _gm.pack_init_theta(nbp, n_components, init_var_p, lam0)
+    ghat0 = jnp.zeros((nbp, n), jnp.float32)
+    nu_g0 = jnp.broadcast_to(
+        jnp.maximum(init_var_p, 1e-12)[:, None], (nbp, n)
+    ).astype(jnp.float32)
+    shat0 = jnp.zeros((nbp, m), jnp.float32)
 
     def body(carry, _):
         gh, ng, sh, th = carry
-        gh, ng, sh, th = gamp_step(
-            gh, ng, sh, th, y, nud2, a, n_components=n_components, em=em
+        gh, ng, sh, th = _gstep.gamp_step_pallas(
+            gh, ng, sh, th, y_p, nud2, a,
+            n_components=n_components, em=em, tb=tb, interpret=_interpret(),
         )
         return (gh, ng, sh, th), None
 
     (ghat, _, _, _), _ = jax.lax.scan(
         body, (ghat0, nu_g0, shat0, theta0), None, length=iters
     )
-    return ghat
+    # Expected ||g_sum||^2 = init_var * N (see core.gamp.em_gamp).
+    return norm_guard(ghat[:nb], jnp.sqrt(jnp.maximum(init_var * n, 0.0)))

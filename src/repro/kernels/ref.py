@@ -46,31 +46,46 @@ def block_topk_ref(blocks: jnp.ndarray, s: int, iters: int = 26):
     return sparse, blocks - sparse
 
 
-def gamp_step_ref(ghat, nu_g, shat, theta, y, nu_d, a, n_components=3, em=True):
-    """One scalar-variance AWGN EM-GAMP iteration (mirrors gamp_step kernel).
+def qgamp_step_ref(
+    ghat, nu_g, shat, theta, codes, alpha, lo_tau, hi_tau, a,
+    n_components=3, em=True,
+):
+    """One scalar-variance quantized-channel Q-EM-GAMP iteration (mirrors the
+    qgamp_step kernel).  The truncated-Gaussian channel is core.gamp's
+    `_quantized_channel` itself -- the ground truth the kernel must match --
+    so the channel numerics exist in exactly two places: core and kernel.
 
-    theta packed as [lam0 | lam_1..L | mu_1..L | phi_1..L], (nb, 1+3L).
+    codes (nb, M) int; alpha (nb, 1) strictly positive; lo_tau/hi_tau (2^Q,)
+    bin-edge tables (sentinels at the ends); theta packed (nb, 1+3L).
     """
+    from repro.core.gamp import _quantized_channel
+
     L = n_components
-    m = y.shape[1]
+    m = codes.shape[1]
     n = ghat.shape[1]
-    nu_d = jnp.maximum(nu_d, _EPS)
+    al2 = alpha * alpha
+
+    nu_p = jnp.maximum(al2 / m * jnp.sum(nu_g, axis=1, keepdims=True), _EPS)
+    phat = alpha * (ghat @ a.T) - nu_p * shat
+
+    xpost, nu_x = _quantized_channel(phat, nu_p, codes, lo_tau, hi_tau)
+
+    shat_new = (xpost - phat) / nu_p
+    nu_s = jnp.maximum((1.0 - nu_x / nu_p) / nu_p, _EPS)
+    nu_r = 1.0 / jnp.maximum(al2 / m * jnp.sum(nu_s, axis=1, keepdims=True), _EPS)
+
+    rhat = ghat + nu_r * (alpha * (shat_new @ a))
+    gh, ng, th = _gm_input_and_em(rhat, nu_r, theta, n, L, em)
+    return gh, ng, shat_new, th
+
+
+def _gm_input_and_em(rhat, v, theta, n, L, em):
+    """Shared input-channel + EM tail of the two GAMP-step oracles."""
     lam0 = theta[:, 0:1]
     lam = theta[:, 1 : 1 + L]
     mu = theta[:, 1 + L : 1 + 2 * L]
     phi = theta[:, 1 + 2 * L : 1 + 3 * L]
-
-    nu_p = jnp.maximum(jnp.sum(nu_g, axis=1, keepdims=True) / m, _EPS)
-    phat = ghat @ a.T - nu_p * shat
-    xpost = (phat * nu_d + y * nu_p) / (nu_p + nu_d)
-    nu_x = nu_p * nu_d / (nu_p + nu_d)
-    shat_new = (xpost - phat) / nu_p
-    nu_s = jnp.maximum((1.0 - nu_x / nu_p) / nu_p, _EPS)
-    nu_r = 1.0 / nu_s
-
-    rhat = ghat + nu_r * (shat_new @ a)
     inv_sqrt_2pi = 0.3989422804014327
-    v = nu_r
     r3 = rhat[:, :, None]
     muc = mu[:, None, :]
     phic = phi[:, None, :]
@@ -106,4 +121,27 @@ def gamp_step_ref(ghat, nu_g, shat, theta, y, nu_d, a, n_components=3, em=True):
         )
     else:
         theta_new = theta
+    return ghat_new, nu_g_new, theta_new
+
+
+def gamp_step_ref(ghat, nu_g, shat, theta, y, nu_d, a, n_components=3, em=True):
+    """One scalar-variance AWGN EM-GAMP iteration (mirrors gamp_step kernel).
+
+    theta packed as [lam0 | lam_1..L | mu_1..L | phi_1..L], (nb, 1+3L).
+    """
+    L = n_components
+    m = y.shape[1]
+    n = ghat.shape[1]
+    nu_d = jnp.maximum(nu_d, _EPS)
+
+    nu_p = jnp.maximum(jnp.sum(nu_g, axis=1, keepdims=True) / m, _EPS)
+    phat = ghat @ a.T - nu_p * shat
+    xpost = (phat * nu_d + y * nu_p) / (nu_p + nu_d)
+    nu_x = nu_p * nu_d / (nu_p + nu_d)
+    shat_new = (xpost - phat) / nu_p
+    nu_s = jnp.maximum((1.0 - nu_x / nu_p) / nu_p, _EPS)
+    nu_r = 1.0 / nu_s
+
+    rhat = ghat + nu_r * (shat_new @ a)
+    ghat_new, nu_g_new, theta_new = _gm_input_and_em(rhat, nu_r, theta, n, L, em)
     return ghat_new, nu_g_new, shat_new, theta_new

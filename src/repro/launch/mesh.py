@@ -12,27 +12,27 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    # jax >= 0.5 wants explicit axis_types (Auto = GSPMD-partitioned); older
+    # jax (0.4.x) has no AxisType and every axis is implicitly auto.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_debug_mesh(pods: int = 2, data: int = 2, model: int = 2):
     """Small mesh for CPU integration tests (requires
     XLA_FLAGS=--xla_force_host_platform_device_count>=pods*data*model)."""
-    return jax.make_mesh(
-        (pods, data, model),
-        ("pod", "data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 3,
-    )
+    return _make_mesh((pods, data, model), ("pod", "data", "model"))
 
 
 def make_single_device_mesh():
     """1x1x1 mesh: lets every code path (shard_map, specs) run on one CPU."""
-    return jax.make_mesh(
-        (1, 1, 1), ("pod", "data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 3,
-    )
+    return _make_mesh((1, 1, 1), ("pod", "data", "model"))

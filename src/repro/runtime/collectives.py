@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from repro.core import bussgang
 from repro.core.compression import BQCSCodec, pack_codes, unpack_codes
 from repro.core.gamp import GampConfig, em_gamp
+from repro.core.reconstruction import estimate_and_aggregate
 from repro.models.sharding import cs
 
 __all__ = ["fedqcs_pod_allreduce"]
@@ -56,12 +57,23 @@ def fedqcs_pod_allreduce(
     codes = cs(codes, "blocks", None)
     new_residual = cs(new_residual, "blocks", None)
 
+    if cfg.recon_mode == "ea" and cfg.wire_mode != "gather_codes":
+        raise ValueError(
+            "recon_mode='ea' needs the per-worker codes on the PS side, i.e. "
+            "wire_mode='gather_codes' (see DESIGN.md)"
+        )
+
     if cfg.wire_mode == "gather_codes":
         words = pack_codes(codes, cfg.bits)  # (nb, W) uint32 -- the wire payload
         all_words = jax.lax.all_gather(words, axis_name)  # (K, nb, W)
         all_alpha = jax.lax.all_gather(alpha, axis_name)  # (K, nb)
-        k = all_words.shape[0]
         all_codes = jax.vmap(lambda w: unpack_codes(w, cfg.bits, m))(all_words)
+        if cfg.recon_mode == "ea":
+            # Estimate-and-aggregate: per-worker Q-EM-GAMP (fused kernel when
+            # cfg.use_kernels), then rho-weighted sum -- every pod solves the
+            # full K-batch redundantly, exactly like the AE branch below.
+            ghat = estimate_and_aggregate(codec, all_codes, all_alpha, rhos)
+            return cs(ghat, "blocks", None), new_residual
         y = bussgang.aggregate_codes(all_codes, all_alpha, rhos, codec.quantizer)
         nu = bussgang.effective_noise_var(all_alpha, rhos, codec.quantizer)
         energy = bussgang.signal_energy(all_alpha, rhos, m, n)
@@ -109,6 +121,14 @@ def fedqcs_vmapped_allreduce(
     codes = cs(codes, None, "blocks", None)
     new_residual = cs(new_residual, None, "blocks", None)
 
+    if cfg.recon_mode == "ea":
+        # Estimate-and-aggregate over the pod-sharded code batch: XLA lowers
+        # the (pods*nb)-row GAMP batch like any other auto-sharded compute.
+        # Note this trades away the psum_dequant wire advantage -- the
+        # per-pod codes are materialized on every pod (see DESIGN.md).
+        ghat = estimate_and_aggregate(codec, codes, alpha, rhos)
+        return cs(ghat, "blocks", None), new_residual
+
     # Bussgang-weighted sum over pods -> all-reduce over the pod axis.
     y = bussgang.aggregate_codes(codes, alpha, rhos, codec.quantizer)
     nu = bussgang.effective_noise_var(alpha, rhos, codec.quantizer)
@@ -140,6 +160,13 @@ def make_sharded_allreduce(codec: BQCSCodec, mesh, local_shapes, nbar_local: int
     from repro.models.sharding import use_rules
 
     cfg = codec.cfg
+    if cfg.recon_mode == "ea":
+        raise ValueError(
+            "recon_mode='ea' is not supported by the per-shard (auto_sharded) "
+            "path: it Bussgang-aggregates over the auto pod axis and never "
+            "materializes per-worker codes; use impl='auto' or 'shard_map' "
+            "with wire_mode='gather_codes' (see DESIGN.md)"
+        )
     n = cfg.block_size
 
     def body(residual, rhos, *grad_leaves):
@@ -171,19 +198,12 @@ def make_sharded_allreduce(codec: BQCSCodec, mesh, local_shapes, nbar_local: int
 
 def _reconstruct(y, nu, energy, codec: BQCSCodec) -> jnp.ndarray:
     cfg = codec.cfg
-    if cfg.use_kernels:
-        from repro.kernels import ops as kops
-
-        ghat = kops.gamp_ae_run(
-            y, nu, codec.a, energy,
-            n_components=cfg.gamp_components, iters=cfg.gamp_iters,
-        )
-    else:
-        gcfg = GampConfig(
-            n_components=cfg.gamp_components,
-            iters=cfg.gamp_iters,
-            variance_mode=cfg.gamp_variance_mode,
-            tol=0.0,  # static work inside the step
-        )
-        ghat = em_gamp(y, nu, codec.a, gcfg, init_var=energy)
+    gcfg = GampConfig(
+        n_components=cfg.gamp_components,
+        iters=cfg.gamp_iters,
+        variance_mode=cfg.gamp_variance_mode,
+        tol=0.0,  # static work inside the step
+    )
+    # em_gamp owns the kernel-dispatch rule (scalar variance, undamped).
+    ghat = em_gamp(y, nu, codec.a, gcfg, init_var=energy, use_pallas=cfg.use_kernels)
     return cs(ghat, "blocks", None)

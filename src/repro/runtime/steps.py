@@ -37,6 +37,7 @@ from repro.core.compression import (
 from repro.models import model as model_api
 from repro.models.sharding import ShardingRules, cs, param_specs, use_rules
 from repro.optim import adam
+from repro import jax_compat
 from repro.runtime.collectives import fedqcs_pod_allreduce, fedqcs_vmapped_allreduce
 
 _ROW_MULTIPLE = 512  # pad FedQCS block rows so (data, model) sharding is even
@@ -51,11 +52,11 @@ class _with_mesh:
         self._fn = fn
 
     def __call__(self, *args, **kwargs):
-        with jax.set_mesh(self._mesh):
+        with jax_compat.set_mesh(self._mesh):
             return self._fn(*args, **kwargs)
 
     def lower(self, *args, **kwargs):
-        with jax.set_mesh(self._mesh):
+        with jax_compat.set_mesh(self._mesh):
             return self._fn.lower(*args, **kwargs)
 
 
@@ -299,7 +300,7 @@ def make_train_step(
         body = make_sharded_allreduce(codec, mesh, local_shapes, nbar_local)
         res_spec = P(None, ("data", "model"), None)
         grad_in_specs = tuple(P(None, *s) for s in spec_leaves)
-        smap = jax.shard_map(
+        smap = jax_compat.shard_map(
             body,
             mesh=mesh,
             in_specs=(res_spec, P(), *grad_in_specs),
@@ -398,7 +399,7 @@ def make_train_step(
         return new_params, new_opt, new_residual[None], loss_mean
 
     def step_fn(state, batch):
-        smap = jax.shard_map(
+        smap = jax_compat.shard_map(
             pod_body,
             mesh=mesh,
             in_specs=(P(), P(), P(), P("pod"), P("pod"), _batch_pod_in_specs(batch)),

@@ -1,0 +1,48 @@
+"""Fallback shim for the optional ``hypothesis`` dev dependency.
+
+The property tests are decorated with ``@hypothesis.given(...)`` at module
+level, so a plain ``import hypothesis`` fails *collection* of the whole
+module when the package is absent.  Test modules instead do
+
+    try:
+        import hypothesis
+        import hypothesis.strategies as st
+    except ModuleNotFoundError:
+        from hypothesis_stub import hypothesis, st
+
+With the shim in place each property test body is replaced by a
+``pytest.importorskip("hypothesis")`` guard, so they skip cleanly (with the
+standard "could not import" reason) while every non-property test still runs.
+Install the real package via the ``dev`` extra in pyproject.toml.
+"""
+
+import pytest
+
+
+class _Strategies:
+    """st.integers(...), st.floats(...), ... -- arguments are never drawn."""
+
+    def __getattr__(self, name):
+        return lambda *args, **kwargs: None
+
+
+class _Hypothesis:
+    @staticmethod
+    def given(*_args, **_kwargs):
+        def decorate(fn):
+            def property_test_skipped():
+                pytest.importorskip("hypothesis")
+
+            property_test_skipped.__name__ = fn.__name__
+            property_test_skipped.__doc__ = fn.__doc__
+            return property_test_skipped
+
+        return decorate
+
+    @staticmethod
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+
+hypothesis = _Hypothesis()
+st = _Strategies()

@@ -1,11 +1,15 @@
 """Unit + property tests for the FedQCS core library."""
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:  # optional dev dependency (pyproject [dev] extra)
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:  # property tests skip via importorskip
+    from hypothesis_stub import hypothesis, st
 
 from repro.core import api, bussgang, sensing, sparsify
 from repro.core.compression import (
