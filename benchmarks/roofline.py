@@ -28,7 +28,6 @@ and the usefulness ratio MODEL/HLO.
 """
 
 import argparse
-import dataclasses
 import json
 import sys
 import time

@@ -1,10 +1,13 @@
 """Benchmark harness: one function per paper table/figure + kernel micros.
 
     PYTHONPATH=src python -m benchmarks.run            # fast mode
+    PYTHONPATH=src python benchmarks/run.py --fast     # same, script form (CI)
     PYTHONPATH=src python -m benchmarks.run --full     # paper-scale horizons
     PYTHONPATH=src python -m benchmarks.run --only fig3,table1
 
-Prints ``name,us_per_call,derived`` CSV; full traces land in runs/bench/.
+Prints ``name,us_per_call,derived`` CSV; full traces land in runs/bench/ as
+``BENCH_*.json`` files whose entries all carry the ``name`` / ``wall_ms`` /
+``derived`` keys (the schema CI's bench-smoke job validates).
 """
 
 from __future__ import annotations
@@ -16,10 +19,21 @@ import sys
 import time
 import traceback
 
-BENCH_GAMP_JSON = os.path.join(
-    os.path.dirname(os.path.abspath(__file__)), os.pardir, "runs", "bench",
-    "BENCH_gamp.json",
+_BENCH_DIR = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), os.pardir, "runs", "bench"
 )
+BENCH_GAMP_JSON = os.path.join(_BENCH_DIR, "BENCH_gamp.json")
+BENCH_ENCODE_JSON = os.path.join(_BENCH_DIR, "BENCH_encode.json")
+
+
+def _write_bench_json(path: str, bench: str, entries: list) -> None:
+    """Writes one BENCH_*.json; every entry must already carry the schema
+    keys (name / wall_ms / derived)."""
+    for e in entries:
+        assert {"name", "wall_ms", "derived"} <= set(e), e
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"bench": bench, "entries": entries}, f, indent=2)
 
 
 def kernel_micro(fast=True):
@@ -118,22 +132,105 @@ def gamp_ea_vs_ae(fast=True):
         derived = f"nb={nb};N={n};M={cfg.m};iters={iters}"
         rows.append(f"gamp[{name}],{us:.1f},{derived}")
         entries.append({
-            "name": name, "us_per_call": round(us, 1), "nb": nb, "n": n,
-            "m": cfg.m, "iters": iters, "backend": jax.default_backend(),
+            "name": name, "wall_ms": round(us / 1e3, 3), "us_per_call": round(us, 1),
+            "derived": derived, "nb": nb, "n": n, "m": cfg.m, "iters": iters,
+            "backend": jax.default_backend(),
             "interpret": jax.default_backend() != "tpu",
         })
-    os.makedirs(os.path.dirname(BENCH_GAMP_JSON), exist_ok=True)
-    with open(BENCH_GAMP_JSON, "w") as f:
-        json.dump({"bench": "gamp_ea_vs_ae", "entries": entries}, f, indent=2)
+    _write_bench_json(BENCH_GAMP_JSON, "gamp_ea_vs_ae", entries)
     rows.append(f"gamp[json],0,{os.path.relpath(BENCH_GAMP_JSON)}")
+    return rows
+
+
+def encode_fused_vs_unfused(fast=True):
+    """Worker-side encode path: the single-pass fused kernel (EF add + top-S
+    + project + quantize + uint32 pack, one VMEM residency) vs the unfused
+    two-kernel + XLA-pack pipeline it replaces, vs the pure-XLA stage
+    composition.  Records wire accounting (packed words vs the int32 codes
+    the pre-packed wire shipped) in runs/bench/BENCH_encode.json
+    (EXPERIMENTS.md #Perf)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import sensing, sparsify
+    from repro.core.compression import pack_codes
+    from repro.core.quantizer import design_lloyd_max, encode
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    nb, n, r, q = (128 if fast else 1024), 1024, 4, 2
+    m = n // r
+    s = n // 10
+    blocks = jnp.asarray(rng.normal(0, 1, (nb, n)), jnp.float32)
+    resid = jnp.asarray(rng.normal(0, 0.1, (nb, n)), jnp.float32)
+    a = sensing.sensing_matrix(jax.random.PRNGKey(0), m, n)
+    a_t = a.T
+    quant = design_lloyd_max(q)
+
+    # jit all three cases so the comparison is end-to-end traced computations
+    # (the fused driver's transpose/pad/trim plumbing must not be timed as
+    # eager per-call dispatch while the baselines are fully jitted).
+    @jax.jit
+    def fused(b, res):
+        return ops.bqcs_encode_fused(b, res, a, quant, s)
+
+    @jax.jit
+    def unfused_kernels(b, res):
+        sparse, new_res = ops.block_sparsify(b + res, s)
+        codes, alpha = ops.bqcs_encode(sparse, a, quant)
+        return pack_codes(codes, q), alpha, new_res
+
+    @jax.jit
+    def unfused_xla(b, res):
+        sparse, new_res = sparsify.block_sparsify_threshold(b + res, s)
+        x, alpha = sensing.project_blocks(sparse, a_t)
+        return pack_codes(encode(x, quant), q), alpha, new_res
+
+    words, _, _ = jax.block_until_ready(fused(blocks, resid))
+    packed_bytes = words.size * 4 + nb * 4  # words + alphas: the actual wire
+    int32_bytes = nb * m * 4 + nb * 4  # what the pre-packed wire shipped
+    cases = {
+        "encode_fused[bqcs_encode_fused]": fused,
+        "encode_unfused[block_topk+bqcs_encode+pack]": unfused_kernels,
+        "encode_unfused_xla[sparsify+project+encode+pack]": unfused_xla,
+    }
+    rows, entries = [], []
+    for name, fn in cases.items():
+        jax.block_until_ready(fn(blocks, resid))  # compile
+        t0 = time.time()
+        reps = 5
+        for _ in range(reps):
+            jax.block_until_ready(fn(blocks, resid))
+        us = 1e6 * (time.time() - t0) / reps
+        derived = (
+            f"nb={nb};N={n};M={m};Q={q};S={s};"
+            f"wire_bytes={packed_bytes};int32_wire_bytes={int32_bytes}"
+        )
+        rows.append(f"encode[{name}],{us:.1f},{derived}")
+        entries.append({
+            "name": name, "wall_ms": round(us / 1e3, 3), "us_per_call": round(us, 1),
+            "derived": derived, "nb": nb, "n": n, "m": m, "q": q, "s": s,
+            "wire_bytes": packed_bytes, "int32_wire_bytes": int32_bytes,
+            "wire_ratio": round(int32_bytes / packed_bytes, 2),
+            "backend": jax.default_backend(),
+            "interpret": jax.default_backend() != "tpu",
+        })
+    _write_bench_json(BENCH_ENCODE_JSON, "encode_fused_vs_unfused", entries)
+    rows.append(f"encode[json],0,{os.path.relpath(BENCH_ENCODE_JSON)}")
     return rows
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale horizons (default is fast mode)")
+    ap.add_argument("--fast", action="store_true",
+                    help="explicit fast mode (the default; what CI runs)")
     ap.add_argument("--only", default="")
     args = ap.parse_args()
+    if args.full and args.fast:
+        ap.error("--full and --fast are mutually exclusive")
     fast = not args.full
 
     from benchmarks import paper_figs
@@ -147,6 +244,7 @@ def main() -> None:
         "table1": paper_figs.table1_complexity,
         "kernels": kernel_micro,
         "gamp": gamp_ea_vs_ae,
+        "encode": encode_fused_vs_unfused,
     }
     selected = [s for s in args.only.split(",") if s] or list(benches)
     print("name,us_per_call,derived")
@@ -163,4 +261,10 @@ def main() -> None:
 
 
 if __name__ == "__main__":
+    # Script form (`python benchmarks/run.py`): sys.path[0] is benchmarks/,
+    # so the `benchmarks` package itself is not importable -- add the repo
+    # root (the `-m benchmarks.run` form needs no help).
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if _root not in sys.path:
+        sys.path.insert(0, _root)
     main()

@@ -49,7 +49,10 @@ def main():
         p, spec, states[i] = api.compress(codec, workers[i], states[i])
         payloads.append(p)
     rhos = [1.0 / k] * k
-    bits = payloads[0].wire_bits(cfg.bits)
+    # payload.codes IS the wire format (packed uint32 words); wire_bits is
+    # derived from the actual word count, alphas included.
+    bits = payloads[0].wire_bits()
+    assert payloads[0].codes.dtype == jnp.uint32
     print(f"wire: {bits} bits/worker/round = {bits / n_entries:.3f} bits/entry")
 
     truth = jax.tree.map(lambda *xs: sum(r * x for r, x in zip(rhos, xs)), *workers)

@@ -15,7 +15,7 @@ which uses the same codec under shard_map.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Sequence
+from typing import Any, Sequence
 
 import jax.numpy as jnp
 
@@ -24,7 +24,7 @@ from repro.core.compression import (
     CompressedGradient,
     FedQCSConfig,
     blocks_to_tree,
-    flatten_to_blocks,
+    unpack_codes,
 )
 from repro.core.reconstruction import aggregate_and_estimate, estimate_and_aggregate
 
@@ -55,7 +55,10 @@ def init_state(codec: BQCSCodec, grads_template: Any) -> CompressorState:
 
 
 def compress(codec: BQCSCodec, grads: Any, state: CompressorState):
-    """Worker side: returns (CompressedGradient, tree-spec, new state)."""
+    """Worker side: returns (CompressedGradient, tree-spec, new state).
+
+    The payload's ``codes`` are bit-packed uint32 words -- the actual wire
+    format; :func:`reconstruct` unpacks them at the PS boundary."""
     payload, spec, new_res = codec.compress_tree(grads, state.residual)
     return payload, spec, CompressorState(residual=new_res)
 
@@ -77,7 +80,8 @@ def reconstruct(
     'scalar'`` (the kernels implement scalar-variance GAMP; exact-variance
     configs keep the XLA path -- see DESIGN.md).
     """
-    codes = jnp.stack([p.codes for p in payloads])
+    # PS boundary: the payloads carry packed uint32 words; unpack here, once.
+    codes = jnp.stack([unpack_codes(p.codes, p.bits, p.m) for p in payloads])
     alphas = jnp.stack([p.alpha for p in payloads])
     rhos = jnp.asarray(rhos, jnp.float32)
     if mode == "ea":

@@ -13,13 +13,12 @@ benchmark harness can swap them in one line.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import sensing, sparsify
-from repro.core.quantizer import LloydMaxQuantizer, decode, design_lloyd_max, encode, quantize
+from repro.core import sparsify
+from repro.core.quantizer import LloydMaxQuantizer, decode, quantize
 
 __all__ = [
     "signsgd_compress",

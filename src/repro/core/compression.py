@@ -9,8 +9,10 @@ Pipeline per step, per worker/pod:
       -> Lloyd-Max Q-bit encode  (eq. 10)
       -> bit-pack codes into uint32 words (the wire payload)
 
-Wire cost per step per worker: nblocks * (M*Q bits + 32 bits for alpha)
-  ~= Q/R bits per gradient entry (Sec. III-B).
+Wire cost per step per worker: nblocks * (W*32 bits + 32 bits for alpha),
+  W = ceil(M / (32//Q)) packed words -- ~= Q/R bits per gradient entry
+  (Sec. III-B), exactly M*Q bits whenever Q divides 32
+  (CompressedGradient.wire_bits derives this from the actual word count).
 
 The codec is stateless except for the error-feedback residual, which the
 caller owns (it lives in the TrainState so it is checkpointed).
@@ -28,7 +30,16 @@ import numpy as np
 from repro.core import sensing, sparsify
 from repro.core.quantizer import LloydMaxQuantizer, design_lloyd_max, encode, decode
 
-__all__ = ["FedQCSConfig", "BQCSCodec", "CompressedGradient", "flatten_to_blocks", "blocks_to_tree"]
+__all__ = [
+    "FedQCSConfig",
+    "BQCSCodec",
+    "CompressedGradient",
+    "flatten_to_blocks",
+    "blocks_to_tree",
+    "pack_codes",
+    "unpack_codes",
+    "packed_width",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,15 +84,26 @@ class FedQCSConfig:
 
 @dataclasses.dataclass
 class CompressedGradient:
-    """The wire payload of one worker for one step."""
+    """The wire payload of one worker for one step.
 
-    codes: jnp.ndarray  # (nblocks, M) uint8 indices (or packed words)
+    ``codes`` is *packed*: uint32 words holding Q-bit Lloyd-Max indices in
+    the canonical lane-group layout (see :func:`pack_codes`), not the uint8
+    index view -- what crosses the wire is what this object carries.
+    """
+
+    codes: jnp.ndarray  # (nblocks, W) uint32 packed words, W = packed_width(M, Q)
     alpha: jnp.ndarray  # (nblocks,) f32 scales
     nbar: int  # original flat length (for unpadding)
+    m: int  # measurements per block (for unpacking)
+    bits: int  # Q
 
-    def wire_bits(self, bits: int) -> int:
-        nb, m = self.codes.shape[:2]
-        return nb * (m * bits + 32)
+    def wire_bits(self) -> int:
+        """Actual bits on the wire, derived from the true packed word count:
+        nb * (W * 32 + 32 for alpha).  Counting ``M * Q`` instead would be
+        wrong whenever Q does not divide 32 -- Q=3 packs 10 codes per word,
+        so each word carries 2 slack bits that still cross the wire."""
+        nb, w = self.codes.shape[:2]
+        return nb * (w * 32 + 32)
 
 
 # ---------------------------------------------------------------------------
@@ -143,27 +165,41 @@ def blocks_to_tree(blocks: jnp.ndarray, spec: Any, nbar: int) -> Any:
 # ---------------------------------------------------------------------------
 
 
-def pack_codes(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
-    """Packs Q-bit indices into uint32 words, little-endian within the word.
+def packed_width(m: int, bits: int) -> int:
+    """uint32 words per block row on the wire: W = ceil(M / (32 // Q))."""
+    return -(-m // (32 // bits))
 
-    (nb, M) uint8 -> (nb, ceil(M / per_word)) uint32, per_word = 32 // bits.
+
+def pack_codes(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Packs Q-bit indices into uint32 words -- the canonical wire layout.
+
+    Lane-group interleaved (DESIGN.md #Wire-format): with per_word = 32 //
+    bits and W = ceil(M / per_word), measurement ``m`` lives in word
+    ``m % W`` at bit offset ``(m // W) * bits``, i.e. word ``w`` holds
+    measurements ``{w, W + w, 2W + w, ...}``.  This is the layout the fused
+    encoder kernel emits with contiguous static lane-group shifts (a
+    consecutive-codes-per-word layout would need an in-kernel transpose).
+
+    (nb, M) uint8 -> (nb, W) uint32.
     """
     per_word = 32 // bits
     nb, m = codes.shape
-    pad = (-m) % per_word
+    w = packed_width(m, bits)
+    pad = w * per_word - m
     if pad:
         codes = jnp.concatenate([codes, jnp.zeros((nb, pad), codes.dtype)], axis=1)
-    grouped = codes.reshape(nb, -1, per_word).astype(jnp.uint32)
-    shifts = (jnp.arange(per_word, dtype=jnp.uint32) * bits)[None, None, :]
-    return jnp.sum(grouped << shifts, axis=-1).astype(jnp.uint32)
+    grouped = codes.reshape(nb, per_word, w).astype(jnp.uint32)
+    shifts = (jnp.arange(per_word, dtype=jnp.uint32) * bits)[None, :, None]
+    # Disjoint bit ranges per group, so the OR-accumulate is a plain sum.
+    return jnp.sum(grouped << shifts, axis=1).astype(jnp.uint32)
 
 
 def unpack_codes(words: jnp.ndarray, bits: int, m: int) -> jnp.ndarray:
-    """Inverse of :func:`pack_codes` -> (nb, m) uint8."""
+    """Inverse of :func:`pack_codes`: (nb, W) uint32 -> (nb, m) uint8."""
     per_word = 32 // bits
-    shifts = (jnp.arange(per_word, dtype=jnp.uint32) * bits)[None, None, :]
+    shifts = (jnp.arange(per_word, dtype=jnp.uint32) * bits)[None, :, None]
     mask = jnp.uint32((1 << bits) - 1)
-    out = ((words[..., None] >> shifts) & mask).astype(jnp.uint8)
+    out = ((words[:, None, :] >> shifts) & mask).astype(jnp.uint8)
     return out.reshape(words.shape[0], -1)[:, :m]
 
 
@@ -191,28 +227,53 @@ class BQCSCodec:
         return self._a
 
     # -- encode ------------------------------------------------------------
-    def compress_blocks(self, blocks: jnp.ndarray, residual: jnp.ndarray):
-        """(blocks + residual) -> (codes, alpha, new_residual).  Eqs. 7-10."""
+    def compress_blocks_packed(self, blocks: jnp.ndarray, residual: jnp.ndarray):
+        """(blocks + residual) -> (words, alpha, new_residual).  Eqs. 7-10
+        plus the wire packing: ``words`` is the (nb, W) uint32 payload in the
+        canonical :func:`pack_codes` layout -- this is what crosses the wire.
+
+        With ``use_kernels`` the whole pipeline (error-feedback add, top-S,
+        projection, quantization, packing) is ONE fused Pallas pass; the XLA
+        path composes the stage functions and packs last.
+        """
         cfg = self.cfg
-        carry = blocks + residual
         if cfg.use_kernels:
             from repro.kernels import ops as kops
 
-            sparse, new_residual = kops.block_sparsify(carry, cfg.s)
-            codes, alpha = kops.bqcs_encode(sparse, self._a, self.quantizer)
+            return kops.bqcs_encode_fused(
+                blocks, residual, self._a, self.quantizer, cfg.s
+            )
+        codes, alpha, new_residual = self._compress_blocks_xla(blocks, residual)
+        return pack_codes(codes, cfg.bits), alpha, new_residual
+
+    def compress_blocks(self, blocks: jnp.ndarray, residual: jnp.ndarray):
+        """(blocks + residual) -> (codes, alpha, new_residual).  Eqs. 7-10.
+
+        Unpacked uint8-index view of :meth:`compress_blocks_packed` for
+        PS-side math and analysis; the kernel route still runs the fused
+        single-pass encoder and unpacks the words it emits.
+        """
+        cfg = self.cfg
+        if cfg.use_kernels:
+            words, alpha, new_residual = self.compress_blocks_packed(blocks, residual)
+            return unpack_codes(words, cfg.bits, cfg.m), alpha, new_residual
+        return self._compress_blocks_xla(blocks, residual)
+
+    def _compress_blocks_xla(self, blocks: jnp.ndarray, residual: jnp.ndarray):
+        cfg = self.cfg
+        carry = blocks + residual
+        if cfg.sparsifier == "bisect":
+            sparse, new_residual = sparsify.block_sparsify_threshold(carry, cfg.s)
         else:
-            if cfg.sparsifier == "bisect":
-                sparse, new_residual = sparsify.block_sparsify_threshold(carry, cfg.s)
-            else:
-                sparse, new_residual = sparsify.block_sparsify(carry, cfg.s)
-            x, alpha = sensing.project_blocks(sparse, self._a.T)
-            codes = encode(x, self.quantizer)
-        return codes, alpha, new_residual
+            sparse, new_residual = sparsify.block_sparsify(carry, cfg.s)
+        x, alpha = sensing.project_blocks(sparse, self._a.T)
+        return encode(x, self.quantizer), alpha, new_residual
 
     def compress_tree(self, grads: Any, residual_blocks: jnp.ndarray):
         blocks, spec, nbar = flatten_to_blocks(grads, self.cfg.block_size)
-        codes, alpha, new_res = self.compress_blocks(blocks, residual_blocks)
-        return CompressedGradient(codes, alpha, nbar), spec, new_res
+        words, alpha, new_res = self.compress_blocks_packed(blocks, residual_blocks)
+        payload = CompressedGradient(words, alpha, nbar, self.cfg.m, self.cfg.bits)
+        return payload, spec, new_res
 
     def zero_residual(self, grads_like: Any) -> jnp.ndarray:
         blocks, _, _ = flatten_to_blocks(grads_like, self.cfg.block_size)

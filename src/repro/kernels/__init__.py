@@ -1,9 +1,11 @@
 """Pallas TPU kernels for FedQCS hot spots (validated in interpret mode).
 
-Kernels: bqcs_encode (fused scale+project+quantize), block_topk (bisection
-top-S sparsify), gamp_step (fused AWGN EM-GAMP iteration, AE path),
-qgamp_step (fused quantized-channel Q-EM-GAMP iteration, EA path).  The
-Bernoulli-GM input channel + EM refresh shared by the two GAMP kernels live
-in gm_prior.py.  Public entry points live in ops.py; pure-jnp oracles in
-ref.py.
+Kernels: bqcs_encode_fused (the single-pass worker compressor: error
+feedback + top-S + scale/project/quantize + uint32 wire packing -- the
+production encode path), bqcs_encode (scale+project+quantize stage),
+block_topk (bisection top-S sparsify stage), gamp_step (fused AWGN EM-GAMP
+iteration, AE path), qgamp_step (fused quantized-channel Q-EM-GAMP
+iteration, EA path).  The Bernoulli-GM input channel + EM refresh shared by
+the two GAMP kernels live in gm_prior.py.  Public entry points live in
+ops.py; pure-jnp oracles in ref.py.
 """

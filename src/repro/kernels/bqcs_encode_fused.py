@@ -1,0 +1,141 @@
+"""Pallas TPU kernel: single-pass fused BQCS encoder (paper Sec. III, eqs. 7-10).
+
+One kernel, one VMEM residency per (TB, N) tile, doing the complete
+worker-side compressor *including the wire packing*:
+
+    carry  = blocks + residual                 (error feedback, eq. 8)
+    sparse = TopS(carry)                       (bisection threshold, eq. 7)
+    resid  = carry - sparse                    (new error-feedback state)
+    alpha  = sqrt(M) / ||sparse||              (row reduction, eq. 9)
+    y      = alpha * (sparse @ A^T)            (MXU GEMM)
+    code   = #{tau_j < y}                      (Lloyd-Max bucketize, eq. 10)
+    word   = OR_j  code[group j] << (j * Q)    (uint32 packing, the wire)
+
+The unfused path runs this as two kernels (block_topk, bqcs_encode) plus an
+XLA pack pass, which round-trips the (nb, N) carry, sparse, and residual
+arrays AND the (nb, M) int32 codes through HBM between stages.  Fusing
+removes three full-gradient HBM round trips and emits the Q-bit wire payload
+directly, so nothing wider than the true wire format ever leaves the kernel.
+
+Packing layout (the canonical wire format, see DESIGN.md #Wire-format): the
+Mp = W * per_word measurement lanes (per_word = 32 // Q, W = ceil(M /
+per_word), A^T zero-padded to Mp columns) are split into per_word contiguous
+*lane groups* of width W; group j is shifted by j*Q bits and OR-accumulated
+into the (TB, W) word tile.  Measurement m therefore lives in word ``m % W``
+at bit offset ``(m // W) * Q`` -- contiguous static lane slices only, no
+in-kernel transpose or gather.  ``core.compression.pack_codes`` implements
+the identical layout for the XLA path.
+
+Grid: one program per TB-row tile of (nblocks, N).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TB = 128  # block-rows per program
+BISECT_ITERS = 26  # matches block_topk.py (threshold ~1e-7 of dynamic range)
+
+
+def _fused_kernel(
+    g_ref, r_ref, at_ref, tau_ref, words_ref, alpha_ref, resid_ref,
+    *, s: int, iters: int, m: int, bits: int,
+):
+    carry = g_ref[...] + r_ref[...]  # (TB, N) error-feedback add
+
+    # -- bisection top-S threshold (same math + trip count as block_topk) --
+    mag = jnp.abs(carry)
+    hi = jnp.max(mag, axis=1, keepdims=True)  # (TB, 1)
+    lo = jnp.zeros_like(hi)
+
+    def body(_, c):
+        lo, hi = c
+        mid = 0.5 * (lo + hi)
+        count = jnp.sum((mag >= mid).astype(jnp.int32), axis=1, keepdims=True)
+        too_many = count > s
+        return jnp.where(too_many, mid, lo), jnp.where(too_many, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    keep = (mag >= hi) | (mag == jnp.max(mag, axis=1, keepdims=True))
+    sparse = jnp.where(keep, carry, 0.0)
+    resid_ref[...] = carry - sparse
+
+    # -- norm/scale + MXU projection + threshold bucketize --
+    sq = jnp.sum(sparse * sparse, axis=1, keepdims=True)  # (TB, 1)
+    alive = sq > 1e-30
+    inv_norm = jax.lax.rsqrt(jnp.where(alive, sq, 1.0))
+    alpha = jnp.where(alive, jnp.sqrt(jnp.float32(m)) * inv_norm, 0.0)
+    y = jax.lax.dot_general(
+        sparse * alpha,
+        at_ref[...],  # (N, Mp)
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (TB, Mp)
+    taus = tau_ref[...]  # (2^Q - 1,)
+    codes = jnp.sum(
+        (y[:, :, None] > taus[None, None, :]).astype(jnp.int32), axis=-1
+    )  # (TB, Mp), values in [0, 2^Q)
+    mp = codes.shape[1]
+    if mp != m:
+        # Zero the measurement lanes added by word-padding A^T so the padded
+        # word bits match pack_codes' zero fill bit-exactly.
+        lane = jax.lax.broadcasted_iota(jnp.int32, codes.shape, 1)
+        codes = jnp.where(lane < m, codes, 0)
+
+    # -- shift-accumulate pack over the 32 // Q lane groups --
+    per_word = 32 // bits
+    w = mp // per_word
+    codes = codes.astype(jnp.uint32)
+    words = codes[:, 0:w]
+    for j in range(1, per_word):
+        words = words | (codes[:, j * w : (j + 1) * w] << jnp.uint32(j * bits))
+    words_ref[...] = words
+    alpha_ref[...] = alpha
+
+
+@functools.partial(jax.jit, static_argnames=("s", "m", "bits", "tb", "iters", "interpret"))
+def bqcs_encode_fused_pallas(
+    blocks: jnp.ndarray,  # (nb, N) f32, nb % tb == 0
+    residual: jnp.ndarray,  # (nb, N) f32 error-feedback state
+    a_t: jnp.ndarray,  # (N, Mp) f32, Mp = W * (32 // Q) zero-padded columns
+    taus: jnp.ndarray,  # (2^Q - 1,) f32 Lloyd-Max thresholds
+    s: int,
+    m: int,  # true measurement count M <= Mp
+    bits: int,  # Q
+    tb: int = DEFAULT_TB,
+    iters: int = BISECT_ITERS,
+    interpret: bool = False,
+):
+    nb, n = blocks.shape
+    mp = a_t.shape[1]
+    per_word = 32 // bits
+    assert nb % tb == 0, (nb, tb)
+    assert mp % per_word == 0, (mp, per_word)
+    w = mp // per_word
+    kernel = functools.partial(_fused_kernel, s=s, iters=iters, m=m, bits=bits)
+    words, alpha, resid = pl.pallas_call(
+        kernel,
+        grid=(nb // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),  # gradient tile
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),  # residual tile
+            pl.BlockSpec((n, mp), lambda i: (0, 0)),  # A^T, resident
+            pl.BlockSpec((taus.shape[0],), lambda i: (0,)),  # thresholds
+        ],
+        out_specs=[
+            pl.BlockSpec((tb, w), lambda i: (i, 0)),
+            pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, w), jnp.uint32),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nb, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(blocks, residual, a_t, taus)
+    return words, alpha[:, 0], resid

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro.core.gamp import block_prior_energy, norm_guard, tau_tables
 from repro.core.quantizer import LloydMaxQuantizer
 from repro.kernels import bqcs_encode as _enc
+from repro.kernels import bqcs_encode_fused as _fenc
 from repro.kernels import block_topk as _topk
 from repro.kernels import gamp_step as _gstep
 from repro.kernels import gm_prior as _gm
@@ -62,6 +63,46 @@ def bqcs_encode(
         padded, a.T, quantizer.jnp_thresholds(), tb=tb, interpret=_interpret()
     )
     return codes[:nb].astype(jnp.uint8), alpha[:nb]
+
+
+def bqcs_encode_fused(
+    blocks: jnp.ndarray,
+    residual: jnp.ndarray,
+    a: jnp.ndarray,
+    quantizer: LloydMaxQuantizer,
+    s: int,
+    tb: int | None = None,
+):
+    """Single-pass fused encoder: error-feedback add -> bisection top-S ->
+    scale/project/bucketize -> uint32 wire packing, one VMEM residency.
+
+    blocks/residual (nb, N), a (M, N).  Pads rows once to the tile multiple
+    and A^T's columns once to the word multiple (32 // Q); zero fill is
+    benign for both (dead rows get alpha=0; padded measurement lanes are
+    masked to code 0 in-kernel).
+
+    Returns (words uint32 (nb, W), alpha (nb,), new_residual (nb, N)) with
+    W = ceil(M / (32 // Q)) -- the canonical packed wire layout of
+    ``core.compression.pack_codes``.
+    """
+    from repro.core.compression import packed_width
+
+    bits = quantizer.bits
+    per_word = 32 // bits
+    m, n = a.shape
+    w = packed_width(m, bits)  # the single wire-width definition
+    a_t = a.T
+    pad_m = w * per_word - m
+    if pad_m:
+        a_t = jnp.concatenate([a_t, jnp.zeros((n, pad_m), a_t.dtype)], axis=1)
+    tb = tb or min(_fenc.DEFAULT_TB, max(8, blocks.shape[0]))
+    padded_b, nb = _pad_rows(blocks.astype(jnp.float32), tb)
+    padded_r, _ = _pad_rows(residual.astype(jnp.float32), tb)
+    words, alpha, resid = _fenc.bqcs_encode_fused_pallas(
+        padded_b, padded_r, a_t, quantizer.jnp_thresholds(),
+        s=s, m=m, bits=bits, tb=tb, interpret=_interpret(),
+    )
+    return words[:nb], alpha[:nb], resid[:nb]
 
 
 def block_sparsify(blocks: jnp.ndarray, s: int, tb: int | None = None):

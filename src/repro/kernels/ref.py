@@ -27,6 +27,30 @@ def bqcs_encode_ref(blocks: jnp.ndarray, a_t: jnp.ndarray, taus: jnp.ndarray):
     return codes, alpha[:, 0]
 
 
+def bqcs_encode_fused_ref(
+    blocks: jnp.ndarray,
+    residual: jnp.ndarray,
+    a_t: jnp.ndarray,
+    taus: jnp.ndarray,
+    s: int,
+    bits: int,
+    iters: int = 26,
+):
+    """Single-pass fused encoder oracle: error-feedback add -> bisection
+    top-S -> scale/project/bucketize -> lane-group uint32 packing.
+
+    Composes the two stage oracles plus ``core.compression.pack_codes`` so
+    the packed wire layout has exactly one jnp definition.  Returns
+    (words uint32 (nb, W), alpha (nb,), new_residual (nb, N)).
+    """
+    from repro.core.compression import pack_codes
+
+    carry = blocks + residual
+    sparse, resid = block_topk_ref(carry, s, iters=iters)
+    codes, alpha = bqcs_encode_ref(sparse, a_t, taus)
+    return pack_codes(codes.astype(jnp.uint8), bits), alpha, resid
+
+
 def block_topk_ref(blocks: jnp.ndarray, s: int, iters: int = 26):
     """Bisection-threshold top-S (mirrors block_topk kernel, incl. ties)."""
     mag = jnp.abs(blocks)

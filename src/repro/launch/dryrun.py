@@ -22,9 +22,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding
-from jax.sharding import PartitionSpec as P
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "..", "benchmarks"))
 
@@ -32,7 +29,6 @@ from repro.configs.registry import ARCHS, get_config
 from repro.core.compression import FedQCSConfig
 from repro.launch.mesh import make_production_mesh
 from repro.models import model as model_api
-from repro.models.sharding import param_specs
 from repro.optim.adam import OptConfig
 from repro.runtime import steps
 

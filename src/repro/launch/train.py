@@ -19,7 +19,6 @@ import argparse  # noqa: E402
 import time  # noqa: E402
 
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
 from repro.checkpoint.checkpointer import Checkpointer  # noqa: E402
 from repro.configs.registry import ARCHS, get_config, smoke_config  # noqa: E402

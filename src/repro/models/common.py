@@ -8,7 +8,6 @@ activation tensors pass through logical sharding constraints (sharding.cs).
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional, Tuple
 
 import jax

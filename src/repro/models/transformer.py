@@ -8,7 +8,7 @@ and compile time independent of depth.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +30,6 @@ from repro.models.common import (
     rms_norm,
     softmax_cross_entropy,
 )
-from repro.models.sharding import cs
 
 
 # ---------------------------------------------------------------------------

@@ -14,7 +14,7 @@ leaf shape so PartitionSpecs transfer unchanged).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

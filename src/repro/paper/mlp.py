@@ -12,16 +12,15 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import api, baselines, bussgang
+from repro.core import baselines
 from repro.core.compression import BQCSCodec, FedQCSConfig, blocks_to_tree, flatten_to_blocks
-from repro.core.gamp import GampConfig, em_gamp, qem_gamp
-from repro.core.sparsify import block_sparsify
+from repro.core.gamp import GampConfig, qem_gamp
 from repro.data import mnist
 from repro.optim.adam import OptConfig, init_state, update
 

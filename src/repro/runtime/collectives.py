@@ -7,7 +7,10 @@ in-pod mesh).  Two wire modes:
 
   * gather_codes (paper-faithful): all_gather the *bit-packed* Q-bit codes +
     the f32 alphas across pods -> every pod Bussgang-aggregates and runs
-    EM-GAMP redundantly.  Cross-pod bytes/step = pods * nb * (M*Q/8 + 4).
+    EM-GAMP redundantly.  The packed uint32 words come straight out of the
+    (fused) encoder -- nothing wider than the wire format crosses the pod
+    axis, and unpacking happens exactly once, at the PS boundary after the
+    gather.  Cross-pod bytes/step = pods * nb * (W*4 + 4), W = ceil(M*Q/32).
   * psum_dequant (scales to many pods): each pod locally dequantizes and
     Bussgang-weights its codes; a single psum over 'pod' produces the
     aggregate observation directly.  Cross-pod bytes ~ nb * M * 4 (ring),
@@ -26,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bussgang
-from repro.core.compression import BQCSCodec, pack_codes, unpack_codes
+from repro.core.compression import BQCSCodec, unpack_codes
 from repro.core.gamp import GampConfig, em_gamp
 from repro.core.reconstruction import estimate_and_aggregate
 from repro.models.sharding import cs
@@ -53,10 +56,6 @@ def fedqcs_pod_allreduce(
     rhos = alive / total  # (K,) server-side weights
     rho_self = part / total
 
-    codes, alpha, new_residual = codec.compress_blocks(blocks + 0.0, residual)
-    codes = cs(codes, "blocks", None)
-    new_residual = cs(new_residual, "blocks", None)
-
     if cfg.recon_mode == "ea" and cfg.wire_mode != "gather_codes":
         raise ValueError(
             "recon_mode='ea' needs the per-worker codes on the PS side, i.e. "
@@ -64,9 +63,14 @@ def fedqcs_pod_allreduce(
         )
 
     if cfg.wire_mode == "gather_codes":
-        words = pack_codes(codes, cfg.bits)  # (nb, W) uint32 -- the wire payload
+        # The encoder emits the packed uint32 wire words directly (one fused
+        # Pallas pass when cfg.use_kernels); no separate pack stage.
+        words, alpha, new_residual = codec.compress_blocks_packed(blocks + 0.0, residual)
+        words = cs(words, "blocks", None)
+        new_residual = cs(new_residual, "blocks", None)
         all_words = jax.lax.all_gather(words, axis_name)  # (K, nb, W)
         all_alpha = jax.lax.all_gather(alpha, axis_name)  # (K, nb)
+        # PS boundary: the only place the Q-bit indices are materialized.
         all_codes = jax.vmap(lambda w: unpack_codes(w, cfg.bits, m))(all_words)
         if cfg.recon_mode == "ea":
             # Estimate-and-aggregate: per-worker Q-EM-GAMP (fused kernel when
@@ -77,7 +81,10 @@ def fedqcs_pod_allreduce(
         y = bussgang.aggregate_codes(all_codes, all_alpha, rhos, codec.quantizer)
         nu = bussgang.effective_noise_var(all_alpha, rhos, codec.quantizer)
         energy = bussgang.signal_energy(all_alpha, rhos, m, n)
-    else:  # psum_dequant
+    else:  # psum_dequant: codes never cross the wire, only dequantized sums
+        codes, alpha, new_residual = codec.compress_blocks(blocks + 0.0, residual)
+        codes = cs(codes, "blocks", None)
+        new_residual = cs(new_residual, "blocks", None)
         w = bussgang.bussgang_weight(rho_self, alpha, codec.quantizer)  # (nb,)
         y_local = w[:, None] * codec.dequantize(codes)
         y = jax.lax.psum(y_local, axis_name)
@@ -155,7 +162,6 @@ def make_sharded_allreduce(codec: BQCSCodec, mesh, local_shapes, nbar_local: int
     local_shapes: per-leaf LOCAL shard shapes (excl. the pods dim);
     nbar_local: sum of local sizes (pre-padding).
     """
-    from jax.sharding import PartitionSpec as P
 
     from repro.models.sharding import use_rules
 

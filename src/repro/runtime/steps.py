@@ -4,7 +4,9 @@ meet.
 train step (FedQCS enabled) = shard_map with ONE manual axis ('pod'):
   - fwd/bwd auto-partitions over (data, model) inside each pod (ICI traffic);
   - the only cross-pod (DCN) communication is the FedQCS payload exchange in
-    runtime/collectives.py;
+    runtime/collectives.py -- in wire_mode="gather_codes" that payload is the
+    bit-packed uint32 words the fused encoder emits (true Q/R bits per entry,
+    CompressedGradient.wire_bits), unpacked only after the gather;
   - every pod runs the (deterministic) reconstruction + optimizer redundantly,
     so parameters stay bit-identical across pods without a broadcast.
 
@@ -17,9 +19,7 @@ serve steps (prefill / decode) are plain jit.
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ try:  # optional dev dependency (pyproject [dev] extra)
 except ModuleNotFoundError:  # property tests skip via importorskip
     from hypothesis_stub import hypothesis, st
 
-from repro.core import api, bussgang, sensing, sparsify
+from repro.core import api, sparsify
 from repro.core.compression import (
     BQCSCodec,
     FedQCSConfig,
@@ -21,7 +21,7 @@ from repro.core.compression import (
     pack_codes,
     unpack_codes,
 )
-from repro.core.gamp import GampConfig, em_gamp, qem_gamp
+from repro.core.gamp import GampConfig, qem_gamp
 from repro.core.quantizer import decode, design_lloyd_max, encode, quantize
 
 jax.config.update("jax_platform_name", "cpu")
@@ -120,6 +120,69 @@ def test_pack_roundtrip(bits, m, seed):
     assert words.shape == (4, -(-m // (32 // bits)))
 
 
+# Non-hypothesis twin of the property above (runs on the minimal-deps CI
+# leg): every wire Q, with M deliberately NOT a multiple of 32 // Q so the
+# word-padding lanes are exercised, plus the extremes.
+@pytest.mark.parametrize("bits", [1, 2, 3, 4, 8])
+@pytest.mark.parametrize("m", [1, 31, 97, 250])
+def test_pack_roundtrip_parametrized(bits, m):
+    per_word = 32 // bits
+    rng = np.random.default_rng(bits * 1000 + m)
+    codes = jnp.asarray(rng.integers(0, 2**bits, (6, m)), jnp.uint8)
+    words = pack_codes(codes, bits)
+    assert words.dtype == jnp.uint32
+    assert words.shape == (6, -(-m // per_word))
+    np.testing.assert_array_equal(
+        np.asarray(unpack_codes(words, bits, m)), np.asarray(codes)
+    )
+    # saturated codes must not bleed across bit-group boundaries
+    full = jnp.full((2, m), 2**bits - 1, jnp.uint8)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_codes(pack_codes(full, bits), bits, m)), np.asarray(full)
+    )
+
+
+def test_wire_bits_from_packed_word_count():
+    """wire_bits derives from the ACTUAL packed word count: for Q=3 a word
+    carries 10 codes (2 slack bits), so the honest wire is ceil(M/10)*32
+    bits per block -- more than the ideal M*Q, and far less than the int32
+    codes the pre-packed path used to ship."""
+    from repro.core.compression import CompressedGradient, packed_width
+
+    rng = np.random.default_rng(0)
+    for bits, m, nb in [(3, 256, 8), (2, 64, 4), (4, 97, 5), (8, 31, 3), (1, 128, 2)]:
+        codes = jnp.asarray(rng.integers(0, 2**bits, (nb, m)), jnp.uint8)
+        words = pack_codes(codes, bits)
+        payload = CompressedGradient(words, jnp.ones((nb,)), nbar=nb * 100, m=m, bits=bits)
+        w = packed_width(m, bits)
+        assert words.shape[1] == w
+        assert payload.wire_bits() == nb * (w * 32 + 32)
+        # honest: covers every code bit, never narrower than the ideal M*Q
+        assert payload.wire_bits() >= nb * (m * bits + 32)
+        # and exactly the ideal when Q divides 32 and the words are full
+        if 32 % bits == 0 and m % (32 // bits) == 0:
+            assert payload.wire_bits() == nb * (m * bits + 32)
+
+
+def test_compress_tree_payload_is_packed():
+    """End-to-end worker payload: codes are uint32 words sized to wire_bits,
+    and api.reconstruct unpacks them back to a working gradient tree."""
+    rng = np.random.default_rng(8)
+    cfg = FedQCSConfig(block_size=128, reduction_ratio=4, bits=3, s_ratio=0.1,
+                       gamp_iters=10)
+    codec = BQCSCodec(cfg)
+    tree = {"w": jnp.asarray(rng.normal(0, 0.1, (40, 10)), jnp.float32)}
+    state = api.init_state(codec, tree)
+    payload, spec, state = api.compress(codec, tree, state)
+    assert payload.codes.dtype == jnp.uint32
+    nb, w = payload.codes.shape
+    assert w == -(-cfg.m // (32 // cfg.bits))
+    assert payload.wire_bits() == payload.codes.size * 32 + payload.alpha.size * 32
+    out = api.reconstruct(codec, [payload], [1.0], spec, mode="ae")
+    assert out["w"].shape == tree["w"].shape
+    assert np.isfinite(np.asarray(out["w"])).all()
+
+
 def test_flatten_roundtrip_pytree():
     rng = np.random.default_rng(0)
     tree = {
@@ -191,7 +254,9 @@ def test_ae_matches_theorem1_bound():
             b[i, idx] = rng.normal(0, 0.1, cfg.s)
         b = jnp.asarray(b)
         c, a, _ = codec.compress_blocks(b, jnp.zeros_like(b))
-        blocks.append(b); codes.append(c); alphas.append(a)
+        blocks.append(b)
+        codes.append(c)
+        alphas.append(a)
     rhos = jnp.full((k,), 1.0 / k)
     from repro.core.reconstruction import aggregate_and_estimate
 
@@ -223,7 +288,8 @@ def test_partial_participation_exactness():
         cs, as_ = [], []
         for b in blocks:
             c, a, _ = codec.compress_blocks(b, jnp.zeros_like(b))
-            cs.append(c); as_.append(a)
+            cs.append(c)
+            as_.append(a)
         from repro.core.reconstruction import aggregate_and_estimate
 
         out[tag] = aggregate_and_estimate(

@@ -56,6 +56,96 @@ def test_bqcs_encode_bf16_input():
 
 
 # ---------------------------------------------------------------------------
+# bqcs_encode_fused (single-pass encoder: EF add -> top-S -> encode -> pack)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("nb,n,m,q", [
+    (16, 256, 64, 2),    # even everything
+    (7, 256, 97, 4),     # row padding + M % (32//Q) != 0 (97 % 8)
+    (130, 512, 100, 3),  # row padding over the tile + Q=3 (10 codes/word)
+    (5, 128, 32, 1),     # Q=1: 32 lane groups into one word column
+    (9, 256, 31, 8),     # Q=8 + M % 4 != 0
+])
+def test_bqcs_encode_fused_matches_oracle(nb, n, m, q):
+    """Fused kernel == composed oracle (top-S -> encode -> pack): words and
+    alpha bit-exact, residual <= 1e-6; includes the all-zero-block row and
+    nonzero error-feedback input."""
+    rng = np.random.default_rng(nb * n + q)
+    blocks = jnp.asarray(rng.normal(0, 0.1, (nb, n)), jnp.float32)
+    resid_in = jnp.asarray(rng.normal(0, 0.01, (nb, n)), jnp.float32)
+    blocks = blocks.at[0].set(0.0)
+    resid_in = resid_in.at[0].set(0.0)  # all-zero carry -> dead block path
+    a = sensing.sensing_matrix(jax.random.PRNGKey(1), m, n)
+    quant = design_lloyd_max(q)
+    s = max(1, n // 10)
+    wk, ak, rk = ops.bqcs_encode_fused(blocks, resid_in, a, quant, s)
+    wr, ar, rr = ref.bqcs_encode_fused_ref(
+        blocks, resid_in, a.T, quant.jnp_thresholds(), s, q
+    )
+    assert wk.dtype == jnp.uint32
+    assert wk.shape == (nb, -(-m // (32 // q)))
+    np.testing.assert_array_equal(np.asarray(wk), np.asarray(wr))
+    np.testing.assert_array_equal(np.asarray(ak), np.asarray(ar))
+    np.testing.assert_allclose(np.asarray(rk), np.asarray(rr), atol=1e-6)
+    assert float(ak[0]) == 0.0  # dead block signals alpha = 0
+
+
+def test_fused_matches_unfused_compress_blocks():
+    """codec.compress_blocks(use_kernels=True) (fused single pass) ==
+    use_kernels=False (stage-by-stage XLA): codes bit-exact, alpha to fp
+    round-off, residual <= 1e-6 -- and the packed/unpacked views agree."""
+    import dataclasses
+
+    from repro.core.compression import BQCSCodec, FedQCSConfig, unpack_codes
+
+    rng = np.random.default_rng(3)
+    cfg = FedQCSConfig(
+        block_size=256, reduction_ratio=4, bits=3, s_ratio=0.1, use_kernels=True
+    )
+    codec_k = BQCSCodec(cfg)
+    codec_x = BQCSCodec(dataclasses.replace(cfg, use_kernels=False))
+    g = jnp.asarray(rng.normal(0, 0.1, (20, 256)), jnp.float32)
+    r = jnp.asarray(rng.normal(0, 0.01, (20, 256)), jnp.float32)
+    words, a_k, res_k = codec_k.compress_blocks_packed(g, r)
+    c_k, a_k2, _ = codec_k.compress_blocks(g, r)
+    c_x, a_x, res_x = codec_x.compress_blocks(g, r)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_codes(words, cfg.bits, cfg.m)), np.asarray(c_k)
+    )
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_k2))
+    np.testing.assert_array_equal(
+        np.asarray(c_k).astype(np.int32), np.asarray(c_x).astype(np.int32)
+    )
+    np.testing.assert_allclose(np.asarray(a_k), np.asarray(a_x), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(res_k), np.asarray(res_x), atol=1e-6)
+
+
+def test_fused_error_feedback_identity():
+    """The in-kernel error-feedback update is exact: every entry of the new
+    residual is either 0 (kept by top-S) or bit-equal to the carry entry
+    (dropped) -- no mass is invented or lost -- and kept magnitudes dominate
+    dropped ones (eq. 7 semantics)."""
+    rng = np.random.default_rng(9)
+    nb, n, m, s = 12, 256, 64, 25
+    blocks = jnp.asarray(rng.normal(0, 1, (nb, n)), jnp.float32)
+    resid_in = jnp.asarray(rng.normal(0, 0.1, (nb, n)), jnp.float32)
+    a = sensing.sensing_matrix(jax.random.PRNGKey(4), m, n)
+    _, _, resid_out = ops.bqcs_encode_fused(blocks, resid_in, a, design_lloyd_max(2), s)
+    carry = np.asarray(blocks + resid_in)
+    resid_out = np.asarray(resid_out)
+    dropped_mask = resid_out != 0
+    np.testing.assert_array_equal(resid_out[dropped_mask], carry[dropped_mask])
+    sparse = np.where(dropped_mask, 0.0, carry)
+    for i in range(nb):
+        kept = np.abs(sparse[i][sparse[i] != 0])
+        dropped = np.abs(resid_out[i][dropped_mask[i]])
+        assert kept.size >= 1
+        if dropped.size:
+            assert kept.min() >= dropped.max() - 1e-6
+
+
+# ---------------------------------------------------------------------------
 # block_topk
 # ---------------------------------------------------------------------------
 
@@ -215,7 +305,8 @@ def test_estimate_and_aggregate_use_pallas_matches_xla():
             idx = rng.choice(256, cfg.s, replace=False)
             b[i, idx] = rng.normal(0, 0.1, cfg.s)
         c, a, _ = codec.compress_blocks(jnp.asarray(b), jnp.zeros((nb, 256), jnp.float32))
-        codes.append(c); alphas.append(a)
+        codes.append(c)
+        alphas.append(a)
     rhos = jnp.full((k,), 1.0 / k)
     # Default tol (1e-5): the XLA path early-freezes, the kernel runs fixed
     # trip -- the 1e-4 contract must hold at the *default* config, not just

@@ -116,7 +116,6 @@ def test_transformer_prefill_matches_decode():
 def test_mla_absorbed_decode_matches_train_attention():
     """MLA: absorbed-matmul decode must equal the decompressed train path for
     the same (single-token) attention problem."""
-    import dataclasses
 
     from repro.models import mla as mla_mod
 

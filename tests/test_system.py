@@ -3,7 +3,6 @@ checkpoint/restart exactness, elastic resharding, partial participation,
 int8 optimizer states, and learning progress with compression."""
 
 import os
-import sys
 
 import pytest
 
@@ -179,6 +178,73 @@ def test_ea_recon_mode_shard_map_step():
     fed = dataclasses.replace(FED, recon_mode="ea", use_kernels=True)
     _, losses = _train(1, fed=fed, impl="shard_map")
     assert np.isfinite(losses[0]), losses
+
+
+def _collect_eqns(jaxpr, name, out):
+    """Recursively collects eqns named ``name`` from a jaxpr and every
+    sub-jaxpr in its params (duck-typed: works across jax core relocations)."""
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            out.append(eqn)
+        for v in eqn.params.values():
+            inner = getattr(v, "jaxpr", v)
+            if hasattr(inner, "eqns"):
+                _collect_eqns(inner, name, out)
+    return out
+
+
+def test_gather_codes_payload_is_packed_uint32():
+    """wire_mode='gather_codes': the cross-pod all_gather operands are the
+    packed uint32 words + the f32 alphas, and their combined size equals
+    CompressedGradient.wire_bits -- the true Q/R-bit wire, not int32 codes."""
+    import dataclasses
+
+    from jax.sharding import Mesh
+    from jax.sharding import PartitionSpec as P
+
+    from repro import jax_compat
+    from repro.core.compression import BQCSCodec, packed_width
+    from repro.runtime.collectives import fedqcs_pod_allreduce
+
+    fed = dataclasses.replace(FED, wire_mode="gather_codes")
+    codec = BQCSCodec(fed)
+    nb, n = 8, fed.block_size
+    mesh = Mesh(np.array(jax.devices()[:2]), ("pod",))
+    smap = jax_compat.shard_map(
+        lambda b, r: fedqcs_pod_allreduce(b, r, codec),
+        mesh=mesh,
+        in_specs=(P("pod"), P("pod")),
+        out_specs=(P("pod"), P("pod")),
+        axis_names={"pod"},
+        check_vma=False,
+    )
+    blocks = jnp.zeros((2 * nb, n), jnp.float32)
+    resid = jnp.zeros_like(blocks)
+    with jax_compat.set_mesh(mesh):
+        jaxpr = jax.make_jaxpr(smap)(blocks, resid)
+    gathers = _collect_eqns(jaxpr.jaxpr, "all_gather", [])
+    assert gathers, "gather_codes step lowered without any all_gather"
+    w = packed_width(fed.m, fed.bits)
+    by_dtype = {}
+    for eqn in gathers:
+        aval = eqn.invars[0].aval
+        by_dtype.setdefault(str(aval.dtype), []).append(tuple(aval.shape))
+    # the code payload is uint32 words of the canonical width
+    assert (nb, w) in by_dtype.get("uint32", []), by_dtype
+    # and no unpacked (nb, M) code tensor crosses the pod axis
+    for shapes in by_dtype.values():
+        assert (nb, fed.m) not in shapes, by_dtype
+    # gathered bits (words + alphas + the scalar participation flag's f32)
+    words_bits = nb * w * 32
+    alpha_bits = nb * 32
+    payload_bits = words_bits + alpha_bits
+    from repro.core.compression import CompressedGradient
+
+    ref_payload = CompressedGradient(
+        jnp.zeros((nb, w), jnp.uint32), jnp.zeros((nb,)), nbar=nb * n,
+        m=fed.m, bits=fed.bits,
+    )
+    assert payload_bits == ref_payload.wire_bits()
 
 
 def test_partial_participation_step():
