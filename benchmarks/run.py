@@ -24,6 +24,7 @@ _BENCH_DIR = os.path.join(
 )
 BENCH_GAMP_JSON = os.path.join(_BENCH_DIR, "BENCH_gamp.json")
 BENCH_ENCODE_JSON = os.path.join(_BENCH_DIR, "BENCH_encode.json")
+BENCH_FED_JSON = os.path.join(_BENCH_DIR, "BENCH_fed.json")
 
 
 def _write_bench_json(path: str, bench: str, entries: list) -> None:
@@ -221,6 +222,121 @@ def encode_fused_vs_unfused(fast=True):
     return rows
 
 
+def fed_cohort_scaling(fast=True):
+    """Cohort engine throughput (EXPERIMENTS.md #Fed-cohort): clients/sec of
+    one full federated round (grad + BQCS encode + channel + PS GAMP + server
+    update) at cohort sizes {32, 256, 1000}, vmapped device pass vs the
+    per-client Python-loop oracle.
+
+    Two client models per size in runs/bench/BENCH_fed.json:
+      * ``fed_vmap/fed_loop[cN]`` — a compact synthetic classifier, where
+        per-client compute is tiny and the engine's claim (amortizing the
+        per-client dispatch of the loop into one device pass) is what is
+        measured; the recorded ``speedup_vs_loop`` is the orchestration win.
+      * ``fed_vmap_mlp/fed_loop_mlp[cN]`` — the paper's MNIST MLP at the
+        Sec. VI protocol (AWGN 10 dB, Dirichlet alpha=0.1), where the
+        784-20-10 gradient + (10, 1591) encode GEMMs dominate both paths;
+        the gap narrows toward the backend's batched-vs-small GEMM ratio.
+    """
+    import jax
+
+    from repro.core.compression import FedQCSConfig
+    from repro.fed.channel import ChannelConfig
+    from repro.fed.engine import ArrayClientData, CohortConfig, CohortEngine
+    from repro.fed.partition import PartitionConfig, partition_indices
+    from repro.fed.scheduler import SchedulerConfig
+    from repro.fed.server_opt import ServerOptConfig
+    from repro.fed.toy import toy_classification, toy_loss, toy_params
+
+    sizes = (32, 256, 1000)
+
+    # -- compact synthetic classifier (orchestration-dominated) ------------
+    xs, ys = toy_classification(n_samples=4096)
+    small_fed = FedQCSConfig(block_size=64, reduction_ratio=2, bits=3,
+                             s_ratio=0.1, gamp_iters=10,
+                             gamp_variance_mode="scalar")
+
+    def small_engine(k, impl):
+        parts = partition_indices(
+            ys, k, PartitionConfig(kind="dirichlet", alpha=0.1, min_size=2))
+        return CohortEngine(
+            toy_params(), jax.grad(toy_loss),
+            ArrayClientData(xs, ys, parts, batch_size=2),
+            fed_cfg=small_fed,
+            cohort=CohortConfig(method="fedqcs-ae", impl=impl, record_nmse=False),
+            sched=SchedulerConfig(),
+            chan=ChannelConfig(kind="awgn", snr_db=10.0),
+            server=ServerOptConfig(lr=0.01),
+        )
+
+    # -- the paper's MNIST MLP at the Sec. VI protocol ---------------------
+    from repro.data import mnist
+    from repro.paper.mlp import init_mlp, mlp_grad_fn
+
+    (xtr, ytr, _, _), _ = mnist.load(0)
+    mlp_fed = FedQCSConfig(block_size=1591, reduction_ratio=3, bits=3,
+                           s_ratio=0.1, gamp_iters=15,
+                           gamp_variance_mode="scalar", sparsifier="bisect")
+    mlp_params = init_mlp(jax.random.PRNGKey(0))
+
+    def mlp_engine(k, impl):
+        parts = partition_indices(
+            ytr, k, PartitionConfig(kind="dirichlet", alpha=0.1, min_size=2))
+        return CohortEngine(
+            mlp_params, mlp_grad_fn,
+            ArrayClientData(xtr, ytr, parts, batch_size=1),
+            fed_cfg=mlp_fed,
+            cohort=CohortConfig(method="fedqcs-ae", impl=impl, record_nmse=False),
+            sched=SchedulerConfig(),
+            chan=ChannelConfig(kind="awgn", snr_db=10.0),
+            server=ServerOptConfig(lr=0.003),
+        )
+
+    def timed_rounds(engine, reps):
+        engine.run_round()  # compile + warm caches
+        engine.run_round()
+        t0 = time.time()
+        for _ in range(reps):
+            engine.run_round()
+        return (time.time() - t0) / reps
+
+    rows, entries = [], []
+    for label, build, per_client_ms in (
+        ("", small_engine, 1.0),  # ~1 ms/client loop cost -> many reps cheap
+        ("_mlp", mlp_engine, 2.0),
+    ):
+        for k in sizes:
+            walls = {}
+            for impl in ("vmap", "loop"):
+                # rep counts sized so each timing window is >~100 ms (the
+                # small-cohort walls are a few ms and jitter-sensitive)
+                if impl == "vmap":
+                    reps = max(3, 320 // k) if fast else max(5, 640 // k)
+                else:
+                    reps = max(1, int(100.0 / (per_client_ms * k)) + (k <= 64))
+                walls[impl] = timed_rounds(build(k, impl), reps)
+            for impl in ("vmap", "loop"):
+                wall, cps = walls[impl], k / walls[impl]
+                name = f"fed_{impl}{label}[c{k}]"
+                speedup = walls["loop"] / walls["vmap"]
+                derived = (
+                    f"cohort={k};clients_per_sec={cps:.1f};"
+                    f"speedup_vs_loop={speedup:.2f}"
+                )
+                rows.append(f"fed[{name}],{1e6 * wall:.1f},{derived}")
+                entries.append({
+                    "name": name, "wall_ms": round(wall * 1e3, 3),
+                    "derived": derived, "cohort": k, "impl": impl,
+                    "model": "mnist_mlp" if label else "synthetic_classifier",
+                    "clients_per_sec": round(cps, 1),
+                    "speedup_vs_loop": round(speedup, 2),
+                    "backend": jax.default_backend(),
+                })
+    _write_bench_json(BENCH_FED_JSON, "fed_cohort_scaling", entries)
+    rows.append(f"fed[json],0,{os.path.relpath(BENCH_FED_JSON)}")
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
@@ -245,6 +361,7 @@ def main() -> None:
         "kernels": kernel_micro,
         "gamp": gamp_ea_vs_ae,
         "encode": encode_fused_vs_unfused,
+        "fed": fed_cohort_scaling,
     }
     selected = [s for s in args.only.split(",") if s] or list(benches)
     print("name,us_per_call,derived")

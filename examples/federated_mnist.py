@@ -4,6 +4,12 @@ with K=30 non-IID devices and FedQCS compression at 1 bit/entry.
     PYTHONPATH=src python examples/federated_mnist.py --method fedqcs-ae --steps 300
     PYTHONPATH=src python examples/federated_mnist.py --compare   # all methods
 
+Scenario axes beyond the paper (cohort engine, DESIGN.md #Fed-engine):
+
+    # 1000 Dirichlet(0.1) clients, 10% sampling, AWGN 10 dB uplink
+    PYTHONPATH=src python examples/federated_mnist.py --clients 1000 \
+        --partition dirichlet --alpha 0.1 --sample-frac 0.1 --snr-db 10 --steps 50
+
 Uses real MNIST if $MNIST_DIR points at the IDX files, else the deterministic
 synthMNIST surrogate (see DESIGN.md #Offline-data note).
 """
@@ -13,31 +19,61 @@ import argparse
 from repro.core.compression import FedQCSConfig
 from repro.paper.mlp import run_federated
 
+METHODS = ["fedqcs-ea", "fedqcs-ae", "qcs-qiht", "qcs-dither", "signsgd", "none"]
+
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--method", default="fedqcs-ae",
-                    choices=["fedqcs-ea", "fedqcs-ae", "qcs-qiht", "qcs-dither",
-                             "signsgd", "none"])
+    ap.add_argument("--method", default="fedqcs-ae", choices=METHODS)
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--R", type=int, default=3)
     ap.add_argument("--Q", type=int, default=3)
     ap.add_argument("--s-ratio", type=float, default=0.1)
     ap.add_argument("--compare", action="store_true")
+    # -- cohort scenario axes (defaults reproduce the paper) ---------------
+    ap.add_argument("--clients", type=int, default=30)
+    ap.add_argument("--partition", default="paper",
+                    choices=["paper", "iid", "shard", "dirichlet"])
+    ap.add_argument("--alpha", type=float, default=0.1,
+                    help="Dirichlet concentration (with --partition dirichlet)")
+    ap.add_argument("--sample-frac", type=float, default=1.0,
+                    help="cohort fraction per round (uniform sampling when < 1)")
+    ap.add_argument("--snr-db", type=float, default=None,
+                    help="AWGN uplink SNR in dB (unset = ideal channel)")
+    ap.add_argument("--dropout", type=float, default=0.0,
+                    help="per-round straggler probability")
+    ap.add_argument("--chunk", type=int, default=0,
+                    help="clients per scan chunk (0 = whole cohort in one pass)")
     args = ap.parse_args()
 
     fed = FedQCSConfig(reduction_ratio=args.R, bits=args.Q, s_ratio=args.s_ratio,
                        gamp_iters=25, gamp_variance_mode="scalar")
-    methods = (
-        ["none", "fedqcs-ea", "fedqcs-ae", "qcs-qiht", "signsgd"]
-        if args.compare else [args.method]
+    # the full baseline roster, incl. qcs-dither (all six documented methods)
+    methods = METHODS[::-1] if args.compare else [args.method]
+    cohort_kw = dict(
+        k_devices=args.clients,
+        partition=args.partition,
+        alpha=args.alpha,
+        scheduler="uniform" if args.sample_frac < 1.0 else "full",
+        sample_frac=args.sample_frac,
+        dropout=args.dropout,
+        channel="awgn" if args.snr_db is not None else "ideal",
+        snr_db=args.snr_db if args.snr_db is not None else 20.0,
+        chunk=args.chunk,
     )
     print(f"(R,Q)=({args.R},{args.Q}) -> {args.Q/args.R:.2f} bits/entry; "
-          f"K=30 non-IID devices; {args.steps} rounds")
+          f"K={args.clients} {args.partition} devices; {args.steps} rounds; "
+          f"channel={cohort_kw['channel']}")
     print(f"{'method':12s} {'bits/entry':>10s} {'final acc':>9s} {'mean NMSE':>9s} {'wall':>6s}")
     for m in methods:
+        kw = dict(cohort_kw)
+        if m != "fedqcs-ae" and kw["channel"] != "ideal":
+            # code-domain methods need the exact codes at the PS: only the
+            # Bussgang-linearized AE path absorbs uplink noise (DESIGN.md)
+            print(f"  ({m}: noisy uplink unsupported -> ideal channel)")
+            kw["channel"] = "ideal"
         r = run_federated(m, steps=args.steps, fed_cfg=fed,
-                          eval_every=max(args.steps // 10, 1))
+                          eval_every=max(args.steps // 10, 1), **kw)
         nm = sum(r.nmses) / len(r.nmses) if r.nmses else float("nan")
         print(f"{m:12s} {r.bits_per_entry:10.2f} {r.accs[-1]:9.3f} {nm:9.3f} {r.wall_s:5.0f}s")
         print(f"  acc trace: {[round(a, 3) for a in r.accs]}")

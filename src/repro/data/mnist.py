@@ -7,8 +7,8 @@ pixel noise, same shapes/splits (60k train / 10k test, 28x28 in [0,1]).
 The paper's claims validated on the surrogate are *relative* (compressed vs
 uncompressed accuracy; NMSE ordering across frameworks) -- see DESIGN.md.
 
-Federation (paper Sec. VI): K=30 devices, device k holds 1000 samples all
-labeled floor((k-1)/(K/10)) -- the fully non-IID one-digit-per-device split.
+Federation splits (incl. the paper's Sec. VI one-digit-per-device scheme)
+live in repro.fed.partition and operate on the label vector returned here.
 """
 
 from __future__ import annotations
@@ -16,7 +16,6 @@ from __future__ import annotations
 import gzip
 import os
 import struct
-from typing import List, Tuple
 
 import numpy as np
 
@@ -75,18 +74,3 @@ def load(seed: int = 0):
         except FileNotFoundError:
             pass
     return _synth(seed), False
-
-
-def federated_split(
-    x: np.ndarray, y: np.ndarray, k: int = 30, per_device: int = 1000, seed: int = 0
-) -> List[Tuple[np.ndarray, np.ndarray]]:
-    """Paper's non-IID split: device k (1-indexed) holds ``per_device`` samples
-    of digit floor((k-1)/(K/10))."""
-    rng = np.random.default_rng(seed)
-    shards = []
-    for dev in range(1, k + 1):
-        digit = int((dev - 1) // (k / N_CLASSES))
-        idx = np.nonzero(y == digit)[0]
-        chosen = rng.choice(idx, size=min(per_device, idx.size), replace=False)
-        shards.append((x[chosen], y[chosen]))
-    return shards

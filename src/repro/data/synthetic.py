@@ -13,6 +13,20 @@ import jax
 import jax.numpy as jnp
 
 
+def affine_rule_batch(k_start, k_noise, k_rand, batch, seq, vocab_size, noise, c=17):
+    """The synthetic language's generator, shared by TokenDataset and the fed
+    engine's dialect-skewed TokenClientData: sequences follow the noisy
+    affine next-token rule ``(start * 31**(i%8) + c*i) % vocab``.  ``c`` may
+    be a scalar or a (batch, 1) array (per-sequence "dialect" constants)."""
+    start = jax.random.randint(k_start, (batch, 1), 0, vocab_size)
+    idx = jnp.arange(seq + 1)
+    seqs = (start * jnp.power(31, idx % 8) + c * idx) % vocab_size
+    noise_mask = jax.random.bernoulli(k_noise, noise, seqs.shape)
+    random_toks = jax.random.randint(k_rand, seqs.shape, 0, vocab_size)
+    seqs = jnp.where(noise_mask, random_toks, seqs).astype(jnp.int32)
+    return {"tokens": seqs[:, :-1], "labels": seqs[:, 1:]}
+
+
 @dataclasses.dataclass(frozen=True)
 class TokenDataset:
     vocab_size: int
@@ -28,13 +42,6 @@ class TokenDataset:
             jax.random.fold_in(jax.random.PRNGKey(self.seed), step), shard
         )
         k1, k2, k3 = jax.random.split(key, 3)
-        b = self.batch // n_shards
-        start = jax.random.randint(k1, (b, 1), 0, self.vocab_size)
-        # affine next-token rule: learnable structure
-        a, c = 31, 17
-        idx = jnp.arange(self.seq + 1)
-        seqs = (start * jnp.power(a, idx % 8) + c * idx) % self.vocab_size
-        noise_mask = jax.random.bernoulli(k2, self.noise, seqs.shape)
-        random_toks = jax.random.randint(k3, seqs.shape, 0, self.vocab_size)
-        seqs = jnp.where(noise_mask, random_toks, seqs).astype(jnp.int32)
-        return {"tokens": seqs[:, :-1], "labels": seqs[:, 1:]}
+        return affine_rule_batch(
+            k1, k2, k3, self.batch // n_shards, self.seq, self.vocab_size, self.noise
+        )

@@ -1,0 +1,42 @@
+"""repro.fed — the federated cohort simulation engine.
+
+The paper's setting is wireless federated learning: K devices with non-IID
+local data, partial participation, and a noisy uplink feeding the PS-side
+reconstruction.  This package turns the repo's codec + reconstruction stack
+into a *system* that simulates that setting at thousands-of-clients scale
+over any registry model:
+
+  * :mod:`repro.fed.partition`  — IID / label-shard / Dirichlet(alpha) /
+    paper partitioners over labeled datasets;
+  * :mod:`repro.fed.scheduler`  — full / uniform-sampling / staleness-
+    weighted async participation plus straggler-dropout, driving the
+    ``rho_k`` weighting end to end;
+  * :mod:`repro.fed.channel`    — ideal / AWGN / Rayleigh block-fading
+    uplinks whose effective noise variance threads into EM-GAMP's
+    ``noise_var`` (DESIGN.md #Fed-engine);
+  * :mod:`repro.fed.server_opt` — FedAvg / FedAvgM / FedAdam server-side
+    optimizers over the reconstructed aggregate;
+  * :mod:`repro.fed.engine`     — the vmap(+scan-chunked) cohort round loop
+    with a Python-loop oracle for bit-exactness and benchmarking.
+"""
+
+from repro.fed.channel import ChannelConfig, realize_uplink
+from repro.fed.engine import ArrayClientData, CohortConfig, CohortEngine, TokenClientData
+from repro.fed.partition import PartitionConfig, partition_indices
+from repro.fed.scheduler import SchedulerConfig, SchedulerState, select_cohort
+from repro.fed.server_opt import ServerOptConfig
+
+__all__ = [
+    "ArrayClientData",
+    "ChannelConfig",
+    "CohortConfig",
+    "CohortEngine",
+    "PartitionConfig",
+    "SchedulerConfig",
+    "SchedulerState",
+    "ServerOptConfig",
+    "TokenClientData",
+    "partition_indices",
+    "realize_uplink",
+    "select_cohort",
+]

@@ -1,0 +1,7 @@
+"""``python -m repro.fed`` — the tiny end-to-end cohort smoke (CI runs this
+in the minimal-deps leg: 8 clients, 2 rounds, Dirichlet + AWGN engine path)."""
+
+from repro.fed.engine import _smoke_main
+
+if __name__ == "__main__":
+    _smoke_main()

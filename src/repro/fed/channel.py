@@ -1,0 +1,91 @@
+"""Wireless uplink models (DESIGN.md #Fed-engine).
+
+The paper's Sec. IV reconstruction already consumes a per-block AWGN variance
+(``em_gamp(..., noise_var)``); the repo's drivers fed it only the Bussgang
+quantization distortion of eq. 24.  This module supplies the missing wireless
+term: each client's M normalized measurements (the BQCS ``alpha`` scaling
+makes them ~ N(0,1), i.e. unit transmit power) cross an uplink that adds
+noise, and the *effective* post-equalization variance is threaded into the
+same ``noise_var`` hook — exactly the FedVQCS scenario axis
+(arXiv:2204.07692).
+
+Models (``ChannelConfig.kind``):
+
+  * ``ideal``    — error-free digital uplink: zero added variance.  The only
+    model under which code-domain methods (EA, QIHT, dither, signsgd) are
+    well-defined, since those need the exact codes at the PS.
+  * ``awgn``     — unit channel gain, noise variance ``sigma^2 =
+    10**(-snr_db/10)`` per measurement (SNR is defined against the unit
+    transmit power the alpha-scaling guarantees).
+  * ``rayleigh`` — block-fading: one power gain ``g_k = |h_k|^2 ~ Exp(1)``
+    per client per round, constant across that client's blocks.  Clients
+    transmit at the fixed unit power and the PS zero-forces the known
+    channel (divides by ``h_k``), so the equalized noise variance is
+    ``sigma^2 / g_k`` — deep fades cost noise, not transmit power.  A gain
+    below ``outage_gain`` makes the equalized SNR unusable and the client
+    goes into outage (its cohort slot gets ``rho_k = 0``, same straggler
+    contract as the scheduler).
+
+The realization is sampled *before* the cohort passes run, so the outage
+mask can fold into the effective rhos and the per-client residual carry rule
+(engine.py) — and so the vmapped and Python-loop paths consume bit-identical
+channel draws.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ChannelConfig", "ChannelRealization", "realize_uplink", "snr_noise_var"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelConfig:
+    kind: str = "ideal"  # ideal | awgn | rayleigh
+    snr_db: float = 20.0  # receive SNR per measurement (unit transmit power)
+    outage_gain: float = 0.05  # truncated-inversion floor on |h|^2
+
+
+class ChannelRealization(NamedTuple):
+    """One round's uplink draw for a C-client cohort.
+
+    noise_var: (C, nblocks) effective post-equalization AWGN variance on each
+      client's unit-power measurement rows (0 for ideal / outage slots).
+    mask: (C,) 1.0 for clients whose uplink closed, 0.0 for outage.
+    """
+
+    noise_var: jnp.ndarray
+    mask: jnp.ndarray
+
+
+def snr_noise_var(snr_db: float) -> float:
+    """sigma^2 = 10**(-SNR_dB/10): noise power at unit receive signal power."""
+    return float(10.0 ** (-snr_db / 10.0))
+
+
+def realize_uplink(
+    cfg: ChannelConfig, key: jax.Array, clients: int, nblocks: int
+) -> ChannelRealization:
+    """Samples one round's channel state for a ``clients``-slot cohort."""
+    ones = jnp.ones((clients,), jnp.float32)
+    if cfg.kind == "ideal":
+        return ChannelRealization(jnp.zeros((clients, nblocks), jnp.float32), ones)
+    sigma2 = snr_noise_var(cfg.snr_db)
+    if cfg.kind == "awgn":
+        return ChannelRealization(
+            jnp.full((clients, nblocks), sigma2, jnp.float32), ones
+        )
+    if cfg.kind == "rayleigh":
+        gain = jax.random.exponential(key, (clients,), jnp.float32)  # |h|^2
+        alive = gain >= cfg.outage_gain
+        safe = jnp.where(alive, gain, 1.0)
+        nu = jnp.where(alive, sigma2 / safe, 0.0)
+        return ChannelRealization(
+            jnp.broadcast_to(nu[:, None], (clients, nblocks)).astype(jnp.float32),
+            alive.astype(jnp.float32),
+        )
+    raise ValueError(f"unknown channel kind {cfg.kind!r}")

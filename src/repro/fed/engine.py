@@ -1,0 +1,480 @@
+"""The cohort round engine (DESIGN.md #Fed-engine).
+
+Runs full FL rounds over *any* model exposed as ``grad_fn(params, batch)`` at
+thousands-of-clients scale.  One round is two passes:
+
+  * **client pass** — every cohort member's gradient + BQCS encode, batched
+    through ``jax.vmap`` in one device pass (optionally ``lax.scan``-chunked
+    so the per-client gradient trees never all materialize at once).  A
+    bit-identical Python-loop oracle (``impl="loop"``) dispatches the
+    per-client codec path one client at a time — the pre-engine
+    ``paper/mlp.py`` dispatch pattern — and is the benchmark baseline.  Both
+    impls share the batched gradient pass (the gradient is the model's work,
+    and per-client GEMM lowerings are not ulp-deterministic across batch
+    shapes on every backend), so loop-vs-vmap equality is exact by
+    construction for any model.
+  * **PS pass** — reconstruction once per round from the stacked payloads:
+    the method dispatch (fedqcs-ae / fedqcs-ea / qcs-qiht / qcs-dither /
+    signsgd / none) reuses ``core/reconstruction.py`` + ``core/baselines.py``
+    unchanged; the wireless channel's effective noise variance threads into
+    ``em_gamp``'s ``noise_var`` next to the Bussgang quantization distortion
+    (eq. 24 + channel term).
+
+Participation contract (shared with ``runtime/collectives.py``): a cohort
+slot with ``rho_k = 0`` — scheduler dropout or channel outage — contributes
+exactly zero to the aggregate, and its error-feedback residual carries the
+*full* gradient forward (``blocks + residual``), so a straggler's work is
+deferred, not lost.  Clients outside the cohort are untouched.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, bussgang
+from repro.core.compression import (
+    BQCSCodec,
+    FedQCSConfig,
+    blocks_to_tree,
+    flatten_to_blocks,
+)
+from repro.core.gamp import em_gamp
+from repro.core.reconstruction import (
+    aggregate_and_estimate,
+    estimate_and_aggregate,
+    gamp_config_from,
+)
+from repro.fed.channel import ChannelConfig, realize_uplink
+from repro.fed.scheduler import SchedulerConfig, SchedulerState, select_cohort
+from repro.fed.server_opt import ServerOptConfig, init_server_state, server_update
+
+__all__ = ["CohortConfig", "CohortEngine", "ArrayClientData", "TokenClientData"]
+
+EF_METHODS = ("fedqcs-ae", "fedqcs-ea", "qcs-qiht")
+METHODS = EF_METHODS + ("qcs-dither", "signsgd", "none")
+
+
+@dataclasses.dataclass(frozen=True)
+class CohortConfig:
+    """Engine-level knobs (protocol knobs live in FedQCSConfig)."""
+
+    method: str = "fedqcs-ae"
+    chunk: int = 0  # clients per scan chunk in the vmapped pass; 0 = all at once
+    groups: int = 1  # AE grouping (G), ideal channel only
+    impl: str = "vmap"  # vmap | loop  (loop = per-client oracle/baseline)
+    dither_n: int = 2048  # qcs-dither re-blocking size (power of 2)
+    record_nmse: bool = True
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Client data sources
+# ---------------------------------------------------------------------------
+
+
+class ArrayClientData:
+    """Labeled-array federation: clients are index sets (from
+    ``fed.partition``) into one (x, y) array pair.  Batches are drawn
+    host-side, deterministic in (seed, round, client id) so a client's draw
+    does not depend on who else is in the cohort."""
+
+    def __init__(self, x, y, parts: List[np.ndarray], batch_size: int = 1, seed: int = 0):
+        self.x, self.y = np.asarray(x), np.asarray(y)
+        self.parts = [np.asarray(p, np.int64) for p in parts]
+        self.counts = np.array([len(p) for p in self.parts], np.int64)
+        if (self.counts == 0).any():
+            raise ValueError("every client needs at least one sample")
+        self.batch_size = batch_size
+        self.seed = seed
+        # Padded (K, maxlen) index matrix: one vectorized gather per round.
+        maxlen = int(self.counts.max())
+        self._idx = np.zeros((len(parts), maxlen), np.int64)
+        for k, p in enumerate(self.parts):
+            self._idx[k, : len(p)] = p
+            self._idx[k, len(p) :] = p[0]  # padding never drawn (pos < len)
+
+    def cohort_batch(self, round_idx: int, ids: np.ndarray) -> Dict[str, jnp.ndarray]:
+        # One vectorized draw over ALL K clients, rows indexed by global
+        # client id: client k's minibatch is a pure function of
+        # (seed, round, k), independent of who else is in the cohort (the
+        # 0xDA7A tag keeps this stream disjoint from the scheduler's).
+        rng = np.random.default_rng((self.seed, 0xDA7A, round_idx))
+        u = rng.random((len(self.counts), self.batch_size))[ids]  # (C, b)
+        pos = (u * self.counts[ids][:, None]).astype(np.int64)
+        sel = self._idx[ids[:, None], pos]  # (C, b)
+        return {"x": jnp.asarray(self.x[sel]), "y": jnp.asarray(self.y[sel])}
+
+
+class TokenClientData:
+    """Synthetic-language federation for the registry models: each client
+    holds its own stream of ``data/synthetic.py``-style affine-rule sequences.
+    Heterogeneity: clients mix ``n_dialects`` rule variants (the additive
+    constant shifts per dialect) with per-client mixture weights drawn from
+    Dir(alpha) — alpha -> 0 gives one-dialect clients, alpha -> inf IID."""
+
+    def __init__(
+        self,
+        vocab_size: int,
+        batch: int,
+        seq: int,
+        clients: int,
+        alpha: float = 0.0,  # 0 = homogeneous (no dialect skew)
+        n_dialects: int = 10,
+        noise: float = 0.2,
+        seed: int = 0,
+    ):
+        self.vocab_size, self.batch, self.seq = vocab_size, batch, seq
+        self.noise, self.seed = noise, seed
+        self.counts = np.ones(clients, np.int64)
+        rng = np.random.default_rng((seed, 0xD1A1))
+        if alpha > 0:
+            self._p = rng.dirichlet(np.full(n_dialects, alpha), size=clients)
+        else:
+            self._p = np.full((clients, n_dialects), 1.0 / n_dialects)
+        self._make = jax.jit(jax.vmap(self._make_one))
+
+    def _make_one(self, key, p):
+        from repro.data.synthetic import affine_rule_batch
+
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        dialect = jax.random.categorical(k4, jnp.log(p + 1e-9), shape=(self.batch, 1))
+        # dialect shifts the affine rule's additive constant
+        return affine_rule_batch(
+            k1, k2, k3, self.batch, self.seq, self.vocab_size, self.noise,
+            c=17 + 5 * dialect,
+        )
+
+    def cohort_batch(self, round_idx: int, ids: np.ndarray) -> Dict[str, jnp.ndarray]:
+        base = jax.random.fold_in(jax.random.PRNGKey(self.seed), round_idx)
+        keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(jnp.asarray(ids))
+        return self._make(keys, jnp.asarray(self._p[ids], jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+class CohortEngine:
+    """Stateful driver: owns params, per-client residuals, server-opt and
+    scheduler state; each :meth:`run_round` is one federated round."""
+
+    def __init__(
+        self,
+        params: Any,
+        grad_fn: Callable[[Any, Any], Any],
+        data: Any,  # ArrayClientData / TokenClientData duck type
+        fed_cfg: Optional[FedQCSConfig] = None,
+        cohort: CohortConfig = CohortConfig(),
+        sched: SchedulerConfig = SchedulerConfig(),
+        chan: ChannelConfig = ChannelConfig(),
+        server: ServerOptConfig = ServerOptConfig(),
+    ):
+        if cohort.method not in METHODS:
+            raise ValueError(f"unknown method {cohort.method!r} (choose from {METHODS})")
+        if chan.kind != "ideal" and cohort.method != "fedqcs-ae":
+            raise ValueError(
+                f"method {cohort.method!r} needs the exact codes at the PS, which "
+                "only an ideal (error-free digital) uplink provides; noisy "
+                "channels are supported by 'fedqcs-ae' (Bussgang + channel "
+                "variance into em_gamp noise_var, DESIGN.md #Fed-engine)"
+            )
+        if cohort.groups != 1 and (cohort.method != "fedqcs-ae" or chan.kind != "ideal"):
+            raise ValueError("groups != 1 is only defined for fedqcs-ae over an ideal uplink")
+        self.cohort, self.sched, self.chan, self.server = cohort, sched, chan, server
+        self.fed_cfg = fed_cfg or FedQCSConfig()
+        self.grad_fn = grad_fn
+        self.data = data
+        self.params = params
+
+        n = self.fed_cfg.block_size
+        blocks0, self.spec, self.nbar = flatten_to_blocks(params, n)
+        self.nb, self.n = blocks0.shape
+        self.clients = len(data.counts)
+        self.codec = BQCSCodec(self.fed_cfg) if cohort.method in EF_METHODS else None
+        self.gamp = gamp_config_from(self.codec) if self.codec else None
+        self._dither = (
+            baselines.DitherCodec(
+                n=cohort.dither_n,
+                m=cohort.dither_n // self.fed_cfg.reduction_ratio,
+                bits=self.fed_cfg.bits,
+            )
+            if cohort.method == "qcs-dither"
+            else None
+        )
+        self.residuals = jnp.zeros((self.clients, self.nb, self.n), jnp.float32)
+        self.server_state = init_server_state(server, params)
+        self.sched_state = SchedulerState.init(self.clients)
+        self.round = 0
+        self.key = jax.random.PRNGKey(cohort.seed)
+        self._grads_jit = jax.jit(self._grad_blocks_fn)
+        self._encode_jit = jax.jit(self._encode_fn)  # loop-oracle unit
+        self._encode_vmap_jit = jax.jit(jax.vmap(self._encode_fn))
+        self._ps_jit = jax.jit(self._ps_fn)
+        self._uplink_jit = jax.jit(
+            lambda key, c, nb: realize_uplink(self.chan, key, c, nb),
+            static_argnums=(1, 2),
+        )
+        # per-round prep (effective rhos + per-client keys) in one dispatch
+        self._prep_jit = jax.jit(self._prep_fn)
+        # blocks -> tree -> server update in one jitted apply (the per-round
+        # fixed cost would otherwise be tens of eager dispatches and dominate
+        # small cohorts).
+        self._apply_jit = jax.jit(
+            lambda ghat_blocks, params, sstate, step: server_update(
+                self.server,
+                blocks_to_tree(ghat_blocks, self.spec, self.nbar),
+                sstate,
+                params,
+                step,
+            )
+        )
+
+    def _prep_fn(self, rho0, mask, jids, kr):
+        r = rho0 * mask
+        total = jnp.sum(r)
+        rhos_eff = jnp.where(total > 0, r / jnp.maximum(total, 1e-12), 0.0)
+        keys = jax.vmap(lambda i: jax.random.fold_in(kr, i))(jids)
+        return rhos_eff, keys
+
+    # -- client side --------------------------------------------------------
+
+    def _grad_blocks_fn(self, params, batch):
+        """(C, ...) cohort batch -> (C, nb, N) gradient blocks, one vmapped
+        device pass, ``lax.scan``-chunked when ``cohort.chunk`` bounds how
+        many per-client gradient trees materialize at once.  Both impls share
+        this pass — the gradient is the *model's* work; the engine's claim
+        (and the loop oracle) is about the per-client codec path."""
+        vm = jax.vmap(
+            lambda b: flatten_to_blocks(self.grad_fn(params, b), self.n)[0]
+        )
+        leaves = jax.tree_util.tree_leaves(batch)
+        c = leaves[0].shape[0]
+        chunk = self.cohort.chunk
+        if chunk <= 0 or chunk >= c:
+            return vm(batch)
+        nch = -(-c // chunk)
+        pad = nch * chunk - c
+
+        def chunked(x):  # padded slots replay client 0; outputs sliced off
+            xp = jnp.concatenate([x, jnp.repeat(x[:1], pad, axis=0)]) if pad else x
+            return xp.reshape((nch, chunk) + x.shape[1:])
+
+        _, blocks = jax.lax.scan(
+            lambda _, b: (None, vm(b)), None, jax.tree_util.tree_map(chunked, batch)
+        )
+        return blocks.reshape((nch * chunk, self.nb, self.n))[:c]
+
+    def _encode_fn(self, blocks, residual, rho, key):
+        """One client's codec path: (nb, N) blocks -> method payload.
+
+        ``rho`` is the client's effective weight (0 = dropped/outage: the
+        error-feedback residual then absorbs the full carry so nothing is
+        lost).  ``key`` seeds per-client randomness (dither)."""
+        payload: Dict[str, jnp.ndarray] = {}
+        method = self.cohort.method
+        if method in EF_METHODS:
+            codes, alpha, enc_res = self.codec.compress_blocks(blocks, residual)
+            payload["codes"], payload["alpha"] = codes, alpha
+            new_res = jnp.where(rho > 0, enc_res, blocks + residual)
+        elif method == "qcs-dither":
+            dn = self.cohort.dither_n
+            nb2 = -(-self.nbar // dn)
+            flat = blocks.reshape(-1)[: self.nbar]
+            carry = jnp.pad(flat, (0, nb2 * dn - self.nbar)).reshape(nb2, dn)
+            q, delta, dith = self._dither.compress(carry, key)
+            recon = self._dither.reconstruct(q, delta, dith).reshape(-1)[: self.nbar]
+            payload["recon"] = jnp.pad(
+                recon, (0, self.nb * self.n - self.nbar)
+            ).reshape(self.nb, self.n)
+            new_res = residual
+        elif method == "signsgd":
+            payload["signs"] = baselines.signsgd_compress(blocks)
+            new_res = residual
+        else:  # none
+            new_res = residual
+        return payload, new_res
+
+    def _client_pass(self, params, batch, residuals, rhos, keys):
+        """Gradients (always batched) + encode (vmapped, or the per-client
+        Python-loop oracle).  The two impls are bit-identical: they share the
+        gradient pass, and the per-client encode touches only its own row."""
+        blocks = self._grads_jit(params, batch)
+        if self.cohort.impl == "loop":
+            outs = [
+                self._encode_jit(blocks[i], residuals[i], rhos[i], keys[i])
+                for i in range(int(rhos.shape[0]))
+            ]
+            payloads = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *[o[0] for o in outs]
+            )
+            new_res = jnp.stack([o[1] for o in outs])
+        else:
+            payloads, new_res = self._encode_vmap_jit(blocks, residuals, rhos, keys)
+        method = self.cohort.method
+        if self.cohort.record_nmse or method in ("none", "signsgd"):
+            payloads = dict(payloads, blocks=blocks)
+        return payloads, new_res
+
+    # -- PS side ------------------------------------------------------------
+
+    def _ps_fn(self, payloads, rhos_eff, nu_chan, key):
+        """Reconstruction once per round from the stacked cohort payloads.
+        ``nu_chan`` (C, nb) is the channel realization's effective variance;
+        for fedqcs-ae it threads into em_gamp's noise_var next to the
+        Bussgang term, and the received measurements get a matching noise
+        draw (faithful simulation, not just a variance hint)."""
+        method = self.cohort.method
+        stats: Dict[str, jnp.ndarray] = {}
+        true_sum = None
+        if "blocks" in payloads:
+            true_sum = jnp.einsum("k,kbn->bn", rhos_eff, payloads["blocks"])
+        if method == "none":
+            ghat = true_sum
+        elif method == "signsgd":
+            # unweighted majority vote (the baseline's defining semantics);
+            # rho_k = 0 clients abstain (their signs are zeroed out)
+            alive = (rhos_eff > 0).astype(jnp.int8)[:, None, None]
+            scale = jnp.mean(jnp.abs(true_sum))
+            ghat = baselines.signsgd_aggregate(payloads["signs"] * alive, lr_scale=scale)
+        elif method == "qcs-dither":
+            ghat = jnp.einsum("k,kbn->bn", rhos_eff, payloads["recon"])
+        elif method == "qcs-qiht":
+            codes, alphas = payloads["codes"], payloads["alpha"]
+            c, nb, m = codes.shape
+            parts = baselines.qiht_reconstruct(
+                codes.reshape(c * nb, m), alphas.reshape(-1),
+                self.codec.a, self.codec.quantizer, self.fed_cfg.s,
+            )
+            ghat = jnp.einsum("k,kbn->bn", rhos_eff, parts.reshape(c, nb, -1))
+        elif method == "fedqcs-ea":
+            ghat = estimate_and_aggregate(
+                self.codec, payloads["codes"], payloads["alpha"], rhos_eff, self.gamp
+            )
+        else:  # fedqcs-ae
+            codes, alphas = payloads["codes"], payloads["alpha"]
+            q = self.codec.quantizer
+            nu_q = bussgang.effective_noise_var(alphas, rhos_eff, q)
+            stats["nu_quant"] = jnp.mean(nu_q)
+            if self.chan.kind == "ideal":
+                stats["nu_channel"] = jnp.zeros(())
+                ghat = aggregate_and_estimate(
+                    self.codec, codes, alphas, rhos_eff,
+                    groups=self.cohort.groups, gamp=self.gamp,
+                )
+            else:
+                m = self.fed_cfg.m
+                deq = self.codec.dequantize(codes)  # (C, nb, M)
+                noise = jax.random.normal(key, deq.shape) * jnp.sqrt(nu_chan)[..., None]
+                w = bussgang.bussgang_weight(rhos_eff[:, None], alphas, q)  # (C, nb)
+                y = jnp.sum(w[..., None] * (deq + noise), axis=0)
+                nu_ch = jnp.sum(jnp.square(w) * nu_chan, axis=0)  # (nb,)
+                stats["nu_channel"] = jnp.mean(nu_ch)
+                energy = bussgang.signal_energy(alphas, rhos_eff, m, self.n)
+                ghat = em_gamp(
+                    y, nu_q + nu_ch, self.codec.a, self.gamp,
+                    init_var=energy, use_pallas=self.fed_cfg.use_kernels,
+                )
+        if self.cohort.record_nmse and true_sum is not None and method != "none":
+            num = jnp.sum(jnp.square(ghat - true_sum))
+            den = jnp.sum(jnp.square(true_sum)) + 1e-30
+            stats["nmse"] = num / den
+        return ghat, stats
+
+    # -- round loop ---------------------------------------------------------
+
+    def run_round(self) -> Dict[str, float]:
+        """One federated round; advances params/residuals/server state and
+        returns the round's stats (python floats)."""
+        t = self.round
+        prev_sched = self.sched_state
+        ids, rho0, new_sched = select_cohort(
+            self.sched, prev_sched, t, self.data.counts
+        )
+        kr = jax.random.fold_in(self.key, t)
+        k_chan, k_noise = jax.random.split(kr)
+        chan = self._uplink_jit(k_chan, len(ids), self.nb)
+        # Channel outage is a failed participation: un-stamp those clients so
+        # the async staleness discount sees their true last *successful*
+        # round (their residual carries the full gradient meanwhile).
+        dead = ids[np.asarray(chan.mask) == 0]
+        if len(dead):
+            new_sched.last_round[dead] = prev_sched.last_round[dead]
+        self.sched_state = new_sched
+        jids = jnp.asarray(ids)
+        rhos_eff, keys = self._prep_jit(jnp.asarray(rho0), chan.mask, jids, kr)
+
+        batch = self.data.cohort_batch(t, ids)
+        res_c = self.residuals[jids]
+
+        payloads, new_res = self._client_pass(self.params, batch, res_c, rhos_eff, keys)
+        ghat_blocks, stats = self._ps_jit(payloads, rhos_eff, chan.noise_var, k_noise)
+
+        self.residuals = self.residuals.at[jids].set(new_res)
+        self.params, self.server_state = self._apply_jit(
+            ghat_blocks, self.params, self.server_state, t
+        )
+        self.round = t + 1
+        out = {k: float(v) for k, v in stats.items()}
+        out["cohort"] = len(ids)
+        out["participating"] = float(jnp.sum(rhos_eff > 0))
+        return out
+
+    def run(self, rounds: int) -> List[Dict[str, float]]:
+        return [self.run_round() for _ in range(rounds)]
+
+
+# ---------------------------------------------------------------------------
+# Smoke entry point (CI minimal-deps leg): a tiny synthetic cohort end to end.
+#     PYTHONPATH=src python -m repro.fed.engine --clients 8 --rounds 2
+# ---------------------------------------------------------------------------
+
+
+def _smoke_main(argv=None):
+    import argparse
+
+    from repro.fed.partition import PartitionConfig, partition_indices
+    from repro.fed.toy import toy_classification, toy_loss, toy_params
+
+    ap = argparse.ArgumentParser(description="cohort engine smoke")
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--sample-frac", type=float, default=1.0)
+    ap.add_argument("--alpha", type=float, default=0.3)
+    ap.add_argument("--snr-db", type=float, default=None)
+    ap.add_argument("--method", default="fedqcs-ae", choices=METHODS)
+    ap.add_argument("--chunk", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    x, y = toy_classification()
+    parts = partition_indices(
+        y, args.clients, PartitionConfig(kind="dirichlet", alpha=args.alpha, min_size=4)
+    )
+    engine = CohortEngine(
+        toy_params(),
+        jax.grad(toy_loss),
+        ArrayClientData(x, y, parts, batch_size=4),
+        fed_cfg=FedQCSConfig(block_size=64, reduction_ratio=2, bits=3, gamp_iters=10),
+        cohort=CohortConfig(method=args.method, chunk=args.chunk),
+        sched=SchedulerConfig(
+            kind="uniform" if args.sample_frac < 1.0 else "full",
+            sample_frac=args.sample_frac,
+        ),
+        chan=ChannelConfig(kind="awgn", snr_db=args.snr_db)
+        if args.snr_db is not None
+        else ChannelConfig(),
+        server=ServerOptConfig(kind="fedadam", lr=0.01),
+    )
+    for i, stats in enumerate(engine.run(args.rounds)):
+        print("round", i, stats)
+        assert all(np.isfinite(v) for v in stats.values()), stats
+    print("smoke ok:", args.clients, "clients,", args.rounds, "rounds")
+
+
+if __name__ == "__main__":
+    _smoke_main()

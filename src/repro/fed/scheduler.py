@@ -1,0 +1,100 @@
+"""Client participation schedulers (DESIGN.md #Fed-engine).
+
+A scheduler decides, per round, *which* clients compute and with *what*
+aggregation weight — it is the sole producer of the ``rho_k`` vector the
+reconstruction stack already consumes (``core/reconstruction.py``,
+``runtime/collectives.py``): a scheduled-but-dropped client keeps its cohort
+slot with ``rho_k = 0``, so stragglers degrade gradient quality instead of
+changing any array shape (the same contract as pod failure in the
+collectives).
+
+Kinds:
+
+  * ``full``     — every client, every round (the paper's Sec. VI setting).
+  * ``uniform``  — ``ceil(sample_frac * K)`` clients drawn uniformly without
+    replacement (FedAvg-style partial participation).
+  * ``async``    — uniform sampling, but each selected client's weight is
+    discounted by its staleness (rounds since it last participated) with the
+    standard polynomial discount ``(1 + staleness) ** -staleness_decay``:
+    clients returning after a long gap push a stale pseudo-gradient, so the
+    server trusts them less.
+
+Straggler/dropout model: after selection, each cohort member independently
+fails with ``dropout_prob``.  Dropped members stay in the cohort arrays with
+``rho_k = 0``; the engine then carries their *full* gradient forward in the
+error-feedback residual (nothing of a straggler's work is lost — see
+``engine.py`` and the matching collectives behavior).
+
+Weights are data-size proportional (``rho_k ∝ |D_k|``, the paper's Sec. II
+weighting) before the staleness discount, and renormalized to sum to 1 over
+the surviving cohort.  All host-side numpy, deterministic in (seed, round).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+__all__ = ["SchedulerConfig", "SchedulerState", "select_cohort"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    kind: str = "full"  # full | uniform | async
+    sample_frac: float = 1.0  # cohort fraction for uniform/async
+    dropout_prob: float = 0.0  # per-round straggler probability
+    staleness_decay: float = 0.5  # async polynomial discount exponent
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SchedulerState:
+    """``last_round[k]`` = round of client k's last successful participation
+    (-1 = never).  Only the async scheduler reads it; all kinds update it."""
+
+    last_round: np.ndarray
+
+    @classmethod
+    def init(cls, clients: int) -> "SchedulerState":
+        return cls(last_round=np.full(clients, -1, np.int64))
+
+
+def select_cohort(
+    cfg: SchedulerConfig,
+    state: SchedulerState,
+    round_idx: int,
+    counts: np.ndarray,  # (K,) per-client sample counts (rho ∝ counts)
+) -> Tuple[np.ndarray, np.ndarray, SchedulerState]:
+    """Returns (cohort client ids (C,), rhos (C,) summing to 1 (or all zero if
+    the whole cohort dropped), updated state)."""
+    k = len(counts)
+    # 0x5EED namespaces this stream away from the data-sampling rng, which
+    # may share the same user-facing seed (see ArrayClientData).
+    rng = np.random.default_rng((cfg.seed, 0x5EED, round_idx))
+    if cfg.kind == "full":
+        ids = np.arange(k)
+    elif cfg.kind in ("uniform", "async"):
+        c = max(1, int(np.ceil(cfg.sample_frac * k)))
+        ids = np.sort(rng.choice(k, size=min(c, k), replace=False))
+    else:
+        raise ValueError(f"unknown scheduler kind {cfg.kind!r}")
+
+    alive = (
+        rng.random(len(ids)) >= cfg.dropout_prob
+        if cfg.dropout_prob > 0
+        else np.ones(len(ids), bool)
+    )
+    w = np.asarray(counts, np.float64)[ids] * alive
+    if cfg.kind == "async" and cfg.staleness_decay > 0:
+        staleness = np.where(
+            state.last_round[ids] < 0, 0, round_idx - 1 - state.last_round[ids]
+        ).clip(min=0)
+        w = w * (1.0 + staleness) ** (-cfg.staleness_decay)
+    total = w.sum()
+    rhos = (w / total if total > 0 else w).astype(np.float32)
+
+    new_state = SchedulerState(last_round=state.last_round.copy())
+    new_state.last_round[ids[alive]] = round_idx
+    return ids, rhos, new_state

@@ -1,0 +1,77 @@
+"""Server-side optimizers over the reconstructed aggregate (DESIGN.md
+#Fed-engine).
+
+The PS treats the reconstructed, rho-weighted aggregate as a pseudo-gradient
+and applies one server update per round (Reddi et al., "Adaptive Federated
+Optimization"):
+
+  * ``fedavg``  — plain SGD: ``params -= lr * ghat`` (lr=1 recovers classical
+    parameter averaging of client deltas).
+  * ``fedavgm`` — server momentum: ``m = momentum*m + ghat; params -= lr*m``.
+  * ``fedadam`` — server Adam; delegates to ``optim/adam.py`` with clipping,
+    warmup, and decay disabled, which is exactly the update the paper's
+    Sec. VI experiment ran (and what ``paper/mlp.py`` used before the cohort
+    engine absorbed it), so the rewire is update-for-update identical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adam
+
+__all__ = ["ServerOptConfig", "init_server_state", "server_update"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerOptConfig:
+    kind: str = "fedadam"  # fedavg | fedavgm | fedadam
+    lr: float = 0.003
+    momentum: float = 0.9  # fedavgm
+    b1: float = 0.9  # fedadam
+    b2: float = 0.999
+    eps: float = 1e-8
+
+    def _adam_cfg(self) -> adam.OptConfig:
+        return adam.OptConfig(
+            lr=self.lr, b1=self.b1, b2=self.b2, eps=self.eps, grad_clip=0.0,
+            warmup_steps=0, decay_steps=10**9, min_lr_frac=1.0,
+        )
+
+
+def init_server_state(cfg: ServerOptConfig, params: Any) -> Dict[str, Any]:
+    if cfg.kind == "fedadam":
+        return adam.init_state(cfg._adam_cfg(), params)
+    if cfg.kind == "fedavgm":
+        return {"m": jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+    if cfg.kind == "fedavg":
+        return {}
+    raise ValueError(f"unknown server optimizer {cfg.kind!r}")
+
+
+def server_update(
+    cfg: ServerOptConfig, ghat: Any, state: Dict[str, Any], params: Any, step
+) -> Tuple[Any, Dict[str, Any]]:
+    """One server round: (params, state) <- update(params, ghat)."""
+    if cfg.kind == "fedadam":
+        return adam.update(cfg._adam_cfg(), ghat, state, params, step)
+    if cfg.kind == "fedavgm":
+        new_m = jax.tree_util.tree_map(
+            lambda m, g: cfg.momentum * m + g.astype(jnp.float32), state["m"], ghat
+        )
+        new_params = jax.tree_util.tree_map(
+            lambda p, m: (p.astype(jnp.float32) - cfg.lr * m).astype(p.dtype),
+            params, new_m,
+        )
+        return new_params, {"m": new_m}
+    if cfg.kind == "fedavg":
+        new_params = jax.tree_util.tree_map(
+            lambda p, g: (p.astype(jnp.float32) - cfg.lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, ghat,
+        )
+        return new_params, state
+    raise ValueError(f"unknown server optimizer {cfg.kind!r}")

@@ -1,0 +1,39 @@
+"""The shared toy federation: a Gaussian-prototype classification problem +
+softmax linear classifier, small enough that per-client compute is
+negligible.  One definition serves the engine smoke (``python -m
+repro.fed``), the cohort-scaling benchmark (``benchmarks/run.py --only
+fed``), and ``tests/test_fed.py`` — so all three exercise the identical
+workload.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["toy_classification", "toy_loss", "toy_params"]
+
+
+def toy_classification(n_samples: int = 512, dim: int = 32, classes: int = 4,
+                       noise: float = 0.5, seed: int = 0):
+    """Returns (x, y): class-prototype Gaussians with pixel noise."""
+    rng = np.random.default_rng(seed)
+    protos = rng.normal(0, 1, (classes, dim)).astype(np.float32)
+    y = rng.integers(0, classes, n_samples).astype(np.int32)
+    x = (protos[y] + rng.normal(0, noise, (n_samples, dim))).astype(np.float32)
+    return x, y
+
+
+def toy_loss(params, batch):
+    """Softmax cross-entropy of the linear classifier on an {"x","y"} batch."""
+    logp = jax.nn.log_softmax(batch["x"] @ params["w"] + params["b"])
+    return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], axis=1))
+
+
+def toy_params(dim: int = 32, classes: int = 4, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(0, 0.1, (dim, classes)), jnp.float32),
+        "b": jnp.zeros((classes,), jnp.float32),
+    }

@@ -8,6 +8,15 @@ handles process groups); in this container it runs reduced configs on
 simulated devices.  Wires together: config registry, synthetic data,
 FedQCS train step, checkpointing with auto-resume, straggler/failure
 handling via the participation vector, and periodic eval.
+
+Cohort mode (`--fed-cohort`, DESIGN.md #Fed-engine) replaces the pod
+collective with the `repro.fed` engine: the registry model is trained by a
+simulated federation of `--clients` devices (Dirichlet `--alpha` dialect
+skew over the synthetic language, `--sample-frac` uniform participation,
+`--dropout` stragglers, `--snr-db` AWGN uplink):
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
+        --fed-cohort --clients 64 --sample-frac 0.25 --snr-db 10 --steps 20
 """
 
 import os
@@ -42,6 +51,25 @@ def main():
     ap.add_argument("--Q", type=int, default=3)
     ap.add_argument("--s-ratio", type=float, default=0.05)
     ap.add_argument("--pods", type=int, default=2)
+    # -- cohort mode (repro.fed engine) ------------------------------------
+    ap.add_argument("--fed-cohort", action="store_true",
+                    help="train via the fed cohort engine instead of the pod step")
+    ap.add_argument("--clients", type=int, default=64)
+    ap.add_argument("--alpha", type=float, default=0.0,
+                    help="Dirichlet dialect concentration (0 = homogeneous)")
+    ap.add_argument("--snr-db", type=float, default=None,
+                    help="AWGN uplink SNR in dB (unset = ideal channel)")
+    ap.add_argument("--sample-frac", type=float, default=1.0)
+    ap.add_argument("--dropout", type=float, default=0.0,
+                    help="per-round straggler probability")
+    ap.add_argument("--scheduler", default=None,
+                    choices=["full", "uniform", "async"],
+                    help="default: uniform when --sample-frac < 1, else full")
+    ap.add_argument("--server-opt", default="fedadam",
+                    choices=["fedadam", "fedavg", "fedavgm"])
+    ap.add_argument("--client-batch", type=int, default=2)
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="clients per scan chunk in the vmapped cohort pass")
     ap.add_argument("--production-mesh", action="store_true",
                     help="use the 2x16x16 mesh (needs 512 devices)")
     ap.add_argument("--ckpt-dir", default="")
@@ -51,6 +79,8 @@ def main():
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.fed_cohort:
+        return run_fed_cohort(args, cfg)
     mesh = (
         make_production_mesh(multi_pod=args.pods > 1)
         if args.production_mesh
@@ -92,6 +122,57 @@ def main():
     ckpt.save(args.steps - 1, state)
     ckpt.wait()
     print("[train] done")
+
+
+def run_fed_cohort(args, cfg):
+    """Registry-model training through the repro.fed cohort engine: clients
+    hold dialect-skewed synthetic-language streams, the uplink is ideal or
+    AWGN at --snr-db, and the PS applies --server-opt to the reconstructed
+    aggregate.  Runs on a single (simulated) device — the cohort axis is
+    vmap+scan, not a mesh axis."""
+    from repro.fed.channel import ChannelConfig
+    from repro.fed.engine import CohortConfig, CohortEngine, TokenClientData
+    from repro.fed.scheduler import SchedulerConfig
+    from repro.fed.server_opt import ServerOptConfig
+    from repro.models import model
+
+    fed = FedQCSConfig(block_size=255, reduction_ratio=args.R, bits=args.Q,
+                       s_ratio=args.s_ratio, gamp_iters=15,
+                       gamp_variance_mode="scalar")
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    data = TokenClientData(cfg.vocab_size, batch=args.client_batch, seq=args.seq,
+                           clients=args.clients, alpha=args.alpha)
+    sched_kind = args.scheduler or ("uniform" if args.sample_frac < 1.0 else "full")
+    engine = CohortEngine(
+        params,
+        jax.grad(lambda p, b: model.train_loss(p, b, cfg)),
+        data,
+        fed_cfg=fed,
+        cohort=CohortConfig(method="fedqcs-ae", chunk=args.chunk),
+        sched=SchedulerConfig(kind=sched_kind, sample_frac=args.sample_frac,
+                              dropout_prob=args.dropout),
+        chan=(ChannelConfig(kind="awgn", snr_db=args.snr_db)
+              if args.snr_db is not None else ChannelConfig()),
+        server=ServerOptConfig(kind=args.server_opt, lr=args.lr),
+    )
+    probe = TokenDataset(cfg.vocab_size, batch=16, seq=args.seq, seed=123).get_batch(0)
+    eval_loss = jax.jit(lambda p: model.train_loss(p, probe, cfg))
+    print(f"[fed-cohort] arch={cfg.name} params={n_params:,} "
+          f"clients={args.clients} alpha={args.alpha} "
+          f"sample_frac={args.sample_frac} "
+          f"channel={'awgn@%gdB' % args.snr_db if args.snr_db is not None else 'ideal'} "
+          f"server={args.server_opt} ({fed.bits_per_entry:.2f} bits/entry)")
+    t0 = time.time()
+    for t in range(args.steps):
+        stats = engine.run_round()
+        if t % args.log_every == 0 or t == args.steps - 1:
+            print(f"round {t:5d}  eval-loss {float(eval_loss(engine.params)):.4f}  "
+                  f"cohort {stats['cohort']:4.0f} "
+                  f"(part {stats['participating']:4.0f})  "
+                  f"nmse {stats.get('nmse', float('nan')):.3f}  "
+                  f"({time.time() - t0:.0f}s)")
+    print("[fed-cohort] done")
 
 
 if __name__ == "__main__":

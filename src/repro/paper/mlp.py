@@ -2,10 +2,13 @@
 K=30 non-IID devices with Adam at the PS, minibatch 1 per device per round.
 
 This module is the e2e substrate for the Fig. 2-6 benchmarks and the
-examples/federated_mnist.py driver.  It simulates every device faithfully:
-per-device error feedback, per-device minibatch draws, PS-side
-reconstruction via any of {fedqcs-ea, fedqcs-ae, qcs-qiht, qcs-dither,
-signsgd, none}.
+examples/federated_mnist.py driver.  The round loop itself lives in the
+cohort engine (``repro.fed.engine``, DESIGN.md #Fed-engine):
+:func:`run_federated` wires the paper's partition (one digit per device),
+full participation, ideal uplink, and server-side Adam into the engine —
+and exposes the engine's scenario axes (client count, Dirichlet alpha,
+sampling fraction, SNR) so the same driver scales from the paper's K=30 to
+thousands of heterogeneous clients on a fading channel.
 """
 
 from __future__ import annotations
@@ -18,11 +21,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines
-from repro.core.compression import BQCSCodec, FedQCSConfig, blocks_to_tree, flatten_to_blocks
-from repro.core.gamp import GampConfig, qem_gamp
+from repro.core.compression import FedQCSConfig
 from repro.data import mnist
-from repro.optim.adam import OptConfig, init_state, update
+from repro.fed.channel import ChannelConfig
+from repro.fed.engine import ArrayClientData, CohortConfig, CohortEngine
+from repro.fed.partition import PartitionConfig, partition_indices
+from repro.fed.scheduler import SchedulerConfig
+from repro.fed.server_opt import ServerOptConfig
 
 N_IN, N_HID, N_OUT = 784, 20, 10  # N_bar = 15,910
 
@@ -58,6 +63,11 @@ def accuracy(params, x, y):
     return jnp.mean(jnp.argmax(mlp_logits(params, x), axis=-1) == y)
 
 
+def mlp_grad_fn(params, batch):
+    """Engine-facing gradient: batch is the ArrayClientData {"x", "y"} dict."""
+    return jax.grad(mlp_loss)(params, batch["x"], batch["y"])
+
+
 @dataclasses.dataclass
 class RunResult:
     accs: List[float]
@@ -78,119 +88,58 @@ def run_federated(
     batch_per_device: int = 1,  # paper: |D_k^(t)| = 1
     groups: int = 1,  # AE: G
     record_nmse: bool = True,
+    # --- cohort scenario axes (defaults = the paper's Sec. VI setting) -----
+    partition: str = "paper",  # paper | iid | shard | dirichlet
+    alpha: float = 0.1,  # dirichlet concentration
+    scheduler: str = "full",  # full | uniform | async
+    sample_frac: float = 1.0,
+    dropout: float = 0.0,
+    channel: str = "ideal",  # ideal | awgn | rayleigh
+    snr_db: float = 20.0,
+    server: str = "fedadam",  # fedadam | fedavg | fedavgm
+    chunk: int = 0,
+    impl: str = "vmap",  # vmap | loop (the per-client oracle)
 ) -> RunResult:
-    """Runs the paper's federated loop and returns accuracy/NMSE traces."""
+    """Runs the federated loop on the cohort engine; returns accuracy/NMSE
+    traces.  The default arguments reproduce the paper's experiment exactly;
+    the scenario axes open the FedVQCS-style wireless cohort settings."""
     (xtr, ytr, xte, yte), _ = mnist.load(seed)
-    shards = mnist.federated_split(xtr, ytr, k=k_devices, seed=seed)
+    parts = partition_indices(
+        ytr, k_devices, PartitionConfig(kind=partition, alpha=alpha, seed=seed)
+    )
     fed_cfg = fed_cfg or FedQCSConfig(
-        block_size=N_IN * N_HID // 8 + 1,  # ~B=10 blocks over N_bar=15910
-        reduction_ratio=3,
-        bits=3,
-        s_ratio=0.1,
-        gamp_iters=25,
+        reduction_ratio=3, bits=3, s_ratio=0.1, gamp_iters=25
     )
     # Paper blocking: B=10 blocks -> N = ceil(15910/10) = 1591.
-    n_block = 1591
-    fed_cfg = dataclasses.replace(fed_cfg, block_size=n_block)
-    codec = BQCSCodec(fed_cfg)
-    gamp = GampConfig(
-        n_components=fed_cfg.gamp_components,
-        iters=fed_cfg.gamp_iters,
-        variance_mode=fed_cfg.gamp_variance_mode,
-    )
+    fed_cfg = dataclasses.replace(fed_cfg, block_size=1591)
 
-    key = jax.random.PRNGKey(seed)
-    params = init_mlp(key)
-    opt_cfg = OptConfig(lr=lr, b1=0.9, b2=0.999, eps=1e-8, grad_clip=0.0,
-                        warmup_steps=0, decay_steps=10**9, min_lr_frac=1.0)
-    opt_state = init_state(opt_cfg, params)
-    blocks0, spec, nbar = flatten_to_blocks(params, n_block)
-    nb = blocks0.shape[0]
-    residuals = [jnp.zeros((nb, n_block), jnp.float32) for _ in range(k_devices)]
-    dither = baselines.DitherCodec(n=2048, m=2048 // fed_cfg.reduction_ratio, bits=fed_cfg.bits)
-    rng = np.random.default_rng(seed)
+    params = init_mlp(jax.random.PRNGKey(seed))
+    engine = CohortEngine(
+        params,
+        mlp_grad_fn,
+        ArrayClientData(xtr, ytr, parts, batch_size=batch_per_device, seed=seed),
+        fed_cfg=fed_cfg,
+        cohort=CohortConfig(
+            method=method, groups=groups, record_nmse=record_nmse,
+            chunk=chunk, impl=impl, seed=seed,
+        ),
+        sched=SchedulerConfig(
+            kind=scheduler, sample_frac=sample_frac, dropout_prob=dropout, seed=seed
+        ),
+        chan=ChannelConfig(kind=channel, snr_db=snr_db),
+        server=ServerOptConfig(kind=server, lr=lr, b1=0.9, b2=0.999, eps=1e-8),
+    )
 
     accs, nmses, losses = [], [], []
-    rhos = jnp.full((k_devices,), 1.0 / k_devices)
-    t0 = time.time()
     xte_j, yte_j = jnp.asarray(xte), jnp.asarray(yte)
-
-    encode_jit = jax.jit(codec.compress_blocks)
-    ea_jit = jax.jit(
-        lambda c, a: qem_gamp(c.reshape(-1, fed_cfg.m), a.reshape(-1), codec.a, codec.quantizer, gamp)
-    )
-
+    t0 = time.time()
     for t in range(steps):
-        # ---- device side -------------------------------------------------
-        grads, blocks_k = [], []
-        for k in range(k_devices):
-            xk, yk = shards[k]
-            idx = rng.integers(0, xk.shape[0], batch_per_device)
-            g = device_grad(params, jnp.asarray(xk[idx]), jnp.asarray(yk[idx]))
-            blocks, _, _ = flatten_to_blocks(g, n_block)
-            grads.append(g)
-            blocks_k.append(blocks)
-        true_blocks = sum(rhos[k] * blocks_k[k] for k in range(k_devices))
-
-        # ---- compression + PS reconstruction -----------------------------
-        if method == "none":
-            ghat_blocks = true_blocks
-        elif method == "signsgd":
-            signs = jnp.stack([baselines.signsgd_compress(b) for b in blocks_k])
-            scale = float(jnp.mean(jnp.abs(true_blocks)))
-            ghat_blocks = baselines.signsgd_aggregate(signs, lr_scale=scale)
-        elif method == "qcs-dither":
-            nb2 = (nbar + dither.n - 1) // dither.n
-            acc = jnp.zeros((nb2, dither.n), jnp.float32)
-            for k in range(k_devices):
-                carry = blocks_k[k].reshape(-1)[:nbar]
-                carry = jnp.pad(carry, (0, nb2 * dither.n - nbar)).reshape(nb2, dither.n)
-                dkey = jax.random.fold_in(jax.random.PRNGKey(seed + 99), t * k_devices + k)
-                q, delta, dith = dither.compress(carry, dkey)
-                acc = acc + rhos[k] * dither.reconstruct(q, delta, dith)
-            ghat_blocks = acc.reshape(-1)[:nbar]
-            ghat_blocks = jnp.pad(ghat_blocks, (0, nb * n_block - nbar)).reshape(nb, n_block)
-        else:
-            codes_k, alpha_k = [], []
-            for k in range(k_devices):
-                c, a, new_res = encode_jit(blocks_k[k], residuals[k])
-                residuals[k] = new_res
-                codes_k.append(c)
-                alpha_k.append(a)
-            codes = jnp.stack(codes_k)
-            alphas = jnp.stack(alpha_k)
-            if method == "fedqcs-ea":
-                ghat = ea_jit(codes, alphas).reshape(k_devices, nb, n_block)
-                ghat_blocks = jnp.sum(rhos[:, None, None] * ghat, axis=0)
-            elif method == "fedqcs-ae":
-                from repro.core.reconstruction import aggregate_and_estimate
-
-                ghat_blocks = aggregate_and_estimate(
-                    codec, codes, alphas, rhos, groups=groups, gamp=gamp
-                )
-            elif method == "qcs-qiht":
-                parts = [
-                    baselines.qiht_reconstruct(
-                        codes[k], alphas[k], codec.a, codec.quantizer, fed_cfg.s
-                    )
-                    for k in range(k_devices)
-                ]
-                ghat_blocks = sum(rhos[k] * parts[k] for k in range(k_devices))
-            else:
-                raise ValueError(method)
-
-        if record_nmse:
-            num = float(jnp.sum((ghat_blocks - true_blocks) ** 2))
-            den = float(jnp.sum(true_blocks**2)) + 1e-30
-            nmses.append(num / den)
-
-        # ---- PS update (Adam, paper Sec. VI) ------------------------------
-        ghat_tree = blocks_to_tree(ghat_blocks, spec, nbar)
-        params, opt_state = update(opt_cfg, ghat_tree, opt_state, params, t)
-
+        stats = engine.run_round()
+        if record_nmse and "nmse" in stats:
+            nmses.append(stats["nmse"])
         if t % eval_every == 0 or t == steps - 1:
-            accs.append(float(accuracy(params, xte_j, yte_j)))
-            losses.append(float(mlp_loss(params, xte_j, yte_j)))
+            accs.append(float(accuracy(engine.params, xte_j, yte_j)))
+            losses.append(float(mlp_loss(engine.params, xte_j, yte_j)))
 
     bits = (
         32.0

@@ -19,6 +19,11 @@ in-pod mesh).  Two wire modes:
 Partial participation: a pod whose ``participating`` flag is 0 contributes
 rho_k = 0 -- its payload is exactly ignored (Sec. IV weighting), so node
 failure/straggling degrades gradient quality instead of failing the step.
+The dead pod's error-feedback residual absorbs its FULL carry (blocks +
+residual), not just the sparsification remainder: the top-S portion of a
+straggler's gradient would otherwise be silently dropped (encoded but never
+aggregated); carrying it forward re-transmits it once the pod rejoins.  The
+fed cohort engine (repro.fed.engine) applies the same contract per client.
 """
 
 from __future__ import annotations
@@ -66,6 +71,9 @@ def fedqcs_pod_allreduce(
         # The encoder emits the packed uint32 wire words directly (one fused
         # Pallas pass when cfg.use_kernels); no separate pack stage.
         words, alpha, new_residual = codec.compress_blocks_packed(blocks + 0.0, residual)
+        # Dead pod: nothing it encoded reaches the aggregate, so its residual
+        # keeps the full carry for re-transmission on rejoin.
+        new_residual = jnp.where(part > 0, new_residual, blocks + residual)
         words = cs(words, "blocks", None)
         new_residual = cs(new_residual, "blocks", None)
         all_words = jax.lax.all_gather(words, axis_name)  # (K, nb, W)
@@ -83,6 +91,7 @@ def fedqcs_pod_allreduce(
         energy = bussgang.signal_energy(all_alpha, rhos, m, n)
     else:  # psum_dequant: codes never cross the wire, only dequantized sums
         codes, alpha, new_residual = codec.compress_blocks(blocks + 0.0, residual)
+        new_residual = jnp.where(part > 0, new_residual, blocks + residual)
         codes = cs(codes, "blocks", None)
         new_residual = cs(new_residual, "blocks", None)
         w = bussgang.bussgang_weight(rho_self, alpha, codec.quantizer)  # (nb,)
@@ -125,6 +134,10 @@ def fedqcs_vmapped_allreduce(
     rhos = part / jnp.maximum(jnp.sum(part), 1.0)  # (pods,)
 
     codes, alpha, new_residual = jax.vmap(codec.compress_blocks)(blocks_pp, residual_pp)
+    # Dead pods keep the full carry in their residual (see module docstring).
+    new_residual = jnp.where(
+        part[:, None, None] > 0, new_residual, blocks_pp + residual_pp
+    )
     codes = cs(codes, None, "blocks", None)
     new_residual = cs(new_residual, None, "blocks", None)
 
@@ -186,6 +199,8 @@ def make_sharded_allreduce(codec: BQCSCodec, mesh, local_shapes, nbar_local: int
                 flat = jnp.concatenate([flat, jnp.zeros((pods, pad), flat.dtype)], 1)
             blocks = flat.reshape(pods, -1, n)
             codes, alpha, new_res = jax.vmap(codec.compress_blocks)(blocks, residual)
+            # rho == 0 pods are dead: full carry stays in the residual.
+            new_res = jnp.where(rhos[:, None, None] > 0, new_res, blocks + residual)
             # Bussgang-weighted sum over the (auto) pod axis -> cross-pod
             # all-reduce of the dequantized projections; everything else local.
             y = bussgang.aggregate_codes(codes, alpha, rhos, codec.quantizer)

@@ -247,6 +247,85 @@ def test_gather_codes_payload_is_packed_uint32():
     assert payload_bits == ref_payload.wire_bits()
 
 
+def test_partial_participation_payload_ignored_and_residual_carry():
+    """A pod with participating=0 contributes exactly zero (rho_k = 0): the
+    reconstructed aggregate is bit-identical under arbitrary changes to the
+    dead pod's gradient — and the dead pod's residual carries its FULL
+    gradient forward (blocks + residual), not just the top-S remainder, so a
+    straggler's work is re-transmitted on rejoin instead of lost."""
+    from repro.core.compression import BQCSCodec
+    from repro.runtime.collectives import fedqcs_vmapped_allreduce
+
+    codec = BQCSCodec(FED)
+    nb, n = 4, FED.block_size
+    rng = np.random.default_rng(0)
+    blocks0 = jnp.asarray(rng.normal(0, 1, (nb, n)), jnp.float32)
+    resid0 = jnp.asarray(rng.normal(0, 0.1, (nb, n)), jnp.float32)
+    garbage = jnp.asarray(rng.normal(0, 100.0, (nb, n)), jnp.float32)
+    dead_res = jnp.asarray(rng.normal(0, 0.1, (nb, n)), jnp.float32)
+    part = jnp.asarray([1.0, 0.0])
+
+    def run(dead_blocks):
+        return fedqcs_vmapped_allreduce(
+            jnp.stack([blocks0, dead_blocks]),
+            jnp.stack([resid0, dead_res]),
+            codec,
+            part,
+        )
+
+    ghat_a, res_a = run(garbage)
+    ghat_b, res_b = run(jnp.zeros((nb, n), jnp.float32))
+    # dead payload exactly ignored: aggregate independent of its content
+    np.testing.assert_array_equal(np.asarray(ghat_a), np.asarray(ghat_b))
+    # alive pod's residual: the usual encoder remainder, same in both runs
+    np.testing.assert_array_equal(np.asarray(res_a[0]), np.asarray(res_b[0]))
+    # dead pod's residual: full carry, blocks + residual
+    np.testing.assert_array_equal(
+        np.asarray(res_a[1]), np.asarray(garbage + dead_res)
+    )
+
+
+def test_partial_participation_shard_map_residual_carry():
+    """Same contract through the manual-'pod' collective (gather_codes wire):
+    the dead pod's residual is the full carry and the alive pod's aggregate
+    ignores the dead payload exactly."""
+    from jax.sharding import Mesh
+    from jax.sharding import PartitionSpec as P
+
+    from repro import jax_compat
+    from repro.core.compression import BQCSCodec
+    from repro.runtime.collectives import fedqcs_pod_allreduce
+
+    codec = BQCSCodec(FED)
+    nb, n = 4, FED.block_size
+    rng = np.random.default_rng(1)
+    blocks0 = jnp.asarray(rng.normal(0, 1, (nb, n)), jnp.float32)
+    resid = jnp.zeros((2 * nb, n), jnp.float32)
+    part = jnp.asarray([1.0, 0.0])
+    mesh = Mesh(np.array(jax.devices()[:2]), ("pod",))
+    smap = jax_compat.shard_map(
+        lambda b, r, p: fedqcs_pod_allreduce(b, r, codec, participating=p[0]),
+        mesh=mesh,
+        in_specs=(P("pod"), P("pod"), P("pod")),
+        out_specs=(P("pod"), P("pod")),
+        axis_names={"pod"},
+        check_vma=False,
+    )
+
+    def run(dead_blocks):
+        with jax_compat.set_mesh(mesh):
+            return smap(jnp.concatenate([blocks0, dead_blocks]), resid, part)
+
+    garbage = jnp.asarray(rng.normal(0, 50.0, (nb, n)), jnp.float32)
+    ghat_a, res_a = run(garbage)
+    ghat_b, res_b = run(jnp.zeros((nb, n), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(ghat_a), np.asarray(ghat_b))
+    # every pod reconstructs the same aggregate redundantly
+    np.testing.assert_array_equal(np.asarray(ghat_a[:nb]), np.asarray(ghat_a[nb:]))
+    # dead pod residual = its full carry (zero prior residual -> its blocks)
+    np.testing.assert_array_equal(np.asarray(res_a[nb:]), np.asarray(garbage))
+
+
 def test_partial_participation_step():
     """Marking pod 1 dead must still step (rho renormalization) -- failure
     degrades gradient quality instead of failing the step."""
