@@ -19,22 +19,28 @@ import sys
 import time
 import traceback
 
-_BENCH_DIR = os.path.join(
-    os.path.dirname(os.path.abspath(__file__)), os.pardir, "runs", "bench"
-)
+_ROOT_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), os.pardir)
+_BENCH_DIR = os.path.join(_ROOT_DIR, "runs", "bench")
 BENCH_GAMP_JSON = os.path.join(_BENCH_DIR, "BENCH_gamp.json")
 BENCH_ENCODE_JSON = os.path.join(_BENCH_DIR, "BENCH_encode.json")
 BENCH_FED_JSON = os.path.join(_BENCH_DIR, "BENCH_fed.json")
+BENCH_RECON_JSON = os.path.join(_BENCH_DIR, "BENCH_recon.json")
 
 
 def _write_bench_json(path: str, bench: str, entries: list) -> None:
     """Writes one BENCH_*.json; every entry must already carry the schema
-    keys (name / wall_ms / derived)."""
+    keys (name / wall_ms / derived).  Every file is mirrored to the repo
+    root (same basename) so the per-PR perf trajectory lives where the
+    acceptance tooling and reviewers look first; runs/bench/ keeps the
+    canonical copy CI uploads."""
     for e in entries:
         assert {"name", "wall_ms", "derived"} <= set(e), e
+    doc = {"bench": bench, "entries": entries}
     os.makedirs(os.path.dirname(path), exist_ok=True)
     with open(path, "w") as f:
-        json.dump({"bench": bench, "entries": entries}, f, indent=2)
+        json.dump(doc, f, indent=2)
+    with open(os.path.join(_ROOT_DIR, os.path.basename(path)), "w") as f:
+        json.dump(doc, f, indent=2)
 
 
 def kernel_micro(fast=True):
@@ -222,6 +228,134 @@ def encode_fused_vs_unfused(fast=True):
     return rows
 
 
+def recon_scaling(fast=True):
+    """PS reconstruction engine (EXPERIMENTS.md #Recon-engine): blocks/sec of
+    the EA (estimate-and-aggregate, best-NMSE) decode at cohort sizes
+    {32, 256, 1000}, packed-vs-unpacked and chunked/sharded-vs-monolithic.
+
+    Four decode paths per cohort over identical seeded payloads
+    (heterogeneous per-block sparsity, so convergence varies):
+
+      * ``recon_mono_unpacked``  -- the pre-engine path: one monolithic
+        K*nb-row GAMP batch over the uint8 code view (what
+        ``estimate_and_aggregate`` did before chunking existed);
+      * ``recon_mono_packed``    -- same batch consuming wire words;
+      * ``recon_chunked_packed`` -- lax.scan chunk stream, packed, early-stop
+        per chunk: live GAMP state bounded at chunk rows (single device);
+      * ``recon_sharded_packed`` -- the full engine: chunks sharded over a
+        ('recon',) mesh of all host devices via shard_map, packed,
+        early-stop.  The acceptance path.
+
+    ``unpacked_peak_bytes`` records the largest uint8 code view any path
+    materializes at once (rows*M monolithic, chunk*M per-chunk on the
+    chunked XLA path, 0 in-kernel on TPU).
+    """
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.core import recon_engine
+    from repro.core.compression import BQCSCodec, FedQCSConfig, pack_codes
+    from repro.core.gamp import GampConfig
+    from repro.core.reconstruction import (
+        estimate_and_aggregate,
+        estimate_and_aggregate_packed,
+    )
+
+    n, r, q, nb = 256, 4, 2, 2
+    iters = 15 if fast else 25
+    cfg = FedQCSConfig(block_size=n, reduction_ratio=r, bits=q, s_ratio=0.08)
+    codec = BQCSCodec(cfg)
+    m = cfg.m
+    gamp = GampConfig(iters=iters, variance_mode="scalar", tol=1e-4)
+    gamp_es = dataclasses.replace(gamp, early_stop=True)
+    devices = jax.devices()
+    mesh = Mesh(np.array(devices), ("recon",)) if len(devices) > 1 else None
+
+    rng = np.random.default_rng(0)
+    rows_all, entries = [], []
+    for k in (32, 256, 1000):
+        rows = k * nb
+        g = np.zeros((rows, n), np.float32)
+        for i in range(rows):
+            s = rng.integers(max(1, n // 40), cfg.s + 1)
+            idx = rng.choice(n, s, replace=False)
+            g[i, idx] = rng.normal(0, 0.1, s)
+        codes, alpha, _ = codec.compress_blocks(
+            jnp.asarray(g), jnp.zeros((rows, n), jnp.float32)
+        )
+        codes = codes.reshape(k, nb, m)
+        alphas = alpha.reshape(k, nb)
+        words = jax.vmap(lambda c: pack_codes(c, q))(codes)
+        rhos = jnp.full((k,), 1.0 / k)
+        # chunk sized so small cohorts don't scan-pad into dead work
+        ndev = max(1, len(devices))
+        chunk = min(128, max(8, -(-rows // ndev)))
+
+        cases = {
+            "mono_unpacked": (
+                jax.jit(lambda c, a, rr: estimate_and_aggregate(
+                    codec, c, a, rr, gamp, chunk=0)),
+                (codes, alphas, rhos), rows * m,
+            ),
+            "mono_packed": (
+                jax.jit(lambda w, a, rr: estimate_and_aggregate_packed(
+                    codec, w, a, rr, gamp, chunk=0)),
+                (words, alphas, rhos), rows * m,
+            ),
+            "chunked_packed": (
+                jax.jit(lambda w, a, rr: estimate_and_aggregate_packed(
+                    codec, w, a, rr, gamp_es, chunk=chunk)),
+                (words, alphas, rhos), chunk * m,
+            ),
+            "sharded_packed": (
+                jax.jit(lambda w, a, rr: recon_engine.ea_decode(
+                    codec, w, a, rr, gamp_es, packed=True, chunk=chunk,
+                    mesh=mesh)),
+                (words, alphas, rhos), chunk * m,
+            ),
+        }
+        walls, outs = {}, {}
+        for label, (fn, args, _) in cases.items():
+            jax.block_until_ready(fn(*args))  # compile
+            reps = 3 if rows <= 512 else 2
+            t0 = time.time()
+            for _ in range(reps):
+                outs[label] = jax.block_until_ready(fn(*args))
+            walls[label] = (time.time() - t0) / reps
+        ref = outs["mono_unpacked"]
+        for label, (_, _, peak) in cases.items():
+            wall = walls[label]
+            bps = rows / wall
+            speedup = walls["mono_unpacked"] / wall
+            nmse = float(jnp.sum((outs[label] - ref) ** 2)
+                         / jnp.maximum(jnp.sum(ref**2), 1e-30))
+            name = f"recon_{label}[c{k}]"
+            derived = (
+                f"cohort={k};rows={rows};blocks_per_sec={bps:.1f};"
+                f"speedup_vs_mono_unpacked={speedup:.2f};"
+                f"unpacked_peak_bytes={peak};chunk={chunk}"
+            )
+            rows_all.append(f"recon[{name}],{1e6 * wall:.1f},{derived}")
+            entries.append({
+                "name": name, "wall_ms": round(wall * 1e3, 3),
+                "derived": derived, "cohort": k, "rows": rows,
+                "path": label, "chunk": chunk, "iters": iters,
+                "blocks_per_sec": round(bps, 1),
+                "speedup_vs_mono_unpacked": round(speedup, 2),
+                "unpacked_peak_bytes": peak,
+                "nmse_vs_mono_unpacked": nmse,
+                "n": n, "m": m, "q": q, "devices": len(devices),
+                "backend": jax.default_backend(),
+            })
+    _write_bench_json(BENCH_RECON_JSON, "recon_scaling", entries)
+    rows_all.append(f"recon[json],0,{os.path.relpath(BENCH_RECON_JSON)}")
+    return rows_all
+
+
 def fed_cohort_scaling(fast=True):
     """Cohort engine throughput (EXPERIMENTS.md #Fed-cohort): clients/sec of
     one full federated round (grad + BQCS encode + channel + PS GAMP + server
@@ -349,6 +483,20 @@ def main() -> None:
         ap.error("--full and --fast are mutually exclusive")
     fast = not args.full
 
+    selected_early = [s for s in args.only.split(",") if s]
+    if "recon" in (selected_early or ["recon"]):
+        # The recon bench shards decode chunks over host devices (the CPU
+        # stand-in for the mesh axis, same pattern as tests/conftest.py);
+        # must be set before jax initializes, and it is PROCESS-WIDE -- so
+        # it is only forced when the recon bench is actually selected, and
+        # CI runs recon in its own invocation to keep every other bench's
+        # timings on the default single-device baseline they have always
+        # been recorded on.  Only the *host* (CPU) platform is affected,
+        # and a caller-provided XLA_FLAGS wins.
+        os.environ.setdefault(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=8"
+        )
+
     from benchmarks import paper_figs
 
     benches = {
@@ -361,6 +509,7 @@ def main() -> None:
         "kernels": kernel_micro,
         "gamp": gamp_ea_vs_ae,
         "encode": encode_fused_vs_unfused,
+        "recon": recon_scaling,
         "fed": fed_cohort_scaling,
     }
     selected = [s for s in args.only.split(",") if s] or list(benches)

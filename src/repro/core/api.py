@@ -26,7 +26,10 @@ from repro.core.compression import (
     blocks_to_tree,
     unpack_codes,
 )
-from repro.core.reconstruction import aggregate_and_estimate, estimate_and_aggregate
+from repro.core.reconstruction import (
+    aggregate_and_estimate,
+    estimate_and_aggregate_packed,
+)
 
 __all__ = [
     "FedQCSConfig",
@@ -80,13 +83,18 @@ def reconstruct(
     'scalar'`` (the kernels implement scalar-variance GAMP; exact-variance
     configs keep the XLA path -- see DESIGN.md).
     """
-    # PS boundary: the payloads carry packed uint32 words; unpack here, once.
-    codes = jnp.stack([unpack_codes(p.codes, p.bits, p.m) for p in payloads])
     alphas = jnp.stack([p.alpha for p in payloads])
     rhos = jnp.asarray(rhos, jnp.float32)
     if mode == "ea":
-        blocks = estimate_and_aggregate(codec, codes, alphas, rhos)
+        # The payload words pass straight through to the packed
+        # reconstruction engine (DESIGN.md #Recon-engine) -- the uint8 index
+        # view never materializes on the EA path.
+        words = jnp.stack([p.codes for p in payloads])
+        blocks = estimate_and_aggregate_packed(codec, words, alphas, rhos)
     elif mode == "ae":
+        # PS boundary: AE's Bussgang combine still consumes indices; unpack
+        # here, once.
+        codes = jnp.stack([unpack_codes(p.codes, p.bits, p.m) for p in payloads])
         blocks = aggregate_and_estimate(codec, codes, alphas, rhos, groups=groups)
     else:
         raise ValueError(f"unknown mode {mode!r} (want 'ea' or 'ae')")

@@ -25,7 +25,13 @@ import jax.numpy as jnp
 
 from repro.core.quantizer import LloydMaxQuantizer, decode
 
-__all__ = ["bussgang_weight", "aggregate_codes", "effective_noise_var", "signal_energy"]
+__all__ = [
+    "bussgang_weight",
+    "aggregate_codes",
+    "aggregate_packed",
+    "effective_noise_var",
+    "signal_energy",
+]
 
 
 def bussgang_weight(rho: jnp.ndarray, alpha: jnp.ndarray, quantizer: LloydMaxQuantizer):
@@ -46,6 +52,26 @@ def aggregate_codes(
 ) -> jnp.ndarray:
     """q_tilde (nb, M): the Bussgang-weighted aggregate of eq. 23."""
     deq = decode(codes, quantizer)  # (K, nb, M)
+    w = bussgang_weight(rhos[:, None], alphas, quantizer)  # (K, nb)
+    return jnp.sum(w[..., None] * deq, axis=0)
+
+
+def aggregate_packed(
+    words: jnp.ndarray,  # (K, nb, W) uint32 packed wire words from K workers
+    alphas: jnp.ndarray,  # (K, nb)
+    rhos: jnp.ndarray,  # (K,)
+    quantizer: LloydMaxQuantizer,
+    bits: int,
+    m: int,
+) -> jnp.ndarray:
+    """q_tilde (nb, M) straight from the packed wire payload: the level
+    lookup indexes the shift/masked lane groups directly
+    (compression.decode_packed), so the (K, nb, M) uint8 code view never
+    materializes at the PS boundary.  Numerically identical to
+    ``aggregate_codes(unpack_codes(words), ...)``."""
+    from repro.core.compression import decode_packed  # deferred: layering
+
+    deq = decode_packed(words, bits, m, quantizer.jnp_levels())  # (K, nb, M)
     w = bussgang_weight(rhos[:, None], alphas, quantizer)  # (K, nb)
     return jnp.sum(w[..., None] * deq, axis=0)
 

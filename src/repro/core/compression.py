@@ -38,6 +38,7 @@ __all__ = [
     "blocks_to_tree",
     "pack_codes",
     "unpack_codes",
+    "decode_packed",
     "packed_width",
 ]
 
@@ -67,6 +68,11 @@ class FedQCSConfig:
     # "ea" (estimate-and-aggregate, per-worker Q-EM-GAMP then rho-sum).
     # "ea" needs the per-worker codes, i.e. wire_mode="gather_codes".
     recon_mode: str = "ae"
+    # PS-side EA decode chunking (DESIGN.md #Recon-engine): the K*nb block
+    # problems stream through a lax.scan in chunks of this many rows, so the
+    # GAMP state (and, on the XLA path, the unpacked code view) never
+    # materializes for more than one chunk at a time.  0 = monolithic batch.
+    recon_chunk: int = 0
 
     @property
     def m(self) -> int:
@@ -194,13 +200,34 @@ def pack_codes(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
     return jnp.sum(grouped << shifts, axis=1).astype(jnp.uint32)
 
 
-def unpack_codes(words: jnp.ndarray, bits: int, m: int) -> jnp.ndarray:
-    """Inverse of :func:`pack_codes`: (nb, W) uint32 -> (nb, m) uint8."""
+def _unpack_groups(words: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """(..., W) uint32 -> (..., per_word, W) uint32 lane groups (shift/mask)."""
     per_word = 32 // bits
-    shifts = (jnp.arange(per_word, dtype=jnp.uint32) * bits)[None, :, None]
+    shifts = (jnp.arange(per_word, dtype=jnp.uint32) * bits).reshape(
+        (1,) * (words.ndim - 1) + (per_word, 1)
+    )
     mask = jnp.uint32((1 << bits) - 1)
-    out = ((words[:, None, :] >> shifts) & mask).astype(jnp.uint8)
-    return out.reshape(words.shape[0], -1)[:, :m]
+    return (words[..., None, :] >> shifts) & mask
+
+
+def unpack_codes(words: jnp.ndarray, bits: int, m: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_codes`: (..., W) uint32 -> (..., m) uint8.
+    Leading batch dims pass through (so stacked (K, nb, W) payloads unpack
+    without a vmap)."""
+    out = _unpack_groups(words, bits).astype(jnp.uint8)
+    return out.reshape(words.shape[:-1] + (-1,))[..., :m]
+
+
+def decode_packed(
+    words: jnp.ndarray, bits: int, m: int, levels: jnp.ndarray
+) -> jnp.ndarray:
+    """Dequantize straight from the packed wire words: (..., W) uint32 ->
+    (..., m) f32 reconstruction levels.  The level lookup indexes the
+    shift/masked lane groups directly, so the (..., M) uint8 index view is
+    never materialized (the shifted int temporaries fuse into the gather)."""
+    idx = _unpack_groups(words, bits).astype(jnp.int32)
+    deq = levels[idx]  # (..., per_word, W)
+    return deq.reshape(words.shape[:-1] + (-1,))[..., :m]
 
 
 # ---------------------------------------------------------------------------
@@ -289,3 +316,10 @@ class BQCSCodec:
     # -- decode helpers ------------------------------------------------------
     def dequantize(self, codes: jnp.ndarray) -> jnp.ndarray:
         return decode(codes, self.quantizer)
+
+    def dequantize_packed(self, words: jnp.ndarray) -> jnp.ndarray:
+        """Reconstruction levels straight from packed wire words (..., W) --
+        the index view never materializes (see :func:`decode_packed`)."""
+        return decode_packed(
+            words, self.cfg.bits, self.cfg.m, self.quantizer.jnp_levels()
+        )

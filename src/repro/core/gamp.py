@@ -40,6 +40,7 @@ __all__ = [
     "GampConfig",
     "GampState",
     "qem_gamp",
+    "qem_gamp_packed",
     "em_gamp",
     "make_init_theta",
     "tau_tables",
@@ -62,6 +63,15 @@ class GampConfig:
     variance_mode: str = "exact"  # "exact" | "scalar"
     em: bool = True  # run EM hyperparameter learning (step 15)
     lam0_init: float = 0.9  # initial zero-probability (paper Sec. VI)
+    # Early termination: exit the GAMP loop (lax.while_loop) as soon as every
+    # block in the batch has hit the early-freeze tolerance, instead of
+    # running the full static trip count.  Converged blocks are frozen either
+    # way, so the outputs are identical -- this only changes how many no-op
+    # iterations are spent after the last block freezes.  Keep False inside
+    # distributed steps (data-dependent trip counts make per-pod work ragged,
+    # DESIGN.md #Kernels); the chunked PS decode (DESIGN.md #Recon-engine)
+    # turns it on so each chunk stops at its own slowest block.
+    early_stop: bool = False
 
 
 class GampState(tuple):
@@ -128,16 +138,19 @@ def _input_channel(rhat, nu_r, theta):
 
 def _em_update(theta, lam_post0, lam_post, mu_post, phi_post):
     """EM hyperparameter refresh (step 15 / eq. 17), batched per block."""
-    _, _, mu, _ = theta
     n = lam_post.shape[1]
     lam0_new = jnp.mean(lam_post0, axis=1)
     lam_sum = jnp.sum(lam_post, axis=1)  # (nb, L)
     lam_new = lam_sum / n
     safe = jnp.maximum(lam_sum, _EPS)
     mu_new = jnp.sum(lam_post * mu_post, axis=1) / safe
-    mu_old = mu[:, None, :]
+    # The M-step variance is the posterior scatter around the REFRESHED mean
+    # (the same-step mu_new, eq. 17) -- scattering around the previous mean
+    # adds (mu_new - mu_old)^2 of spurious spread to every component, biasing
+    # phi upward each EM step.
     phi_new = (
-        jnp.sum(lam_post * (jnp.square(mu_old - mu_post) + phi_post), axis=1) / safe
+        jnp.sum(lam_post * (jnp.square(mu_new[:, None, :] - mu_post) + phi_post), axis=1)
+        / safe
     )
     # Renormalize weights to sum to one (guards fp drift) and keep every
     # weight strictly inside (0, 1): a component collapsing to exactly zero
@@ -154,8 +167,22 @@ def _em_update(theta, lam_post0, lam_post, mu_post, phi_post):
 # ---------------------------------------------------------------------------
 
 
-def _ndtr(x):
-    return 0.5 * (1.0 + jax.lax.erf(x / jnp.sqrt(2.0).astype(x.dtype)))
+def _trunc_z(ac, bc):
+    """Bin mass Phi(bc) - Phi(ac) (ac <= bc), accurate in BOTH tails in f32.
+
+    The naive difference of CDFs cancels catastrophically once the bin sits
+    entirely in a tail: Phi(5) and Phi(7) agree to ~1e-7 absolute, which is
+    the f32 resolution near 1.0, so one-sided bins beyond ~4.5 sd lose all
+    signal well BEFORE the far-tail fallback takes over at _TRUNC_CLIP sds.
+    Complementary erfc forms keep the mass as a difference of *small*
+    numbers: upper tail (ac > 0) uses Phic(ac) - Phic(bc); everything else
+    uses Phi as 0.5 erfc(-x/sqrt2), exact for the lower tail and within one
+    ulp-of-1 for straddling bins (where z is O(1) anyway).
+    """
+    inv_sqrt2 = 1.0 / jnp.sqrt(2.0).astype(ac.dtype)
+    z_up = 0.5 * (jax.lax.erfc(ac * inv_sqrt2) - jax.lax.erfc(bc * inv_sqrt2))
+    z_dn = 0.5 * (jax.lax.erfc(-bc * inv_sqrt2) - jax.lax.erfc(-ac * inv_sqrt2))
+    return jnp.where(ac > 0, z_up, z_dn)
 
 
 def _npdf(x):
@@ -191,11 +218,17 @@ def trunc_channel_moments(phat, nu_p, lo, hi):
     sd = jnp.sqrt(nu_p)
     a = (lo - phat) / sd
     b = (hi - phat) / sd
-    # Far-tail detection: entire bin is > TRUNC_CLIP sds away on one side.
-    far = jnp.minimum(jnp.abs(a), jnp.abs(b)) > _TRUNC_CLIP
+    # Far-tail detection: the bin lies ENTIRELY > TRUNC_CLIP sds to one side
+    # of phat (a > clip: whole bin above; b < -clip: whole bin below).  A
+    # min(|a|,|b|) > clip test would also fire when phat sits *inside* a wide
+    # bin (a < -clip < clip < b) -- there the true posterior is ~ the prior,
+    # and the fallback's collapsed tail variance nu_p/amin^2 would overweight
+    # shat and risk divergence (the exact branch handles that case fine:
+    # z ~ 1, ratios ~ 0).
+    far = (a > _TRUNC_CLIP) | (b < -_TRUNC_CLIP)
     ac = jnp.clip(a, -_TRUNC_CLIP, _TRUNC_CLIP)
     bc = jnp.clip(b, -_TRUNC_CLIP, _TRUNC_CLIP)
-    z = jnp.maximum(_ndtr(bc) - _ndtr(ac), 1e-12)
+    z = jnp.maximum(_trunc_z(ac, bc), 1e-30)
     pa, pb = _npdf(ac), _npdf(bc)
     ratio1 = (pa - pb) / z
     ratio2 = (ac * pa - bc * pb) / z
@@ -288,8 +321,8 @@ def _gamp_run(
 
     scalar_var = cfg.variance_mode == "scalar"
 
-    def body(carry, _):
-        ghat, nu_g, shat, theta = carry
+    def body(carry):
+        ghat, nu_g, shat, theta, conv_prev = carry
         ghat_old = ghat
         if scalar_var:
             nu_p = al2 / m * jnp.sum(nu_g, axis=-1, keepdims=True)  # (nb, 1)
@@ -318,7 +351,11 @@ def _gamp_run(
             nu_g_new = d * nu_g_new + (1.0 - d) * nu_g
         delta = jnp.sum(jnp.square(ghat_new - ghat_old), axis=-1)
         ref = jnp.maximum(jnp.sum(jnp.square(ghat_old), axis=-1), _EPS)
-        converged = delta < cfg.tol * ref
+        # Sticky early-freeze carry: once a block hits the tolerance it stays
+        # frozen (a frozen block recomputes the identical candidate, so the
+        # flag could never un-set anyway -- carrying it makes that explicit
+        # and gives the caller a per-block convergence signal).
+        converged = conv_prev | (delta < cfg.tol * ref)
         # Early-freeze: blocks that converged stop moving entirely (the
         # paper's break, expressed scan-compatibly with a static trip count).
         keepc = converged[:, None]
@@ -332,13 +369,55 @@ def _gamp_run(
             theta_new,
             theta,
         )
-        return (ghat_new, nu_g_new, shat_new, theta_new), None
+        return (ghat_new, nu_g_new, shat_new, theta_new, converged)
 
-    (ghat, nu_g, _, theta), _ = jax.lax.scan(
-        body, (ghat0, nu_g0, shat0, theta0), None, length=cfg.iters
-    )
+    # Dead rows (alpha == 0: empty blocks, chunk padding) are frozen from
+    # iteration 0: their final ghat is zeroed below either way, and they must
+    # not gate the early-stop exit of a chunk they merely pad.
+    conv0 = ~alive
+    state0 = (ghat0, nu_g0, shat0, theta0, conv0)
+    if cfg.early_stop and cfg.tol > 0.0:
+        # Data-dependent trip count: stop as soon as the whole batch froze.
+        # Identical outputs to the static scan (frozen blocks are no-ops);
+        # see GampConfig.early_stop for where this is allowed.
+        def cond(carry):
+            i, state = carry
+            return (i < cfg.iters) & ~jnp.all(state[4])
+
+        _, (ghat, nu_g, _, theta, converged) = jax.lax.while_loop(
+            cond, lambda c: (c[0] + 1, body(c[1])), (jnp.int32(0), state0)
+        )
+    else:
+        (ghat, nu_g, _, theta, converged), _ = jax.lax.scan(
+            lambda c, _: (body(c), None), state0, None, length=cfg.iters
+        )
     ghat = jnp.where(alive[:, None], ghat, 0.0)
-    return ghat, nu_g, theta
+    return ghat, nu_g, theta, converged
+
+
+def _kernel_dispatch_ok(cfg: GampConfig) -> bool:
+    """The fused kernels implement scalar-variance undamped GAMP at a fixed
+    trip count; any other config keeps the XLA path (see qem_gamp)."""
+    return cfg.variance_mode == "scalar" and cfg.damping == 1.0 and not cfg.early_stop
+
+
+def _qem_gamp_xla(codes, alpha, a, quantizer, cfg):
+    """Pure-XLA Q-EM-GAMP solve; returns (guarded ghat, per-block converged
+    flags) -- the flags feed the two-phase refinement sweep
+    (core/recon_engine.py)."""
+    nb, m = codes.shape
+    n = a.shape[1]
+    lo_tau, hi_tau = tau_tables(quantizer.jnp_thresholds())
+    alive = alpha > 0
+    init_var = block_prior_energy(alpha, m, n)
+    out = partial(_quantized_channel, codes=codes, lo_tau=lo_tau, hi_tau=hi_tau)
+    ghat, _, _, converged = _gamp_run(
+        lambda p, v: out(p, v), a, alpha, init_var, cfg, nb, n, m
+    )
+    # The PS *knows* the true block norm (||g|| = sqrt(M)/alpha is
+    # transmitted), so the guard clips against it exactly.
+    true_norm = jnp.where(alive, jnp.sqrt(jnp.float32(m)) / jnp.where(alive, alpha, 1.0), 0.0)
+    return norm_guard(ghat, true_norm), converged | ~alive
 
 
 def qem_gamp(
@@ -359,13 +438,13 @@ def qem_gamp(
     configs run, EXPERIMENTS.md #Perf) at a fixed trip count with no
     early-freeze (static work for the scheduler, DESIGN.md), so the dispatch
     only takes effect when ``cfg.variance_mode == 'scalar'`` and
-    ``cfg.damping == 1.0`` (undamped) -- other configs keep the XLA path
-    rather than silently switching reconstruction algorithms.  ``tol`` is the
-    one accepted deviation: the kernel's fixed trip count vs the XLA path's
-    early-freeze differ by well under the 1e-4 NMSE contract (pinned by
-    tests/test_kernels.py at the default tol).
+    ``cfg.damping == 1.0`` (undamped, no early-stop) -- other configs keep
+    the XLA path rather than silently switching reconstruction algorithms.
+    ``tol`` is the one accepted deviation: the kernel's fixed trip count vs
+    the XLA path's early-freeze differ by well under the 1e-4 NMSE contract
+    (pinned by tests/test_kernels.py at the default tol).
     """
-    if use_pallas and cfg.variance_mode == "scalar" and cfg.damping == 1.0:
+    if use_pallas and _kernel_dispatch_ok(cfg):
         from repro.kernels import ops as kops  # deferred: kernels are optional
 
         return kops.qgamp_ea_run(
@@ -373,19 +452,43 @@ def qem_gamp(
             n_components=cfg.n_components, iters=cfg.iters, em=cfg.em,
             lam0=cfg.lam0_init,
         )
-    nb, m = codes.shape
-    n = a.shape[1]
-    lo_tau, hi_tau = tau_tables(quantizer.jnp_thresholds())
-    alive = alpha > 0
-    init_var = block_prior_energy(alpha, m, n)
-    out = partial(_quantized_channel, codes=codes, lo_tau=lo_tau, hi_tau=hi_tau)
-    ghat, _, _ = _gamp_run(
-        lambda p, v: out(p, v), a, alpha, init_var, cfg, nb, n, m
+    ghat, _ = _qem_gamp_xla(codes, alpha, a, quantizer, cfg)
+    return ghat
+
+
+def qem_gamp_packed(
+    words: jnp.ndarray,  # (nb, W) uint32 packed wire words (pack_codes layout)
+    alpha: jnp.ndarray,  # (nb,) transmitted scale factors
+    a: jnp.ndarray,  # (M, N) sensing matrix
+    quantizer: LloydMaxQuantizer,
+    cfg: GampConfig,
+    m: int,  # true measurement count M (words carry W*(32//Q) >= M lanes)
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Packed-domain Q-EM-GAMP: consumes the uint32 wire words directly.
+
+    On the kernel path the words stream into the fused qgamp_step kernel,
+    which unpacks per lane group in VMEM -- the (nb, M) uint8 index tensor
+    never exists in HBM.  The XLA path unpacks just-in-time at the solve
+    (so under the chunked decode of core/recon_engine.py at most one chunk's
+    index view is live at a time).  Bit-identical to
+    ``qem_gamp(unpack_codes(words, Q, M), ...)`` in both modes.
+    """
+    if use_pallas and _kernel_dispatch_ok(cfg):
+        from repro.kernels import ops as kops  # deferred: kernels are optional
+
+        return kops.qgamp_ea_run_packed(
+            words, alpha, a, quantizer.jnp_thresholds(),
+            bits=quantizer.bits, m=m,
+            n_components=cfg.n_components, iters=cfg.iters, em=cfg.em,
+            lam0=cfg.lam0_init,
+        )
+    from repro.core.compression import unpack_codes  # deferred: layering
+
+    ghat, _ = _qem_gamp_xla(
+        unpack_codes(words, quantizer.bits, m), alpha, a, quantizer, cfg
     )
-    # The PS *knows* the true block norm (||g|| = sqrt(M)/alpha is
-    # transmitted), so the guard clips against it exactly.
-    true_norm = jnp.where(alive, jnp.sqrt(jnp.float32(m)) / jnp.where(alive, alpha, 1.0), 0.0)
-    return norm_guard(ghat, true_norm)
+    return ghat
 
 
 def em_gamp(
@@ -409,7 +512,7 @@ def em_gamp(
         # per entry... ||y||^2/M ~= ||g||^2/M (A has unit column-energy rows:
         # E|Ag|_m^2 = ||g||^2/M), so ||g||^2 ~= ||y||^2 and per-entry = /N.
         init_var = jnp.maximum(jnp.sum(jnp.square(y), axis=-1) - m * noise_var, _EPS) / n
-    if use_pallas and cfg.variance_mode == "scalar" and cfg.damping == 1.0:
+    if use_pallas and _kernel_dispatch_ok(cfg):
         from repro.kernels import ops as kops  # deferred: kernels are optional
 
         return kops.gamp_ae_run(
@@ -420,6 +523,6 @@ def em_gamp(
     alpha = jnp.ones((nb,), jnp.float32)
     nvar = jnp.asarray(noise_var, jnp.float32)[:, None]
     out = lambda p, v: _awgn_channel(p, v, y, nvar)
-    ghat, _, _ = _gamp_run(out, a, alpha, jnp.asarray(init_var, jnp.float32), cfg, nb, n, m)
+    ghat, _, _, _ = _gamp_run(out, a, alpha, jnp.asarray(init_var, jnp.float32), cfg, nb, n, m)
     # Expected ||g_sum||^2 = init_var * N (see norm_guard).
     return norm_guard(ghat, jnp.sqrt(jnp.maximum(init_var * n, 0.0)))

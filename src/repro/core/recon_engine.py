@@ -1,0 +1,254 @@
+"""Chunked / sharded packed-domain PS reconstruction engine
+(DESIGN.md #Recon-engine).
+
+PR 3 scaled the client side to 1000-client cohorts; this module makes the PS
+decode scale the same way.  The EA strategy (the paper's best-NMSE mode,
+Procedure 2) is one independent Q-EM-GAMP inversion per (worker, block) --
+``K * nb`` problems sharing one sensing matrix.  The monolithic batch solve
+(`reconstruction.estimate_and_aggregate` at chunk=0) materializes the whole
+``(K*nb, N)`` GAMP state, plus on the XLA path the full ``(K, nb, M)`` uint8
+code view, and iterates every problem until the *globally* slowest block
+converges.  The engine fixes all three scale terms:
+
+  * **chunking** -- the flat problem batch streams through a ``lax.scan`` in
+    fixed-size chunks (``FedQCSConfig.recon_chunk`` rows), so live GAMP state
+    is O(chunk * N) regardless of cohort size;
+  * **packed-domain decode** -- chunks carry the uint32 wire words straight
+    from the collective; the fused kernel unpacks per lane group in VMEM and
+    the XLA path unpacks one chunk at a time, so the ``(K, nb, M)`` uint8
+    tensor never exists (``qem_gamp_packed``);
+  * **early-stop per chunk** -- each chunk's GAMP loop exits when *its own*
+    slowest block froze (``GampConfig.early_stop``), converting the
+    early-freeze carry into wall-clock instead of masked no-op iterations;
+  * **sharding** -- chunks optionally spread over a mesh axis via
+    ``jax_compat.shard_map``: the chunk axis is partitioned into CONTIGUOUS
+    blocks of nch/ndev chunks per device (PartitionSpec semantics), so the
+    dead-row pad chunks appended at the end all land on the last device --
+    cheap, since dead rows freeze at iteration 0 and an early-stop chunk of
+    only dead rows exits after one iteration.  Every device scans only its
+    own chunks.  Do NOT nest this under the 'pod' manual collective -- the
+    in-step decode is already sharded by the outer mesh.
+
+The two-phase sweep (`ea_decode_two_phase`) adds a quality mode: a cheap
+scalar-variance pass everywhere, then exact-variance GAMP (Procedure 2's
+per-entry variances) re-solves only the blocks whose converged flag is still
+false.  Phase 2's survivor gather is host-side (data-dependent shapes), so
+the two-phase entry point is a host orchestrator around jitted solves -- use
+it from drivers (benchmarks, offline decode), not inside a train step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import BQCSCodec, unpack_codes
+from repro.core.gamp import GampConfig, _qem_gamp_xla, qem_gamp, qem_gamp_packed
+
+__all__ = ["chunked_rows", "ea_solve_flat", "ea_decode", "ea_decode_two_phase"]
+
+
+def _pad_rows_zero(arrays, rows: int, target: int):
+    """Zero-pads every array's leading axis from ``rows`` to ``target``.
+    Zero rows are dead blocks (alpha == 0): the solver freezes them from
+    iteration 0 and emits exact zeros, so padding is output-invariant."""
+    pad = target - rows
+    if pad == 0:
+        return arrays
+    return tuple(
+        jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]) for x in arrays
+    )
+
+
+def chunked_rows(
+    solve,
+    inputs: Tuple[jnp.ndarray, ...],
+    chunk: int,
+    out_width: int,
+    mesh=None,
+    axis_name: str = "recon",
+):
+    """Streams row-aligned ``inputs`` through ``solve`` in fixed-size chunks.
+
+    ``solve(*chunk_inputs) -> (chunk, out_width)`` runs under a ``lax.scan``
+    over ``ceil(rows / chunk)`` chunks (rows zero-padded to the chunk grid --
+    dead-block padding, see `_pad_rows_zero`).  With a ``mesh``, the chunk
+    axis is additionally sharded over ``axis_name`` via
+    ``jax_compat.shard_map``: the chunk count is padded to the axis size and
+    each device scans its local chunks; everything ``solve`` closes over
+    (sensing matrix, threshold tables) is replicated.
+
+    ``chunk <= 0`` or a chunk covering all rows degrades to one direct call.
+    """
+    rows = inputs[0].shape[0]
+    if chunk <= 0 or (chunk >= rows and mesh is None):
+        return solve(*inputs)
+    nch = -(-rows // chunk)
+    if mesh is not None:
+        ndev = mesh.shape[axis_name]
+        nch = -(-nch // ndev) * ndev
+    padded = _pad_rows_zero(inputs, rows, nch * chunk)
+    chunked = tuple(x.reshape((nch, chunk) + x.shape[1:]) for x in padded)
+
+    def scan_chunks(*xs):
+        _, out = jax.lax.scan(lambda _, c: (None, solve(*c)), None, xs)
+        return out
+
+    if mesh is None:
+        out = scan_chunks(*chunked)
+    else:
+        from jax.sharding import PartitionSpec as P
+
+        from repro import jax_compat
+
+        spec = P(axis_name)
+        out = jax_compat.shard_map(
+            scan_chunks,
+            mesh=mesh,
+            in_specs=(spec,) * len(chunked),
+            out_specs=spec,
+            axis_names={axis_name},
+            check_vma=False,
+        )(*chunked)
+    return out.reshape(nch * chunk, out_width)[:rows]
+
+
+def ea_solve_flat(
+    codec: BQCSCodec,
+    obs: jnp.ndarray,  # (rows, M) codes or (rows, W) packed uint32 words
+    alpha: jnp.ndarray,  # (rows,)
+    gamp: GampConfig,
+    *,
+    packed: bool,
+    use_pallas: bool = False,
+    chunk: int = 0,
+    mesh=None,
+    axis_name: str = "recon",
+) -> jnp.ndarray:
+    """Solves a flat batch of per-(worker, block) Q-EM-GAMP problems ->
+    (rows, N) block estimates.  The chunk solver is `qem_gamp_packed` when
+    ``packed`` (wire words in, in-VMEM/in-chunk unpack) else `qem_gamp`."""
+    n = codec.cfg.block_size
+    if packed:
+        solve = lambda o, al: qem_gamp_packed(
+            o, al, codec.a, codec.quantizer, gamp, codec.cfg.m, use_pallas=use_pallas
+        )
+    else:
+        solve = lambda o, al: qem_gamp(
+            o, al, codec.a, codec.quantizer, gamp, use_pallas=use_pallas
+        )
+    return chunked_rows(solve, (obs, alpha), chunk, n, mesh=mesh, axis_name=axis_name)
+
+
+def ea_decode(
+    codec: BQCSCodec,
+    obs: jnp.ndarray,  # (K, nb, M) uint8 codes or (K, nb, W) uint32 words
+    alphas: jnp.ndarray,  # (K, nb)
+    rhos: jnp.ndarray,  # (K,)
+    gamp: Optional[GampConfig] = None,
+    *,
+    packed: bool,
+    use_pallas: bool = False,
+    chunk: int = 0,
+    mesh=None,
+    axis_name: str = "recon",
+) -> jnp.ndarray:
+    """FedQCS-EA decode through the engine: flatten the (K, nb) problem grid,
+    chunk/shard-solve, rho-weight and sum -> (nb, N) aggregated blocks.
+
+    Jit-safe (the chunk stream is a ``lax.scan``); this is what
+    `reconstruction.estimate_and_aggregate` / ``_packed`` delegate to.
+    """
+    from repro.core.reconstruction import gamp_config_from  # deferred: layering
+
+    gamp = gamp or gamp_config_from(codec)
+    k, nb = obs.shape[:2]
+    flat = ea_solve_flat(
+        codec,
+        obs.reshape((k * nb,) + obs.shape[2:]),
+        alphas.reshape(k * nb),
+        gamp,
+        packed=packed,
+        use_pallas=use_pallas,
+        chunk=chunk,
+        mesh=mesh,
+        axis_name=axis_name,
+    )
+    return jnp.einsum("k,kbn->bn", rhos, flat.reshape(k, nb, -1))
+
+
+def ea_decode_two_phase(
+    codec: BQCSCodec,
+    obs: jnp.ndarray,  # (K, nb, M) uint8 codes or (K, nb, W) uint32 words
+    alphas: jnp.ndarray,  # (K, nb)
+    rhos: jnp.ndarray,  # (K,)
+    gamp: Optional[GampConfig] = None,
+    *,
+    packed: bool,
+    chunk: int = 0,
+    refine_iters: Optional[int] = None,
+    mesh=None,
+    axis_name: str = "recon",
+) -> Tuple[jnp.ndarray, dict]:
+    """Two-phase EA sweep: scalar-variance GAMP everywhere (cheap: 2 GEMMs
+    per iteration), then exact-variance GAMP (4 GEMMs, Procedure 2's
+    per-entry variances) re-solves ONLY the blocks whose early-freeze flag
+    is still false after phase 1.
+
+    Host orchestrator (phase 2 gathers a data-dependent survivor set), so
+    call it from drivers, not inside jit.  Returns (aggregated (nb, N)
+    blocks, stats dict with phase-2 counts).
+    """
+    from repro.core.reconstruction import gamp_config_from  # deferred: layering
+
+    gamp = gamp or gamp_config_from(codec)
+    k, nb = obs.shape[:2]
+    rows = k * nb
+    n = codec.cfg.block_size
+    flat_obs = obs.reshape((rows,) + obs.shape[2:])
+    flat_alpha = alphas.reshape(rows)
+
+    # Phase 1: scalar-variance sweep over every problem, converged flags out.
+    # The flags come from _gamp_run's early-freeze carry, so the XLA solver
+    # runs phase 1 (the kernel's fixed-trip scan has no freeze signal).
+    p1 = dataclasses.replace(gamp, variance_mode="scalar")
+    codes_of = (
+        (lambda o: unpack_codes(o, codec.cfg.bits, codec.cfg.m)) if packed else (lambda o: o)
+    )
+    def solve_flags(o, al):
+        gh, fl = _qem_gamp_xla(codes_of(o), al, codec.a, codec.quantizer, p1)
+        # converged flag rides as one extra output column through the scan
+        return jnp.concatenate([gh, fl.astype(jnp.float32)[:, None]], axis=1)
+
+    stacked = chunked_rows(
+        solve_flags, (flat_obs, flat_alpha), chunk, n + 1,
+        mesh=mesh, axis_name=axis_name,
+    )
+    ghat = stacked[:, :n]
+    converged = np.asarray(stacked[:, n]) > 0.5
+
+    # Phase 2: exact-variance refinement of the survivors only.
+    survivors = np.flatnonzero(~converged)
+    if survivors.size:
+        p2 = dataclasses.replace(
+            gamp,
+            variance_mode="exact",
+            iters=refine_iters if refine_iters is not None else gamp.iters,
+            early_stop=False,
+        )
+        idx = jnp.asarray(survivors)
+        refined, _ = jax.jit(
+            lambda o, al: _qem_gamp_xla(codes_of(o), al, codec.a, codec.quantizer, p2)
+        )(flat_obs[idx], flat_alpha[idx])
+        ghat = ghat.at[idx].set(refined)
+    stats = {
+        "rows": rows,
+        "phase2_rows": int(survivors.size),
+        "phase2_frac": float(survivors.size) / max(rows, 1),
+    }
+    agg = jnp.einsum("k,kbn->bn", rhos, ghat.reshape(k, nb, n))
+    return agg, stats

@@ -6,9 +6,14 @@
     each of G groups, EM-GAMP per group, sum groups.  O(G B M N I).
 
 Both consume the stacked payloads of all K workers:
-    codes  (K, nblocks, M) uint8
+    codes  (K, nblocks, M) uint8   -- or, on the packed EA path, the uint32
+           wire words (K, nblocks, W) straight from the collective
     alphas (K, nblocks)    f32
     rhos   (K,)            f32   (sum to 1; zero for dead/evicted workers)
+
+The EA solve routes through the chunked/sharded reconstruction engine
+(core/recon_engine.py, DESIGN.md #Recon-engine); ``FedQCSConfig.recon_chunk``
+bounds how much GAMP state (and unpacked code view) is live at once.
 
 Partial participation: a failed worker contributes rho_k = 0 and its codes are
 ignored exactly (its Bussgang weight and noise contribution vanish), so losing
@@ -23,9 +28,14 @@ import jax.numpy as jnp
 
 from repro.core import bussgang
 from repro.core.compression import BQCSCodec
-from repro.core.gamp import GampConfig, em_gamp, qem_gamp
+from repro.core.gamp import GampConfig, em_gamp
 
-__all__ = ["estimate_and_aggregate", "aggregate_and_estimate", "gamp_config_from"]
+__all__ = [
+    "estimate_and_aggregate",
+    "estimate_and_aggregate_packed",
+    "aggregate_and_estimate",
+    "gamp_config_from",
+]
 
 
 def gamp_config_from(codec: BQCSCodec, iters: Optional[int] = None) -> GampConfig:
@@ -44,26 +54,59 @@ def estimate_and_aggregate(
     rhos: jnp.ndarray,  # (K,)
     gamp: Optional[GampConfig] = None,
     use_pallas: Optional[bool] = None,
+    chunk: Optional[int] = None,
 ) -> jnp.ndarray:
     """FedQCS-EA: returns the reconstructed global blocks (nb, N).
 
     ``use_pallas`` (default: ``codec.cfg.use_kernels``) routes the batched
     Q-EM-GAMP solve through the fused TPU kernel -- scalar-variance, fixed
     trip count; see qem_gamp for the exact semantics of that path.
+
+    ``chunk`` (default: ``codec.cfg.recon_chunk``; 0 = monolithic) streams
+    the K*nb problems through the chunked reconstruction engine
+    (core/recon_engine.py) so the GAMP state never materializes for more
+    than ``chunk`` rows at a time.
     """
+    from repro.core import recon_engine  # deferred: engine imports this module
+
     gamp = gamp or gamp_config_from(codec)
     if use_pallas is None:
         use_pallas = codec.cfg.use_kernels
-    k, nb, m = codes.shape
-    # Batch all K*nb recovery problems into one GAMP run (they share A).
-    flat_codes = codes.reshape(k * nb, m)
-    flat_alpha = alphas.reshape(k * nb)
-    ghat = qem_gamp(
-        flat_codes, flat_alpha, codec.a, codec.quantizer, gamp,
-        use_pallas=use_pallas,
+    if chunk is None:
+        chunk = codec.cfg.recon_chunk
+    return recon_engine.ea_decode(
+        codec, codes, alphas, rhos, gamp,
+        packed=False, use_pallas=use_pallas, chunk=chunk,
     )
-    ghat = ghat.reshape(k, nb, -1)
-    return jnp.sum(rhos[:, None, None] * ghat, axis=0)
+
+
+def estimate_and_aggregate_packed(
+    codec: BQCSCodec,
+    words: jnp.ndarray,  # (K, nb, W) uint32 packed wire words
+    alphas: jnp.ndarray,  # (K, nb)
+    rhos: jnp.ndarray,  # (K,)
+    gamp: Optional[GampConfig] = None,
+    use_pallas: Optional[bool] = None,
+    chunk: Optional[int] = None,
+) -> jnp.ndarray:
+    """Packed-domain FedQCS-EA: consumes the uint32 wire words straight from
+    the collective.  The (K, nb, M) uint8 code tensor never materializes:
+    the fused kernel unpacks per lane group in VMEM, and the XLA path
+    unpacks at most one chunk at a time inside the scan
+    (DESIGN.md #Recon-engine).  Bit-identical to
+    ``estimate_and_aggregate(unpack_codes(words), ...)``.
+    """
+    from repro.core import recon_engine  # deferred: engine imports this module
+
+    gamp = gamp or gamp_config_from(codec)
+    if use_pallas is None:
+        use_pallas = codec.cfg.use_kernels
+    if chunk is None:
+        chunk = codec.cfg.recon_chunk
+    return recon_engine.ea_decode(
+        codec, words, alphas, rhos, gamp,
+        packed=True, use_pallas=use_pallas, chunk=chunk,
+    )
 
 
 def aggregate_and_estimate(

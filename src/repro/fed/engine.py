@@ -46,7 +46,7 @@ from repro.core.compression import (
 from repro.core.gamp import em_gamp
 from repro.core.reconstruction import (
     aggregate_and_estimate,
-    estimate_and_aggregate,
+    estimate_and_aggregate_packed,
     gamp_config_from,
 )
 from repro.fed.channel import ChannelConfig, realize_uplink
@@ -278,7 +278,14 @@ class CohortEngine:
         lost).  ``key`` seeds per-client randomness (dither)."""
         payload: Dict[str, jnp.ndarray] = {}
         method = self.cohort.method
-        if method in EF_METHODS:
+        if method == "fedqcs-ea":
+            # EA consumes the wire words directly (packed reconstruction
+            # engine, DESIGN.md #Recon-engine): the payload carries what
+            # crosses the wire and the uint8 index view never materializes.
+            words, alpha, enc_res = self.codec.compress_blocks_packed(blocks, residual)
+            payload["words"], payload["alpha"] = words, alpha
+            new_res = jnp.where(rho > 0, enc_res, blocks + residual)
+        elif method in EF_METHODS:
             codes, alpha, enc_res = self.codec.compress_blocks(blocks, residual)
             payload["codes"], payload["alpha"] = codes, alpha
             new_res = jnp.where(rho > 0, enc_res, blocks + residual)
@@ -353,8 +360,10 @@ class CohortEngine:
             )
             ghat = jnp.einsum("k,kbn->bn", rhos_eff, parts.reshape(c, nb, -1))
         elif method == "fedqcs-ea":
-            ghat = estimate_and_aggregate(
-                self.codec, payloads["codes"], payloads["alpha"], rhos_eff, self.gamp
+            # Packed-domain chunked EA decode (words straight from the client
+            # pass; chunking per FedQCSConfig.recon_chunk).
+            ghat = estimate_and_aggregate_packed(
+                self.codec, payloads["words"], payloads["alpha"], rhos_eff, self.gamp
             )
         else:  # fedqcs-ae
             codes, alphas = payloads["codes"], payloads["alpha"]

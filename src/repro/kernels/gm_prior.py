@@ -37,7 +37,7 @@ def gm_input_channel(rhat, v, theta_parts):
 
     rhat: (TB, N); v: (TB, 1) scalar-variance nu_r (broadcasts over N).
     Returns (ghat_new, nu_g_new, posterior) where posterior is the tuple
-    (lam_post0, lam_post, mu_post, phi_post, muc) reused by `em_refresh`.
+    (lam_post0, lam_post, mu_post, phi_post) reused by `em_refresh`.
     """
     lam0, lam, mu, phi = theta_parts
     r3 = rhat[:, :, None]  # (TB, N, 1)
@@ -60,18 +60,25 @@ def gm_input_channel(rhat, v, theta_parts):
     ghat_new = jnp.sum(lam_post * mu_post, axis=-1)  # (TB, N)
     second = jnp.sum(lam_post * (phi_post + mu_post * mu_post), axis=-1)
     nu_g_new = jnp.maximum(second - ghat_new * ghat_new, _EPS)
-    return ghat_new, nu_g_new, (lam_post0, lam_post, mu_post, phi_post, muc)
+    return ghat_new, nu_g_new, (lam_post0, lam_post, mu_post, phi_post)
 
 
 def em_refresh(posterior, n: int):
-    """EM hyperparameter refresh (eq. 17) -> new packed theta (TB, 1+3L)."""
-    lam_post0, lam_post, mu_post, phi_post, muc = posterior
+    """EM hyperparameter refresh (eq. 17) -> new packed theta (TB, 1+3L).
+
+    The component variance is the posterior scatter around the same-step
+    refreshed mean mu_new (matching core.gamp._em_update exactly).
+    """
+    lam_post0, lam_post, mu_post, phi_post = posterior
     lam0_new = jnp.mean(lam_post0, axis=1, keepdims=True)  # (TB, 1)
     lam_sum = jnp.sum(lam_post, axis=1)  # (TB, L)
     lam_new = lam_sum / n
     safe = jnp.maximum(lam_sum, _EPS)
     mu_new = jnp.sum(lam_post * mu_post, axis=1) / safe
-    phi_new = jnp.sum(lam_post * ((muc - mu_post) ** 2 + phi_post), axis=1) / safe
+    phi_new = (
+        jnp.sum(lam_post * ((mu_new[:, None, :] - mu_post) ** 2 + phi_post), axis=1)
+        / safe
+    )
     lam0_new = jnp.clip(lam0_new, 1e-6, 1.0 - 1e-6)
     lam_new = jnp.maximum(lam_new, 1e-8)
     total = jnp.maximum(lam0_new + jnp.sum(lam_new, axis=1, keepdims=True), _EPS)

@@ -149,6 +149,49 @@ def qgamp_step(
     return tuple(o[:nb] for o in outs)
 
 
+def _qgamp_ea_scan(obs, alpha, a, taus, bits, m, n_components, iters, em, lam0):
+    """Shared EA scan body: ``obs`` is (nb, M) int32 codes when ``bits == 0``
+    or (nb, W) uint32 packed wire words when ``bits == Q`` (unpacked in-VMEM
+    by the kernel -- the uint8 view never hits HBM)."""
+    nb = obs.shape[0]
+    n = a.shape[1]
+    lo_tau, hi_tau = tau_tables(taus)  # shared protocol constant (core.gamp)
+    alpha = jnp.asarray(alpha, jnp.float32)
+    alive = alpha > 0.0
+    safe_alpha = jnp.where(alive, alpha, 1.0)
+    init_var = block_prior_energy(alpha, m, n)
+    # Pad ONCE to a tile multiple (benign ones-rows), scan the raw kernel,
+    # trim once at the end -- no per-iteration pad/trim copies in the scan.
+    tb = min(_qstep.DEFAULT_TB, max(8, nb))
+    (obs_p, alpha2d, init_var_p), _ = _pad_rows_ones(
+        (obs, safe_alpha[:, None], init_var), tb
+    )
+    nbp = obs_p.shape[0]
+    theta0 = _gm.pack_init_theta(nbp, n_components, init_var_p, lam0)
+    ghat0 = jnp.zeros((nbp, n), jnp.float32)
+    nu_g0 = jnp.broadcast_to(
+        jnp.maximum(init_var_p, 1e-12)[:, None], (nbp, n)
+    ).astype(jnp.float32)
+    shat0 = jnp.zeros((nbp, m), jnp.float32)
+
+    def body(carry, _):
+        gh, ng, sh, th = carry
+        gh, ng, sh, th = _qstep.qgamp_step_pallas(
+            gh, ng, sh, th, obs_p, alpha2d, lo_tau, hi_tau, a,
+            n_components=n_components, em=em, tb=tb, interpret=_interpret(),
+            bits=bits,
+        )
+        return (gh, ng, sh, th), None
+
+    (ghat, _, _, _), _ = jax.lax.scan(
+        body, (ghat0, nu_g0, shat0, theta0), None, length=iters
+    )
+    ghat = jnp.where(alive[:, None], ghat[:nb], 0.0)
+    # The PS knows the true block norm (see core.gamp.qem_gamp).
+    true_norm = jnp.where(alive, jnp.sqrt(jnp.float32(m)) / safe_alpha, 0.0)
+    return norm_guard(ghat, true_norm)
+
+
 @functools.partial(jax.jit, static_argnames=("n_components", "iters", "em"))
 def qgamp_ea_run(
     codes: jnp.ndarray,  # (nb, M) uint8/int Lloyd-Max code indices
@@ -167,42 +210,35 @@ def qgamp_ea_run(
     the scheduler; see DESIGN.md), including the same far-tail channel
     fallback and final norm guard.
     """
-    nb, m = codes.shape
-    n = a.shape[1]
-    lo_tau, hi_tau = tau_tables(taus)  # shared protocol constant (core.gamp)
-    alpha = jnp.asarray(alpha, jnp.float32)
-    alive = alpha > 0.0
-    safe_alpha = jnp.where(alive, alpha, 1.0)
-    init_var = block_prior_energy(alpha, m, n)
-    # Pad ONCE to a tile multiple (benign ones-rows), scan the raw kernel,
-    # trim once at the end -- no per-iteration pad/trim copies in the scan.
-    tb = min(_qstep.DEFAULT_TB, max(8, nb))
-    (codes_i, alpha2d, init_var_p), _ = _pad_rows_ones(
-        (codes.astype(jnp.int32), safe_alpha[:, None], init_var), tb
+    m = codes.shape[1]
+    return _qgamp_ea_scan(
+        codes.astype(jnp.int32), alpha, a, taus, 0, m, n_components, iters, em, lam0
     )
-    nbp = codes_i.shape[0]
-    theta0 = _gm.pack_init_theta(nbp, n_components, init_var_p, lam0)
-    ghat0 = jnp.zeros((nbp, n), jnp.float32)
-    nu_g0 = jnp.broadcast_to(
-        jnp.maximum(init_var_p, 1e-12)[:, None], (nbp, n)
-    ).astype(jnp.float32)
-    shat0 = jnp.zeros((nbp, m), jnp.float32)
 
-    def body(carry, _):
-        gh, ng, sh, th = carry
-        gh, ng, sh, th = _qstep.qgamp_step_pallas(
-            gh, ng, sh, th, codes_i, alpha2d, lo_tau, hi_tau, a,
-            n_components=n_components, em=em, tb=tb, interpret=_interpret(),
-        )
-        return (gh, ng, sh, th), None
 
-    (ghat, _, _, _), _ = jax.lax.scan(
-        body, (ghat0, nu_g0, shat0, theta0), None, length=iters
+@functools.partial(
+    jax.jit, static_argnames=("bits", "m", "n_components", "iters", "em")
+)
+def qgamp_ea_run_packed(
+    words: jnp.ndarray,  # (nb, W) uint32 packed wire words (pack_codes layout)
+    alpha: jnp.ndarray,  # (nb,) transmitted BQCS scales (0 = dead block)
+    a: jnp.ndarray,  # (M, N)
+    taus: jnp.ndarray,  # (2^Q - 1,) interior Lloyd-Max thresholds
+    bits: int,  # Q
+    m: int,  # true measurement count M <= W * (32 // Q)
+    n_components: int = 3,
+    iters: int = 25,
+    em: bool = True,
+    lam0: float = 0.9,
+) -> jnp.ndarray:
+    """Packed-domain EA reconstruction: the scan consumes the uint32 wire
+    words directly and the kernel unpacks per lane group in VMEM, so the
+    (nb, M) uint8 code tensor never exists in HBM.  Bit-identical to
+    ``qgamp_ea_run(unpack_codes(words), ...)`` (pinned by tests)."""
+    assert words.dtype == jnp.uint32, words.dtype
+    return _qgamp_ea_scan(
+        words, alpha, a, taus, bits, m, n_components, iters, em, lam0
     )
-    ghat = jnp.where(alive[:, None], ghat[:nb], 0.0)
-    # The PS knows the true block norm (see core.gamp.qem_gamp).
-    true_norm = jnp.where(alive, jnp.sqrt(jnp.float32(m)) / safe_alpha, 0.0)
-    return norm_guard(ghat, true_norm)
 
 
 @functools.partial(jax.jit, static_argnames=("n_components", "iters", "em"))

@@ -20,6 +20,11 @@ reference in core/gamp.py -- see that module's `_quantized_channel` for the
 numerics rationale).
 
 TPU adaptation notes:
+  * packed-domain observation (``bits > 0``): the kernel consumes the (TB, W)
+    uint32 *wire words* and unpacks the Q-bit indices in VMEM by reversing
+    the fused encoder's lane-group shift-accumulate (static slices + shifts,
+    DESIGN.md #Wire-format) -- the (nb, M) uint8 code tensor never exists in
+    HBM on this path (DESIGN.md #Recon-engine);
   * the per-entry bin edges are fetched without a gather: the (2^Q,) lo/hi
     threshold tables stay resident in VMEM and the lookup is a one-hot
     broadcast-compare contraction over <= 256 lanes (same trick as the
@@ -60,6 +65,7 @@ def _qgamp_step_kernel(
     ghat_ref, nug_ref, shat_ref, theta_ref, codes_ref, alpha_ref,
     lo_ref, hi_ref, a_ref,
     ghat_out, nug_out, shat_out, theta_out, *, n_components: int, em: bool,
+    bits: int = 0,
 ):
     L = n_components
     a = a_ref[...]  # (M, N)
@@ -67,7 +73,24 @@ def _qgamp_step_kernel(
     nu_g = nug_ref[...]  # (TB, N)
     shat = shat_ref[...]  # (TB, M)
     th = theta_ref[...]  # (TB, 1 + 3L)
-    codes = codes_ref[...]  # (TB, M) int32 in [0, 2^Q)
+    if bits:
+        # Packed-domain observation: codes_ref holds the (TB, W) uint32 wire
+        # words; the Q-bit indices are unpacked here, in VMEM, by reversing
+        # the fused encoder's shift-accumulate over the 32 // Q lane groups
+        # (DESIGN.md #Wire-format: group j = bits [j*Q, (j+1)*Q) of every
+        # word = measurements [j*W, (j+1)*W)) -- static lane slices and
+        # shifts only, and the uint8 code tensor never exists in HBM.
+        words = codes_ref[...]  # (TB, W) uint32
+        mask = jnp.uint32((1 << bits) - 1)
+        codes = jnp.concatenate(
+            [
+                ((words >> jnp.uint32(j * bits)) & mask).astype(jnp.int32)
+                for j in range(32 // bits)
+            ],
+            axis=1,
+        )[:, : shat.shape[1]]  # (TB, Mp) -> (TB, M): drop word-padding lanes
+    else:
+        codes = codes_ref[...]  # (TB, M) int32 in [0, 2^Q)
     alpha = alpha_ref[...]  # (TB, 1) f32, dead rows pre-sanitized to 1.0
     lo_tau = lo_ref[...]  # (2^Q,) lower bin edges (sentinel at index 0)
     hi_tau = hi_ref[...]  # (2^Q,) upper bin edges (sentinel at index -1)
@@ -125,13 +148,15 @@ def _qgamp_step_kernel(
     theta_out[...] = theta_new
 
 
-@functools.partial(jax.jit, static_argnames=("n_components", "em", "tb", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("n_components", "em", "tb", "interpret", "bits")
+)
 def qgamp_step_pallas(
     ghat: jnp.ndarray,  # (nb, N)
     nu_g: jnp.ndarray,  # (nb, N)
     shat: jnp.ndarray,  # (nb, M)
     theta: jnp.ndarray,  # (nb, 1 + 3L)
-    codes: jnp.ndarray,  # (nb, M) int32
+    codes: jnp.ndarray,  # (nb, M) int32 -- or (nb, W) uint32 words if bits
     alpha: jnp.ndarray,  # (nb, 1) f32, strictly positive (sanitized)
     lo_tau: jnp.ndarray,  # (2^Q,)
     hi_tau: jnp.ndarray,  # (2^Q,)
@@ -140,13 +165,17 @@ def qgamp_step_pallas(
     em: bool = True,
     tb: int = DEFAULT_TB,
     interpret: bool = False,
+    bits: int = 0,  # 0 = unpacked int32 codes; Q = packed uint32 wire words
 ):
     nb, n = ghat.shape
     m = shat.shape[1]
     tl = theta.shape[1]
     n_lev = lo_tau.shape[0]
     assert nb % tb == 0, (nb, tb)
-    kernel = functools.partial(_qgamp_step_kernel, n_components=n_components, em=em)
+    obs_w = codes.shape[1]  # M unpacked, W = ceil(M / (32//Q)) packed
+    kernel = functools.partial(
+        _qgamp_step_kernel, n_components=n_components, em=em, bits=bits
+    )
     row = lambda i: (i, 0)
     outs = pl.pallas_call(
         kernel,
@@ -156,7 +185,7 @@ def qgamp_step_pallas(
             pl.BlockSpec((tb, n), row),
             pl.BlockSpec((tb, m), row),
             pl.BlockSpec((tb, tl), row),
-            pl.BlockSpec((tb, m), row),
+            pl.BlockSpec((tb, obs_w), row),
             pl.BlockSpec((tb, 1), row),
             pl.BlockSpec((n_lev,), lambda i: (0,)),
             pl.BlockSpec((n_lev,), lambda i: (0,)),

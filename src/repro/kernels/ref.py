@@ -135,7 +135,10 @@ def _gm_input_and_em(rhat, v, theta, n, L, em):
         lam_new = lam_sum / n
         safe = jnp.maximum(lam_sum, _EPS)
         mu_new = jnp.sum(lam_post * mu_post, axis=1) / safe
-        phi_new = jnp.sum(lam_post * ((muc - mu_post) ** 2 + phi_post), axis=1) / safe
+        phi_new = (
+            jnp.sum(lam_post * ((mu_new[:, None, :] - mu_post) ** 2 + phi_post), axis=1)
+            / safe
+        )
         lam0_new = jnp.clip(lam0_new, 1e-6, 1.0 - 1e-6)
         lam_new = jnp.maximum(lam_new, 1e-8)
         total = jnp.maximum(lam0_new + jnp.sum(lam_new, axis=1, keepdims=True), _EPS)

@@ -9,12 +9,18 @@ in-pod mesh).  Two wire modes:
     the f32 alphas across pods -> every pod Bussgang-aggregates and runs
     EM-GAMP redundantly.  The packed uint32 words come straight out of the
     (fused) encoder -- nothing wider than the wire format crosses the pod
-    axis, and unpacking happens exactly once, at the PS boundary after the
-    gather.  Cross-pod bytes/step = pods * nb * (W*4 + 4), W = ceil(M*Q/32).
+    axis, and the PS decode consumes the words directly: the EA branch feeds
+    them to the packed reconstruction engine (fused-kernel in-VMEM unpack /
+    per-chunk XLA unpack, DESIGN.md #Recon-engine) and the AE branch
+    Bussgang-aggregates via the packed level lookup, so the (K, nb, M) uint8
+    index view never materializes on the PS side either.  Cross-pod
+    bytes/step = pods * nb * (W*4 + 4), W = ceil(M*Q/32).
   * psum_dequant (scales to many pods): each pod locally dequantizes and
     Bussgang-weights its codes; a single psum over 'pod' produces the
-    aggregate observation directly.  Cross-pod bytes ~ nb * M * 4 (ring),
-    independent of pod count.
+    aggregate observation directly.  Under use_kernels the dequantization
+    reads the fused encoder's packed words straight through
+    (dequantize_packed) instead of round-tripping pack -> unpack -> gather.
+    Cross-pod bytes ~ nb * M * 4 (ring), independent of pod count.
 
 Partial participation: a pod whose ``participating`` flag is 0 contributes
 rho_k = 0 -- its payload is exactly ignored (Sec. IV weighting), so node
@@ -34,9 +40,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bussgang
-from repro.core.compression import BQCSCodec, unpack_codes
+from repro.core.compression import BQCSCodec
 from repro.core.gamp import GampConfig, em_gamp
-from repro.core.reconstruction import estimate_and_aggregate
+from repro.core.reconstruction import estimate_and_aggregate_packed
 from repro.models.sharding import cs
 
 __all__ = ["fedqcs_pod_allreduce"]
@@ -78,24 +84,38 @@ def fedqcs_pod_allreduce(
         new_residual = cs(new_residual, "blocks", None)
         all_words = jax.lax.all_gather(words, axis_name)  # (K, nb, W)
         all_alpha = jax.lax.all_gather(alpha, axis_name)  # (K, nb)
-        # PS boundary: the only place the Q-bit indices are materialized.
-        all_codes = jax.vmap(lambda w: unpack_codes(w, cfg.bits, m))(all_words)
         if cfg.recon_mode == "ea":
             # Estimate-and-aggregate: per-worker Q-EM-GAMP (fused kernel when
             # cfg.use_kernels), then rho-weighted sum -- every pod solves the
             # full K-batch redundantly, exactly like the AE branch below.
-            ghat = estimate_and_aggregate(codec, all_codes, all_alpha, rhos)
+            # The words pass STRAIGHT THROUGH to the packed reconstruction
+            # engine (chunked per cfg.recon_chunk); no uint8 view exists.
+            ghat = estimate_and_aggregate_packed(codec, all_words, all_alpha, rhos)
             return cs(ghat, "blocks", None), new_residual
-        y = bussgang.aggregate_codes(all_codes, all_alpha, rhos, codec.quantizer)
+        # AE: Bussgang-aggregate via the packed level lookup -- the only
+        # index-domain consumer left, and it reads the words directly too.
+        y = bussgang.aggregate_packed(
+            all_words, all_alpha, rhos, codec.quantizer, cfg.bits, m
+        )
         nu = bussgang.effective_noise_var(all_alpha, rhos, codec.quantizer)
         energy = bussgang.signal_energy(all_alpha, rhos, m, n)
     else:  # psum_dequant: codes never cross the wire, only dequantized sums
-        codes, alpha, new_residual = codec.compress_blocks(blocks + 0.0, residual)
+        if cfg.use_kernels:
+            # The fused encoder emits packed words; dequantize straight from
+            # them (no pack -> unpack round trip, no uint8 index view).
+            words, alpha, new_residual = codec.compress_blocks_packed(
+                blocks + 0.0, residual
+            )
+            words = cs(words, "blocks", None)
+            deq = codec.dequantize_packed(words)
+        else:
+            codes, alpha, new_residual = codec.compress_blocks(blocks + 0.0, residual)
+            codes = cs(codes, "blocks", None)
+            deq = codec.dequantize(codes)
         new_residual = jnp.where(part > 0, new_residual, blocks + residual)
-        codes = cs(codes, "blocks", None)
         new_residual = cs(new_residual, "blocks", None)
         w = bussgang.bussgang_weight(rho_self, alpha, codec.quantizer)  # (nb,)
-        y_local = w[:, None] * codec.dequantize(codes)
+        y_local = w[:, None] * deq
         y = jax.lax.psum(y_local, axis_name)
         safe = jnp.where(alpha > 0, alpha, 1.0)
         nu_local = codec.quantizer.kappa * jnp.where(
@@ -133,6 +153,25 @@ def fedqcs_vmapped_allreduce(
     part = jnp.asarray(participating, jnp.float32)
     rhos = part / jnp.maximum(jnp.sum(part), 1.0)  # (pods,)
 
+    if cfg.recon_mode == "ea":
+        # Estimate-and-aggregate over the pod-sharded payload batch: XLA
+        # lowers the (pods*nb)-row GAMP batch like any other auto-sharded
+        # compute.  Note this trades away the psum_dequant wire advantage --
+        # the per-pod payloads are replicated across pods (see DESIGN.md) --
+        # but they stay PACKED: the words feed the reconstruction engine
+        # directly (chunked per cfg.recon_chunk) and the uint8 view never
+        # materializes.
+        words, alpha, new_residual = jax.vmap(codec.compress_blocks_packed)(
+            blocks_pp, residual_pp
+        )
+        new_residual = jnp.where(
+            part[:, None, None] > 0, new_residual, blocks_pp + residual_pp
+        )
+        words = cs(words, None, "blocks", None)
+        new_residual = cs(new_residual, None, "blocks", None)
+        ghat = estimate_and_aggregate_packed(codec, words, alpha, rhos)
+        return cs(ghat, "blocks", None), new_residual
+
     codes, alpha, new_residual = jax.vmap(codec.compress_blocks)(blocks_pp, residual_pp)
     # Dead pods keep the full carry in their residual (see module docstring).
     new_residual = jnp.where(
@@ -140,14 +179,6 @@ def fedqcs_vmapped_allreduce(
     )
     codes = cs(codes, None, "blocks", None)
     new_residual = cs(new_residual, None, "blocks", None)
-
-    if cfg.recon_mode == "ea":
-        # Estimate-and-aggregate over the pod-sharded code batch: XLA lowers
-        # the (pods*nb)-row GAMP batch like any other auto-sharded compute.
-        # Note this trades away the psum_dequant wire advantage -- the
-        # per-pod codes are materialized on every pod (see DESIGN.md).
-        ghat = estimate_and_aggregate(codec, codes, alpha, rhos)
-        return cs(ghat, "blocks", None), new_residual
 
     # Bussgang-weighted sum over pods -> all-reduce over the pod axis.
     y = bussgang.aggregate_codes(codes, alpha, rhos, codec.quantizer)

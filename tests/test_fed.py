@@ -303,6 +303,37 @@ def test_server_optimizers_learn(kind):
         )
 
 
+def test_engine_ea_packed_chunked_round():
+    """fedqcs-ea through the engine: the payload carries the packed uint32
+    wire words (no uint8 code view in the client pass), and a
+    recon_chunk-streamed PS decode (DESIGN.md #Recon-engine) matches the
+    monolithic engine round to reconstruction round-off."""
+    import dataclasses
+
+    from repro.core.compression import packed_width
+
+    outs = {}
+    for chunk in (0, 4):
+        fed = dataclasses.replace(FED, recon_chunk=chunk)
+        e = _engine(fed_cfg=fed, cohort=CohortConfig(method="fedqcs-ea"))
+        payloads, _ = e._client_pass(
+            e.params,
+            e.data.cohort_batch(0, np.arange(8)),
+            e.residuals[jnp.arange(8)],
+            jnp.full((8,), 1 / 8),
+            jax.vmap(jax.random.PRNGKey)(jnp.arange(8)),
+        )
+        assert "codes" not in payloads
+        assert payloads["words"].dtype == jnp.uint32
+        assert payloads["words"].shape[-1] == packed_width(FED.m, FED.bits)
+        stats = e.run(2)[-1]
+        assert np.isfinite(stats["nmse"]), stats
+        outs[chunk] = e.params
+    for a, b in zip(jax.tree_util.tree_leaves(outs[0]),
+                    jax.tree_util.tree_leaves(outs[4])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
 def test_engine_rejects_noisy_channel_for_code_domain_methods():
     with pytest.raises(ValueError, match="ideal"):
         _engine(

@@ -1,0 +1,377 @@
+"""Reconstruction-engine + GAMP-numerics regression tests (this PR's
+bugfixes and the packed/chunked/sharded PS decode, DESIGN.md #Recon-engine):
+
+  * trunc_channel_moments vs a numerical-integration oracle across in-bin /
+    one-sided-tail / far-tail / sentinel-bin regimes (pins the far-tail
+    condition fix and the tail-accurate bin mass);
+  * EM hyperparameter recovery on synthetic Bernoulli-GM data (pins the
+    phi-vs-refreshed-mu fix);
+  * packed-domain EA decode bit-equivalence vs the uint8 path, XLA and
+    fused-kernel, Q in {1, 2, 3, 4, 8} (incl. the Q=3 slack-bit layout);
+  * chunked / early-stop / shard_map decode equivalence and the two-phase
+    sweep;
+  * dequantize-from-packed and the packed Bussgang aggregate.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bussgang, recon_engine
+from repro.core.compression import (
+    BQCSCodec,
+    FedQCSConfig,
+    decode_packed,
+    pack_codes,
+    unpack_codes,
+)
+from repro.core.gamp import (
+    GampConfig,
+    _em_update,
+    _input_channel,
+    _qem_gamp_xla,
+    qem_gamp,
+    qem_gamp_packed,
+    trunc_channel_moments,
+)
+from repro.core.reconstruction import (
+    estimate_and_aggregate,
+    estimate_and_aggregate_packed,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+_trapz = getattr(np, "trapezoid", None) or np.trapz  # numpy 2.x rename
+
+
+# ---------------------------------------------------------------------------
+# truncated-normal channel moments vs numerical integration
+# ---------------------------------------------------------------------------
+
+
+def _trunc_oracle(phat, nu_p, lo, hi):
+    """Posterior mean/var of x ~ N(phat, nu_p) truncated to (lo, hi], by
+    dense quadrature in f64 (log-weights, so far-tail bins stay exact)."""
+    sd = np.sqrt(nu_p)
+    a = max((lo - phat) / sd, -60.0)
+    b = min((hi - phat) / sd, 60.0)
+    t = np.linspace(a, b, 400001, dtype=np.float64)
+    logw = -0.5 * t * t
+    w = np.exp(logw - logw.max())
+    z = _trapz(w, t)
+    mean_t = _trapz(w * t, t) / z
+    var_t = _trapz(w * (t - mean_t) ** 2, t) / z
+    return phat + sd * mean_t, nu_p * var_t
+
+
+_TRUNC_CASES = {
+    # name: (phat, nu_p, lo, hi)
+    # phat INSIDE a wide bin, both edges > clip sds away: the fixed far-tail
+    # condition must NOT fire (posterior ~ prior); the old min(|a|,|b|) test
+    # collapsed the variance to nu_p/amin^2 here.
+    "in_bin_wide": (0.3, 0.04, -5.0, 5.0),
+    "in_bin_moderate": (0.1, 1.0, -0.5, 0.7),
+    # one-sided bins INSIDE the clip (4-8 sd): the exact branch must survive
+    # f32 (tail-accurate erfc bin mass; the naive CDF difference loses all
+    # signal here).
+    "one_sided_5sd": (0.0, 0.04, 1.0, 1.4),
+    "one_sided_8sd": (0.0, 0.01, 0.8, 1.2),
+    "one_sided_neg": (0.0, 0.04, -1.4, -1.0),
+    # bins entirely beyond the clip: asymptotic fallback.
+    "far_upper": (0.0, 0.01, 1.2, 1.5),
+    "far_lower": (2.0, 0.01, -0.5, 0.2),
+    # sentinel (outermost Lloyd-Max) bins, edge at +-4*clip.
+    "sentinel_lo": (-0.8, 0.09, -36.0, -0.9817),
+    "sentinel_lo_far": (1.5, 0.0025, -36.0, -0.9817),
+}
+
+
+@pytest.mark.parametrize("case", sorted(_TRUNC_CASES))
+def test_trunc_channel_moments_vs_integration_oracle(case):
+    phat, nu_p, lo, hi = _TRUNC_CASES[case]
+    xpost, nu_x = trunc_channel_moments(
+        jnp.float32(phat), jnp.float32(nu_p), jnp.float32(lo), jnp.float32(hi)
+    )
+    x_ref, nu_ref = _trunc_oracle(phat, nu_p, lo, hi)
+    sd = np.sqrt(nu_p)
+    # mean within 2e-3 sd everywhere (the far fallback's asymptotic error is
+    # O(1/a^2) of sd; exact-branch cases sit at f32 round-off)
+    assert abs(float(xpost) - x_ref) / sd < 2e-3, (float(xpost), x_ref)
+    # variance within 10% (far fallback) / much tighter in-bin
+    assert 0.9 <= float(nu_x) / nu_ref <= 1.1, (float(nu_x), nu_ref)
+
+
+def test_in_bin_wide_posterior_not_collapsed():
+    """Regression for the far-tail condition: phat inside a wide bin must
+    keep ~the prior variance.  The pre-fix fallback returned nu_p/amin^2 --
+    a 600x collapse for this geometry."""
+    phat, nu_p, lo, hi = 0.3, 0.04, -5.0, 5.0  # |a|,|b| ~ 25 sds, both sides
+    _, nu_x = trunc_channel_moments(
+        jnp.float32(phat), jnp.float32(nu_p), jnp.float32(lo), jnp.float32(hi)
+    )
+    assert float(nu_x) > 0.9 * nu_p, float(nu_x)
+
+
+def test_trunc_moments_batched_mixed_regimes():
+    """The per-entry where() routing holds element-wise on a mixed batch."""
+    names = sorted(_TRUNC_CASES)
+    p, v, lo, hi = (np.array([_TRUNC_CASES[n][i] for n in names], np.float32)
+                    for i in range(4))
+    xpost, nu_x = trunc_channel_moments(jnp.asarray(p), jnp.asarray(v),
+                                        jnp.asarray(lo), jnp.asarray(hi))
+    for i, name in enumerate(names):
+        x_ref, nu_ref = _trunc_oracle(*_TRUNC_CASES[name])
+        sd = np.sqrt(v[i])
+        assert abs(float(xpost[i]) - x_ref) / sd < 2e-3, name
+        assert 0.9 <= float(nu_x[i]) / nu_ref <= 1.1, name
+
+
+# ---------------------------------------------------------------------------
+# EM hyperparameter refresh (phi against the refreshed mu)
+# ---------------------------------------------------------------------------
+
+
+def _bg_theta(nb, L, lam0, lam, mu, phi):
+    return (
+        jnp.full((nb,), lam0, jnp.float32),
+        jnp.full((nb, L), lam, jnp.float32),
+        jnp.full((nb, L), mu, jnp.float32),
+        jnp.full((nb, L), phi, jnp.float32),
+    )
+
+
+def test_em_phi_single_step_uses_refreshed_mu():
+    """One EM step from a deliberately-off mean init: the M-step variance is
+    the posterior scatter around the SAME-STEP refreshed mu.  Scattering
+    around the stale mean adds exactly (mu_new - mu_old)^2 (the cross-term
+    vanishes because mu_new IS the posterior-weighted mean) -- the upward
+    bias the fix removes.  Pin both the identity and that the fixed update
+    is the smaller one."""
+    rng = np.random.default_rng(1)
+    nb, n = 2, 8192
+    mu_t, phi_t = 1.0, 0.04
+    nz = rng.random((nb, n)) > 0.5
+    g = np.where(nz, rng.normal(mu_t, np.sqrt(phi_t), (nb, n)), 0.0)
+    nu_r = 0.01
+    rhat = jnp.asarray(g + rng.normal(0, np.sqrt(nu_r), (nb, n)), jnp.float32)
+    mu_old = 0.3
+    theta = _bg_theta(nb, 1, 0.5, 0.5, mu_old, 0.5)  # mu off by 0.7
+    _, _, lp0, lp, mp, pp = _input_channel(rhat, jnp.full((nb, n), nu_r), theta)
+    _, _, mu1, phi1 = _em_update(theta, lp0, lp, mp, pp)
+    # what the stale-mu update would have returned, from the same posterior
+    lam_sum = jnp.maximum(jnp.sum(lp, axis=1), 1e-12)
+    phi_stale = jnp.sum(lp * (jnp.square(mu_old - mp) + pp), axis=1) / lam_sum
+    bias = np.square(np.asarray(mu1) - mu_old)
+    np.testing.assert_allclose(
+        np.asarray(phi_stale), np.asarray(phi1) + bias, rtol=1e-4
+    )
+    assert bias.min() > 0.2  # the init is genuinely off -> the bias is large
+    assert float(phi1.max()) < float(phi_stale.min())
+
+
+def test_em_recovers_bg_hyperparameters():
+    """Full EM iteration on synthetic Bernoulli-GM data converges to the
+    true (lam0, mu, phi) -- the satellite's recovery contract."""
+    rng = np.random.default_rng(0)
+    nb, n = 2, 4096
+    lam0_t, mu_t, phi_t = 0.5, 1.0, 0.04
+    nz = rng.random((nb, n)) > lam0_t
+    g = np.where(nz, rng.normal(mu_t, np.sqrt(phi_t), (nb, n)), 0.0)
+    nu_r = 0.01
+    rhat = jnp.asarray(g + rng.normal(0, np.sqrt(nu_r), (nb, n)), jnp.float32)
+    nu_r_arr = jnp.full((nb, n), nu_r, jnp.float32)
+    theta = _bg_theta(nb, 1, 0.5, 0.5, 0.3, 0.5)
+    for _ in range(200):
+        _, _, lp0, lp, mp, pp = _input_channel(rhat, nu_r_arr, theta)
+        theta = _em_update(theta, lp0, lp, mp, pp)
+    lam0, _, mu, phi = (np.asarray(t) for t in theta)
+    np.testing.assert_allclose(lam0, lam0_t, atol=0.05)
+    np.testing.assert_allclose(mu, mu_t, rtol=0.05)
+    np.testing.assert_allclose(phi, phi_t, rtol=0.25)
+
+
+# ---------------------------------------------------------------------------
+# packed-domain decode
+# ---------------------------------------------------------------------------
+
+
+def _payload(q, k=3, nb=2, n=256, seed=0):
+    rng = np.random.default_rng(seed)
+    cfg = FedQCSConfig(block_size=n, reduction_ratio=4, bits=q, s_ratio=0.08)
+    codec = BQCSCodec(cfg)
+    g = np.zeros((k, nb, n), np.float32)
+    for i in range(k):
+        for j in range(nb):
+            idx = rng.choice(n, cfg.s, replace=False)
+            g[i, j, idx] = rng.normal(0, 0.1, cfg.s)
+    codes, alphas, _ = jax.vmap(codec.compress_blocks)(
+        jnp.asarray(g), jnp.zeros((k, nb, n), jnp.float32)
+    )
+    words = jax.vmap(lambda c: pack_codes(c, q))(codes)
+    return codec, codes, words, alphas, jnp.full((k,), 1.0 / k)
+
+
+@pytest.mark.parametrize("q", [1, 2, 3, 4, 8])
+def test_packed_ea_bit_identical_to_uint8_path(q):
+    """qem_gamp_packed == qem_gamp on the unpacked view, bit-for-bit, on the
+    XLA path AND the fused-kernel path -- incl. Q=3, where each uint32 word
+    carries 2 slack bits (10 codes/word)."""
+    codec, codes, words, alphas, _ = _payload(q)
+    cfg = codec.cfg
+    k, nb, m = codes.shape
+    flat_c = codes.reshape(k * nb, m)
+    flat_w = words.reshape(k * nb, -1)
+    flat_a = alphas.reshape(k * nb)
+    gamp = GampConfig(iters=8, variance_mode="scalar")
+    for use_pallas in (False, True):
+        x_u = qem_gamp(flat_c, flat_a, codec.a, codec.quantizer, gamp,
+                       use_pallas=use_pallas)
+        x_p = qem_gamp_packed(flat_w, flat_a, codec.a, codec.quantizer, gamp,
+                              cfg.m, use_pallas=use_pallas)
+        np.testing.assert_array_equal(np.asarray(x_u), np.asarray(x_p))
+
+
+@pytest.mark.parametrize("q", [1, 2, 3, 4, 8])
+def test_dequantize_packed_matches_unpacked(q):
+    """decode_packed == decode(unpack_codes) -- the psum_dequant wire's
+    no-index-view path -- and the packed Bussgang aggregate matches the
+    code-domain one (AE path of the gather_codes wire)."""
+    codec, codes, words, alphas, rhos = _payload(q)
+    cfg = codec.cfg
+    deq_p = decode_packed(words, q, cfg.m, codec.quantizer.jnp_levels())
+    np.testing.assert_array_equal(
+        np.asarray(deq_p), np.asarray(codec.dequantize(codes))
+    )
+    # 2-D convenience method on the codec
+    np.testing.assert_array_equal(
+        np.asarray(codec.dequantize_packed(words[0])),
+        np.asarray(codec.dequantize(codes[0])),
+    )
+    y_p = bussgang.aggregate_packed(words, alphas, rhos, codec.quantizer, q, cfg.m)
+    y_u = bussgang.aggregate_codes(codes, alphas, rhos, codec.quantizer)
+    np.testing.assert_array_equal(np.asarray(y_p), np.asarray(y_u))
+
+
+def test_unpack_codes_leading_batch_dims():
+    rng = np.random.default_rng(3)
+    codes = jnp.asarray(rng.integers(0, 8, (4, 5, 30)), jnp.uint8)
+    words = jax.vmap(lambda c: pack_codes(c, 3))(codes)  # (4, 5, 3)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_codes(words, 3, 30)), np.asarray(codes)
+    )
+
+
+# ---------------------------------------------------------------------------
+# chunked / sharded / two-phase engine
+# ---------------------------------------------------------------------------
+
+
+def _nmse(a, b):
+    return float(jnp.sum((a - b) ** 2) / jnp.maximum(jnp.sum(b**2), 1e-30))
+
+
+def test_chunked_decode_matches_monolithic():
+    """Chunk streaming is output-equivalent to the monolithic batch: packed
+    vs unpacked at equal chunking is BIT-identical; chunked vs monolithic is
+    NMSE-equivalent (batch-shape GEMM lowerings differ at ulp level, the
+    same caveat as the fed engine's loop oracle)."""
+    codec, codes, words, alphas, rhos = _payload(3, k=7, nb=3)
+    gamp = GampConfig(iters=10, variance_mode="scalar")
+    mono = estimate_and_aggregate(codec, codes, alphas, rhos, gamp, chunk=0)
+    for chunk in (4, 8, 64):  # padding, even split, chunk > rows
+        ch_u = estimate_and_aggregate(codec, codes, alphas, rhos, gamp, chunk=chunk)
+        ch_p = estimate_and_aggregate_packed(
+            codec, words, alphas, rhos, gamp, chunk=chunk
+        )
+        np.testing.assert_array_equal(np.asarray(ch_p), np.asarray(ch_u))
+        assert _nmse(ch_u, mono) <= 1e-4, chunk
+
+
+def test_recon_chunk_config_knob():
+    """FedQCSConfig.recon_chunk is the default chunking of both EA entry
+    points (what the collectives/engine wiring relies on)."""
+    codec, codes, words, alphas, rhos = _payload(2, k=5, nb=2)
+    gamp = GampConfig(iters=8, variance_mode="scalar")
+    chunked_cfg = dataclasses.replace(codec.cfg, recon_chunk=4)
+    codec_c = BQCSCodec(chunked_cfg)
+    out_cfg = estimate_and_aggregate_packed(codec_c, words, alphas, rhos, gamp)
+    out_exp = estimate_and_aggregate_packed(codec, words, alphas, rhos, gamp, chunk=4)
+    np.testing.assert_array_equal(np.asarray(out_cfg), np.asarray(out_exp))
+
+
+def test_early_stop_bitwise_matches_static_trip():
+    """GampConfig.early_stop only removes post-freeze no-op iterations: the
+    outputs are bit-identical to the static scan."""
+    codec, codes, words, alphas, rhos = _payload(2, k=6, nb=2)
+    gamp = GampConfig(iters=25, variance_mode="scalar", tol=1e-3)
+    es = dataclasses.replace(gamp, early_stop=True)
+    out_s = estimate_and_aggregate_packed(codec, words, alphas, rhos, gamp, chunk=4)
+    out_e = estimate_and_aggregate_packed(codec, words, alphas, rhos, es, chunk=4)
+    np.testing.assert_array_equal(np.asarray(out_s), np.asarray(out_e))
+
+
+def test_sharded_decode_matches_unsharded():
+    """shard_map chunk sharding over a ('recon',) mesh is output-equivalent
+    to the single-device scan (multi-device thanks to conftest's 8 forced
+    host devices)."""
+    from jax.sharding import Mesh
+
+    codec, codes, words, alphas, rhos = _payload(2, k=8, nb=2)
+    gamp = GampConfig(iters=8, variance_mode="scalar")
+    ndev = min(4, len(jax.devices()))
+    mesh = Mesh(np.array(jax.devices()[:ndev]), ("recon",))
+    out_m = recon_engine.ea_decode(
+        codec, words, alphas, rhos, gamp, packed=True, chunk=4, mesh=mesh
+    )
+    out_1 = recon_engine.ea_decode(
+        codec, words, alphas, rhos, gamp, packed=True, chunk=4
+    )
+    assert _nmse(out_m, out_1) <= 1e-6
+
+
+def test_two_phase_refines_unconverged_blocks():
+    """The two-phase sweep re-solves exactly the blocks whose early-freeze
+    flag is still false after the scalar pass, with exact-variance GAMP, and
+    leaves converged blocks' scalar estimates untouched."""
+    codec, codes, words, alphas, rhos = _payload(3, k=6, nb=2, seed=5)
+    cfg = codec.cfg
+    k, nb, m = codes.shape
+    # few iterations at a loose-ish tol: some blocks freeze, some don't
+    gamp = GampConfig(iters=6, variance_mode="scalar", tol=1e-2)
+    out, stats = recon_engine.ea_decode_two_phase(
+        codec, words, alphas, rhos, gamp, packed=True, chunk=4
+    )
+    assert out.shape == (nb, cfg.block_size)
+    assert 0 <= stats["phase2_rows"] <= stats["rows"] == k * nb
+    assert np.isfinite(np.asarray(out)).all()
+    # reproduce the expected composition: scalar pass + exact re-solve
+    flat_c = codes.reshape(k * nb, m)
+    flat_a = alphas.reshape(k * nb)
+    ghat, conv = _qem_gamp_xla(flat_c, flat_a, codec.a, codec.quantizer, gamp)
+    surv = np.flatnonzero(~np.asarray(conv))
+    assert len(surv) == stats["phase2_rows"]
+    if len(surv):
+        exact = dataclasses.replace(gamp, variance_mode="exact", early_stop=False)
+        refined, _ = _qem_gamp_xla(
+            flat_c[jnp.asarray(surv)], flat_a[jnp.asarray(surv)],
+            codec.a, codec.quantizer, exact,
+        )
+        ghat = ghat.at[jnp.asarray(surv)].set(refined)
+    expect = jnp.einsum("k,kbn->bn", rhos, ghat.reshape(k, nb, -1))
+    assert _nmse(out, expect) <= 1e-6
+
+
+def test_dead_rows_converged_immediately():
+    """alpha == 0 rows (dead blocks / chunk padding) come back converged and
+    exactly zero, so they never gate a chunk's early-stop exit."""
+    codec, codes, words, alphas, rhos = _payload(2, k=2, nb=2)
+    k, nb, m = codes.shape
+    flat_c = codes.reshape(k * nb, m)
+    flat_a = alphas.reshape(k * nb).at[1].set(0.0)
+    gamp = GampConfig(iters=5, variance_mode="scalar")
+    ghat, conv = _qem_gamp_xla(flat_c, flat_a, codec.a, codec.quantizer, gamp)
+    assert bool(conv[1])
+    assert not np.asarray(ghat[1]).any()
