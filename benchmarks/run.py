@@ -25,6 +25,7 @@ BENCH_GAMP_JSON = os.path.join(_BENCH_DIR, "BENCH_gamp.json")
 BENCH_ENCODE_JSON = os.path.join(_BENCH_DIR, "BENCH_encode.json")
 BENCH_FED_JSON = os.path.join(_BENCH_DIR, "BENCH_fed.json")
 BENCH_RECON_JSON = os.path.join(_BENCH_DIR, "BENCH_recon.json")
+BENCH_QUANT_JSON = os.path.join(_BENCH_DIR, "BENCH_quant.json")
 
 
 def _write_bench_json(path: str, bench: str, entries: list) -> None:
@@ -225,6 +226,86 @@ def encode_fused_vs_unfused(fast=True):
         })
     _write_bench_json(BENCH_ENCODE_JSON, "encode_fused_vs_unfused", entries)
     rows.append(f"encode[json],0,{os.path.relpath(BENCH_ENCODE_JSON)}")
+    return rows
+
+
+def quant_codebooks(fast=True):
+    """Codebook-family microbench (DESIGN.md #Codebooks): packed-wire encode
+    throughput, single-worker EA recovery NMSE, and honest wire accounting
+    per registered family on identical seeded Bernoulli-Gaussian payloads.
+
+    Rows (all at N=512, R=4 -> M=128):
+      * ``lloyd_max[q2]`` / ``lloyd_max[q4]`` -- the paper's scalar quantizer
+        at 2 and 4 bits/measurement (the rate bracket);
+      * ``dithered_uniform[q4]`` -- the shared-seed dither family at 4 bits;
+      * ``vq[q4_d2]`` -- the FedVQCS-style 2-dim / 16-centroid codebook:
+        SAME wire bits as lloyd_max[q2] (4 bits per 2 measurements), lower
+        quantization distortion kappa -> the rate-NMSE win to watch.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.compression import BQCSCodec, CompressedGradient, FedQCSConfig
+    from repro.core.gamp import GampConfig, qem_gamp
+
+    rng = np.random.default_rng(0)
+    n, r = 512, 4
+    nb = 64 if fast else 256
+    iters = 25 if fast else 40
+    s = n // 10
+    g = np.zeros((nb, n), np.float32)
+    for i in range(nb):
+        idx = rng.choice(n, s, replace=False)
+        g[i, idx] = rng.normal(0, 0.1, s)
+    g = jnp.asarray(g)
+    zeros = jnp.zeros_like(g)
+
+    cases = [
+        ("lloyd_max[q2]", dict(codebook="lloyd_max", bits=2)),
+        ("lloyd_max[q4]", dict(codebook="lloyd_max", bits=4)),
+        ("dithered_uniform[q4]", dict(codebook="dithered_uniform", bits=4)),
+        ("vq[q4_d2]", dict(codebook="vq", bits=4, vq_dim=2)),
+    ]
+    rows, entries = [], []
+    for name, ckw in cases:
+        cfg = FedQCSConfig(block_size=n, reduction_ratio=r, s_ratio=s / n,
+                           gamp_iters=iters, **ckw)
+        codec = BQCSCodec(cfg)
+        enc = jax.jit(codec.compress_blocks_packed)
+        words, alpha, _ = jax.block_until_ready(enc(g, zeros))  # compile
+        t0 = time.time()
+        reps = 5
+        for _ in range(reps):
+            jax.block_until_ready(enc(g, zeros))
+        us = 1e6 * (time.time() - t0) / reps
+        payload = CompressedGradient(words, alpha, nb * n, cfg.m, codec.codebook.bits)
+        wire = payload.wire_bits()
+        codes = codec.unpack(words)
+        ghat = qem_gamp(codes, alpha, codec.a, codec.codebook,
+                        GampConfig(iters=iters, variance_mode="scalar"))
+        nmse = float(jnp.median(
+            jnp.sum((ghat - g) ** 2, axis=1)
+            / jnp.maximum(jnp.sum(g**2, axis=1), 1e-30)))
+        cb = codec.codebook
+        bpe = wire / (nb * n)
+        derived = (
+            f"family={cb.family};q={cb.bits};dim={cb.dim};levels={cb.n_levels};"
+            f"kappa={cb.kappa:.4f};wire_bits_per_entry={bpe:.3f};nmse={nmse:.4f};"
+            f"entries_per_sec={nb * n / (us / 1e6):.0f}"
+        )
+        rows.append(f"quant[{name}],{us:.1f},{derived}")
+        entries.append({
+            "name": name, "wall_ms": round(us / 1e3, 3), "us_per_call": round(us, 1),
+            "derived": derived, "family": cb.family, "q": cb.bits, "dim": cb.dim,
+            "levels": cb.n_levels, "kappa": round(cb.kappa, 5),
+            "wire_bits_per_entry": round(bpe, 4), "nmse": round(nmse, 5),
+            "nb": nb, "n": n, "m": cfg.m, "iters": iters,
+            "backend": jax.default_backend(),
+            "interpret": jax.default_backend() != "tpu",
+        })
+    _write_bench_json(BENCH_QUANT_JSON, "quant_codebooks", entries)
+    rows.append(f"quant[json],0,{os.path.relpath(BENCH_QUANT_JSON)}")
     return rows
 
 
@@ -509,6 +590,7 @@ def main() -> None:
         "kernels": kernel_micro,
         "gamp": gamp_ea_vs_ae,
         "encode": encode_fused_vs_unfused,
+        "quant": quant_codebooks,
         "recon": recon_scaling,
         "fed": fed_cohort_scaling,
     }

@@ -10,6 +10,9 @@ Scenario axes beyond the paper (cohort engine, DESIGN.md #Fed-engine):
     PYTHONPATH=src python examples/federated_mnist.py --clients 1000 \
         --partition dirichlet --alpha 0.1 --sample-frac 0.1 --snr-db 10 --steps 50
 
+    # FedVQCS-style vector codebook at the same wire rate (DESIGN.md #Codebooks)
+    PYTHONPATH=src python examples/federated_mnist.py --codebook vq --Q 6 --vq-dim 2
+
 Uses real MNIST if $MNIST_DIR points at the IDX files, else the deterministic
 synthMNIST surrogate (see DESIGN.md #Offline-data note).
 """
@@ -30,6 +33,12 @@ def main():
     ap.add_argument("--Q", type=int, default=3)
     ap.add_argument("--s-ratio", type=float, default=0.1)
     ap.add_argument("--compare", action="store_true")
+    # -- quantizer codebook axis (DESIGN.md #Codebooks) --------------------
+    ap.add_argument("--codebook", default="lloyd_max",
+                    choices=["lloyd_max", "dithered_uniform", "vq"])
+    ap.add_argument("--vq-dim", type=int, default=2,
+                    help="vector-codebook dimension d (with --codebook vq); "
+                    "wire drops to Q/d bits per measurement")
     # -- cohort scenario axes (defaults reproduce the paper) ---------------
     ap.add_argument("--clients", type=int, default=30)
     ap.add_argument("--partition", default="paper",
@@ -47,9 +56,32 @@ def main():
     args = ap.parse_args()
 
     fed = FedQCSConfig(reduction_ratio=args.R, bits=args.Q, s_ratio=args.s_ratio,
-                       gamp_iters=25, gamp_variance_mode="scalar")
-    # the full baseline roster, incl. qcs-dither (all six documented methods)
-    methods = METHODS[::-1] if args.compare else [args.method]
+                       gamp_iters=25, gamp_variance_mode="scalar",
+                       codebook=args.codebook, vq_dim=args.vq_dim)
+    # (method, codebook) scenario grid: --compare runs the full baseline
+    # roster (all six documented methods) PLUS the FedQCS rows under each
+    # alternative codebook family -- EA/AE/dither/VQ under one harness.
+    if args.compare:
+        rows = [(m, "lloyd_max", args.Q) for m in METHODS[::-1]]
+        # dithered-uniform wire path at the same Q; vq at Q*vq_dim bits per
+        # code = the same Q bits per measurement (equal wire, FedVQCS gain).
+        rows += [("fedqcs-ae", "dithered_uniform", args.Q),
+                 ("fedqcs-ea", "dithered_uniform", args.Q)]
+        # Validate the vq rows UP FRONT (the paper blocking fixes N=1591, so
+        # M=1591//R): an incompatible (R, Q, d) must not burn the whole
+        # baseline sweep before dying on the last rows.
+        vq_bits = args.Q * args.vq_dim
+        m_paper = 1591 // args.R
+        if vq_bits > 8:
+            print(f"  (skipping vq rows: Q*d = {vq_bits} bits/code > 8)")
+        elif m_paper % args.vq_dim:
+            print(f"  (skipping vq rows: vq_dim={args.vq_dim} does not divide "
+                  f"M={m_paper})")
+        else:
+            rows += [("fedqcs-ae", "vq", vq_bits),
+                     ("fedqcs-ea", "vq", vq_bits)]
+    else:
+        rows = [(args.method, args.codebook, args.Q)]
     cohort_kw = dict(
         k_devices=args.clients,
         partition=args.partition,
@@ -61,21 +93,26 @@ def main():
         snr_db=args.snr_db if args.snr_db is not None else 20.0,
         chunk=args.chunk,
     )
-    print(f"(R,Q)=({args.R},{args.Q}) -> {args.Q/args.R:.2f} bits/entry; "
+    print(f"(R,Q)=({args.R},{args.Q}) -> {fed.bits_per_entry:.2f} bits/entry "
+          f"[{args.codebook}]; "
           f"K={args.clients} {args.partition} devices; {args.steps} rounds; "
           f"channel={cohort_kw['channel']}")
-    print(f"{'method':12s} {'bits/entry':>10s} {'final acc':>9s} {'mean NMSE':>9s} {'wall':>6s}")
-    for m in methods:
+    print(f"{'method':24s} {'bits/entry':>10s} {'final acc':>9s} {'mean NMSE':>9s} {'wall':>6s}")
+    import dataclasses as _dc
+
+    for m, cbk, q in rows:
         kw = dict(cohort_kw)
         if m != "fedqcs-ae" and kw["channel"] != "ideal":
             # code-domain methods need the exact codes at the PS: only the
             # Bussgang-linearized AE path absorbs uplink noise (DESIGN.md)
             print(f"  ({m}: noisy uplink unsupported -> ideal channel)")
             kw["channel"] = "ideal"
-        r = run_federated(m, steps=args.steps, fed_cfg=fed,
+        row_fed = _dc.replace(fed, codebook=cbk, bits=q, vq_dim=args.vq_dim)
+        r = run_federated(m, steps=args.steps, fed_cfg=row_fed,
                           eval_every=max(args.steps // 10, 1), **kw)
         nm = sum(r.nmses) / len(r.nmses) if r.nmses else float("nan")
-        print(f"{m:12s} {r.bits_per_entry:10.2f} {r.accs[-1]:9.3f} {nm:9.3f} {r.wall_s:5.0f}s")
+        label = m if cbk == "lloyd_max" else f"{m}+{cbk}"
+        print(f"{label:24s} {r.bits_per_entry:10.2f} {r.accs[-1]:9.3f} {nm:9.3f} {r.wall_s:5.0f}s")
         print(f"  acc trace: {[round(a, 3) for a in r.accs]}")
 
 

@@ -1,10 +1,12 @@
 """FedQCS core: the paper's contribution as composable JAX modules.
 
-Submodules: quantizer (Lloyd-Max + Bussgang constants), sparsify (block top-S
-+ error feedback), sensing (shared Gaussian projections), gamp (EM-GAMP /
-Q-EM-GAMP), bussgang (Prop. 1 aggregation), compression (BQCS codec over
-pytrees), reconstruction (EA / AE strategies), baselines (SignSGD,
-QCS-Dither, QCS-QIHT), api (one-call interface).
+Submodules: quantizer (Lloyd-Max design), codebook (pluggable quantizer
+families: lloyd_max / dithered_uniform / vq + registry), sparsify (block
+top-S + error feedback), sensing (shared Gaussian projections), gamp
+(EM-GAMP / Q-EM-GAMP), bussgang (Prop. 1 aggregation), compression (BQCS
+codec over pytrees), reconstruction (EA / AE strategies), recon_engine
+(chunked/sharded PS decode), baselines (SignSGD, QCS-Dither, QCS-QIHT),
+api (one-call interface).
 """
 
 from repro.core.api import (  # noqa: F401

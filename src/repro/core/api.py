@@ -24,7 +24,6 @@ from repro.core.compression import (
     CompressedGradient,
     FedQCSConfig,
     blocks_to_tree,
-    unpack_codes,
 )
 from repro.core.reconstruction import (
     aggregate_and_estimate,
@@ -93,8 +92,9 @@ def reconstruct(
         blocks = estimate_and_aggregate_packed(codec, words, alphas, rhos)
     elif mode == "ae":
         # PS boundary: AE's Bussgang combine still consumes indices; unpack
-        # here, once.
-        codes = jnp.stack([unpack_codes(p.codes, p.bits, p.m) for p in payloads])
+        # here, once (codec.unpack knows the codebook's index width and
+        # code-lane count, which differ from (Q, M) for vq).
+        codes = jnp.stack([codec.unpack(p.codes) for p in payloads])
         blocks = aggregate_and_estimate(codec, codes, alphas, rhos, groups=groups)
     else:
         raise ValueError(f"unknown mode {mode!r} (want 'ea' or 'ae')")

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sparsify
-from repro.core.quantizer import LloydMaxQuantizer, decode, quantize
+from repro.core.codebook import as_codebook
 
 __all__ = [
     "signsgd_compress",
@@ -129,26 +129,28 @@ class DitherCodec:
 
 
 def qiht_reconstruct(
-    codes: jnp.ndarray,  # (nb, M) uint8 Lloyd-Max codes
+    codes: jnp.ndarray,  # (nb, n_codes) codebook indices
     alpha: jnp.ndarray,  # (nb,)
     a: jnp.ndarray,  # (M, N)
-    quantizer: LloydMaxQuantizer,
+    quantizer,  # Codebook of any family (or legacy LloydMaxQuantizer)
     s: int,
     iters: int = 50,
     step: float = 1.0,
 ) -> jnp.ndarray:
     """QIHT: g <- H_S(g + mu A^T (q_dq - Q(alpha A g)) / alpha), then rescale
     the result so ||g_hat|| matches the norm implied by alpha (as the paper's
-    QCS-QIHT baseline does)."""
-    nb, m = codes.shape
-    n = a.shape[1]
-    q_dq = decode(codes, quantizer)  # (nb, M)
+    QCS-QIHT baseline does).  Generic over the codebook: the iteration only
+    needs decode and quantize-requantize, both part of the Codebook surface."""
+    cb = as_codebook(quantizer)
+    nb = codes.shape[0]
+    m, n = a.shape
+    q_dq = cb.decode(codes, m)  # (nb, M)
     alive = alpha > 0
     safe_alpha = jnp.where(alive, alpha, 1.0)[:, None]
 
     def body(_, g):
         xa = safe_alpha * (g @ a.T)
-        resid = q_dq - quantize(xa, quantizer)
+        resid = q_dq - cb.quantize(xa)
         g = g + step * (resid @ a) / safe_alpha
         g, _ = sparsify.block_sparsify(g, s)
         return g

@@ -1,6 +1,7 @@
 """Bussgang linearization and aggregate-and-estimate combining (Sec. IV-B).
 
-Proposition 1: for the N(0,1)-optimal Lloyd-Max quantizer and x ~ N(0, I),
+Proposition 1: for a codebook designed for the standard normal (MMSE
+condition) and x ~ N(0, I),
 
     Q(x) = gamma_Q * x + d,   E[d] = 0,  cov(d) = (psi_Q - gamma_Q^2) I,
     d uncorrelated with x.
@@ -14,6 +15,13 @@ is a *linear* AWGN observation of the aggregated gradient with
 
     nu = (psi_Q - gamma_Q^2)/gamma_Q^2 * sum_k (rho_k/alpha_k)^2  (eq. 24).
 
+Everything here is generic over the codebook family (core/codebook.py): the
+paper proves Prop. 1 for Lloyd-Max, but the derivation only needs the
+codebook's (gamma, psi) moments, which every family computes at design time
+-- for the d-dim vq codebook the per-entry moments follow from the isotropy
+of N(0, I_d) (gamma = E[<Q(x), x>]/d).  This generic linearization is also
+what the EA decoder falls back to for codebooks without scalar cells.
+
 The linearity is what makes the cross-pod collective a plain sum: on hardware,
 `q_tilde` is produced by a `psum` over the pod axis of locally-scaled
 dequantized codes (see runtime/collectives.py).
@@ -23,7 +31,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.quantizer import LloydMaxQuantizer, decode
+from repro.core.codebook import as_codebook
 
 __all__ = [
     "bussgang_weight",
@@ -34,25 +42,27 @@ __all__ = [
 ]
 
 
-def bussgang_weight(rho: jnp.ndarray, alpha: jnp.ndarray, quantizer: LloydMaxQuantizer):
+def bussgang_weight(rho: jnp.ndarray, alpha: jnp.ndarray, quantizer):
     """Per-(worker, block) combining weight rho_k / (gamma_Q alpha_{k,b}).
 
+    ``quantizer``: any Codebook (or legacy LloydMaxQuantizer).
     alpha == 0 (empty block) contributes weight 0.
     """
     safe = jnp.where(alpha > 0, alpha, 1.0)
-    w = rho / (quantizer.gamma * safe)
+    w = rho / (as_codebook(quantizer).gamma * safe)
     return jnp.where(alpha > 0, w, 0.0)
 
 
 def aggregate_codes(
-    codes: jnp.ndarray,  # (K, nb, M) uint8 codes from K workers
+    codes: jnp.ndarray,  # (K, nb, n_codes) uint8 codes from K workers
     alphas: jnp.ndarray,  # (K, nb)
     rhos: jnp.ndarray,  # (K,)
-    quantizer: LloydMaxQuantizer,
+    quantizer,  # Codebook or legacy LloydMaxQuantizer
 ) -> jnp.ndarray:
     """q_tilde (nb, M): the Bussgang-weighted aggregate of eq. 23."""
-    deq = decode(codes, quantizer)  # (K, nb, M)
-    w = bussgang_weight(rhos[:, None], alphas, quantizer)  # (K, nb)
+    cb = as_codebook(quantizer)
+    deq = cb.decode(codes)  # (K, nb, M)
+    w = bussgang_weight(rhos[:, None], alphas, cb)  # (K, nb)
     return jnp.sum(w[..., None] * deq, axis=0)
 
 
@@ -60,31 +70,30 @@ def aggregate_packed(
     words: jnp.ndarray,  # (K, nb, W) uint32 packed wire words from K workers
     alphas: jnp.ndarray,  # (K, nb)
     rhos: jnp.ndarray,  # (K,)
-    quantizer: LloydMaxQuantizer,
-    bits: int,
+    quantizer,  # Codebook or legacy LloydMaxQuantizer
     m: int,
 ) -> jnp.ndarray:
-    """q_tilde (nb, M) straight from the packed wire payload: the level
-    lookup indexes the shift/masked lane groups directly
-    (compression.decode_packed), so the (K, nb, M) uint8 code view never
-    materializes at the PS boundary.  Numerically identical to
-    ``aggregate_codes(unpack_codes(words), ...)``."""
-    from repro.core.compression import decode_packed  # deferred: layering
-
-    deq = decode_packed(words, bits, m, quantizer.jnp_levels())  # (K, nb, M)
-    w = bussgang_weight(rhos[:, None], alphas, quantizer)  # (K, nb)
+    """q_tilde (nb, M) straight from the packed wire payload: the scalar
+    families index reconstruction levels through the shift/masked lane
+    groups (compression.decode_packed) so the (K, nb, M) uint8 code view
+    never materializes at the PS boundary; vq unpacks indices and reads
+    centroids.  The index width is the codebook's own ``bits``.
+    Numerically identical to ``aggregate_codes(unpack_codes(words), ...)``."""
+    cb = as_codebook(quantizer)
+    deq = cb.decode_packed(words, m)  # (K, nb, M)
+    w = bussgang_weight(rhos[:, None], alphas, cb)  # (K, nb)
     return jnp.sum(w[..., None] * deq, axis=0)
 
 
 def effective_noise_var(
     alphas: jnp.ndarray,  # (K, nb)
     rhos: jnp.ndarray,  # (K,)
-    quantizer: LloydMaxQuantizer,
+    quantizer,  # Codebook or legacy LloydMaxQuantizer
 ) -> jnp.ndarray:
     """nu_{g,b} (nb,): AWGN variance of the effective distortion (eq. 24)."""
     safe = jnp.where(alphas > 0, alphas, 1.0)
     terms = jnp.where(alphas > 0, (rhos[:, None] / safe) ** 2, 0.0)
-    return quantizer.kappa * jnp.sum(terms, axis=0)
+    return as_codebook(quantizer).kappa * jnp.sum(terms, axis=0)
 
 
 def signal_energy(alphas: jnp.ndarray, rhos: jnp.ndarray, m: int, n: int) -> jnp.ndarray:

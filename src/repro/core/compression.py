@@ -6,13 +6,16 @@ Pipeline per step, per worker/pod:
       + residual (error feedback, eq. 8)
       -> block top-S sparsify (residual out, eq. 7)
       -> project with shared A, scale alpha = sqrt(M)/||.||  (eq. 9)
-      -> Lloyd-Max Q-bit encode  (eq. 10)
+      -> codebook encode (eq. 10; Lloyd-Max / dithered-uniform / vq, see
+         core/codebook.py -- the config's ``codebook`` axis)
       -> bit-pack codes into uint32 words (the wire payload)
 
 Wire cost per step per worker: nblocks * (W*32 bits + 32 bits for alpha),
-  W = ceil(M / (32//Q)) packed words -- ~= Q/R bits per gradient entry
-  (Sec. III-B), exactly M*Q bits whenever Q divides 32
-  (CompressedGradient.wire_bits derives this from the actual word count).
+  W = ceil(n_codes / (32//Q)) packed words over n_codes = M / codebook.dim
+  index lanes of width Q = ceil(log2 levels) -- ~= Q/(dim*R) bits per
+  gradient entry (Sec. III-B), exactly M*Q bits for the scalar families
+  whenever Q divides 32 (CompressedGradient.wire_bits derives this from the
+  actual word count).
 
 The codec is stateless except for the error-feedback residual, which the
 caller owns (it lives in the TrainState so it is checkpointed).
@@ -21,6 +24,7 @@ caller owns (it lives in the TrainState so it is checkpointed).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Tuple
 
 import jax
@@ -28,7 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sensing, sparsify
-from repro.core.quantizer import LloydMaxQuantizer, design_lloyd_max, encode, decode
+from repro.core.codebook import Codebook, index_bits, make_codebook
 
 __all__ = [
     "FedQCSConfig",
@@ -49,7 +53,14 @@ class FedQCSConfig:
 
     block_size: int = 1024  # N
     reduction_ratio: int = 4  # R = N / M
-    bits: int = 2  # Q
+    bits: int = 2  # Q: index bits per code (scalar: per measurement)
+    # Quantizer codebook family (core/codebook.py): "lloyd_max" (the paper's
+    # Sec. III-A scalar quantizer), "dithered_uniform" (shared-seed dither),
+    # or "vq" (FedVQCS-style vq_dim-dimensional vector codebook, one Q-bit
+    # code per vq_dim measurements -> Q/vq_dim bits per measurement).
+    codebook: str = "lloyd_max"
+    vq_dim: int = 2  # d (vq only); must divide M
+    vq_levels: int = 0  # vq codebook size L; 0 = 2**bits
     s_ratio: float = 0.1  # S = floor(s_ratio * N) kept per block
     gamp_iters: int = 25
     gamp_components: int = 3  # L
@@ -84,7 +95,11 @@ class FedQCSConfig:
 
     @property
     def bits_per_entry(self) -> float:
-        """Q/R: wire bits per gradient entry (excl. the negligible alphas)."""
+        """Wire index bits per gradient entry (excl. the negligible alphas):
+        Q/R for the scalar families, ceil(log2 L)/(d*R) for vq."""
+        if self.codebook == "vq":
+            width = index_bits(self.vq_levels or (1 << self.bits))
+            return width / (self.vq_dim * self.reduction_ratio)
         return self.bits / self.reduction_ratio
 
 
@@ -92,16 +107,18 @@ class FedQCSConfig:
 class CompressedGradient:
     """The wire payload of one worker for one step.
 
-    ``codes`` is *packed*: uint32 words holding Q-bit Lloyd-Max indices in
+    ``codes`` is *packed*: uint32 words holding Q-bit codebook indices in
     the canonical lane-group layout (see :func:`pack_codes`), not the uint8
-    index view -- what crosses the wire is what this object carries.
+    index view -- what crosses the wire is what this object carries.  The
+    words cover ``n_codes = M / codebook.dim`` index lanes of width
+    ``bits = ceil(log2 levels)`` each (scalar families: n_codes == M).
     """
 
-    codes: jnp.ndarray  # (nblocks, W) uint32 packed words, W = packed_width(M, Q)
+    codes: jnp.ndarray  # (nblocks, W) uint32 words, W = packed_width(n_codes, Q)
     alpha: jnp.ndarray  # (nblocks,) f32 scales
     nbar: int  # original flat length (for unpadding)
-    m: int  # measurements per block (for unpacking)
-    bits: int  # Q
+    m: int  # measurements per block
+    bits: int  # Q: index width on the wire
 
     def wire_bits(self) -> int:
         """Actual bits on the wire, derived from the true packed word count:
@@ -172,7 +189,10 @@ def blocks_to_tree(blocks: jnp.ndarray, spec: Any, nbar: int) -> Any:
 
 
 def packed_width(m: int, bits: int) -> int:
-    """uint32 words per block row on the wire: W = ceil(M / (32 // Q))."""
+    """uint32 words per block row on the wire: W = ceil(lanes / (32 // Q)).
+    ``m`` counts *code lanes* -- measurements for the scalar families,
+    M / d vector-codebook indices for vq -- and ``bits`` is the per-code
+    index width ceil(log2 levels)."""
     return -(-m // (32 // bits))
 
 
@@ -235,23 +255,61 @@ def decode_packed(
 # ---------------------------------------------------------------------------
 
 
+_KERNEL_BYPASS_WARNED = False
+
+
+def _warn_kernel_bypass_once(cfg: FedQCSConfig) -> None:
+    """use_kernels=True with gamp_variance_mode='exact' (the default) keeps
+    the GAMP solves on the XLA path -- the fused kernels implement
+    scalar-variance GAMP only -- which used to happen silently.  Name the
+    conflict once per process; the encode kernels are unaffected."""
+    global _KERNEL_BYPASS_WARNED
+    if _KERNEL_BYPASS_WARNED:
+        return
+    if cfg.use_kernels and cfg.gamp_variance_mode == "exact":
+        _KERNEL_BYPASS_WARNED = True
+        warnings.warn(
+            "FedQCSConfig(use_kernels=True, gamp_variance_mode='exact'): the "
+            "fused GAMP kernels implement scalar-variance GAMP, so every GAMP "
+            "reconstruction will keep the pure-XLA path despite "
+            "use_kernels=True (the fused encoder still runs).  Set "
+            "gamp_variance_mode='scalar' to route reconstruction through the "
+            "kernels (see DESIGN.md #Kernels).",
+            UserWarning,
+            stacklevel=3,
+        )
+
+
 class BQCSCodec:
     """Stateless BQCS encoder/decoder bound to a FedQCSConfig.
 
-    The sensing matrix and quantizer are derived deterministically from the
-    config, so constructing the same codec on every pod yields the same
-    protocol -- no matrix ever crosses the wire.
+    The sensing matrix and quantizer codebook are derived deterministically
+    from the config, so constructing the same codec on every pod yields the
+    same protocol -- no matrix or table ever crosses the wire.
     """
 
     def __init__(self, cfg: FedQCSConfig):
         self.cfg = cfg
-        self.quantizer: LloydMaxQuantizer = design_lloyd_max(cfg.bits)
+        _warn_kernel_bypass_once(cfg)
+        self.codebook: Codebook = make_codebook(cfg)
         key = jax.random.PRNGKey(cfg.seed)
         self._a = sensing.sensing_matrix(key, cfg.m, cfg.block_size)
 
     @property
     def a(self) -> jnp.ndarray:
         return self._a
+
+    @property
+    def quantizer(self) -> Codebook:
+        """Back-compat alias: the codebook duck-types the old
+        LloydMaxQuantizer surface (bits/gamma/psi/kappa/jnp_levels/
+        jnp_thresholds for scalar families)."""
+        return self.codebook
+
+    @property
+    def n_codes(self) -> int:
+        """Index lanes per block on the wire: M / codebook.dim."""
+        return self.codebook.n_codes(self.cfg.m)
 
     # -- encode ------------------------------------------------------------
     def compress_blocks_packed(self, blocks: jnp.ndarray, residual: jnp.ndarray):
@@ -268,10 +326,10 @@ class BQCSCodec:
             from repro.kernels import ops as kops
 
             return kops.bqcs_encode_fused(
-                blocks, residual, self._a, self.quantizer, cfg.s
+                blocks, residual, self._a, self.codebook, cfg.s
             )
         codes, alpha, new_residual = self._compress_blocks_xla(blocks, residual)
-        return pack_codes(codes, cfg.bits), alpha, new_residual
+        return pack_codes(codes, self.codebook.bits), alpha, new_residual
 
     def compress_blocks(self, blocks: jnp.ndarray, residual: jnp.ndarray):
         """(blocks + residual) -> (codes, alpha, new_residual).  Eqs. 7-10.
@@ -283,7 +341,7 @@ class BQCSCodec:
         cfg = self.cfg
         if cfg.use_kernels:
             words, alpha, new_residual = self.compress_blocks_packed(blocks, residual)
-            return unpack_codes(words, cfg.bits, cfg.m), alpha, new_residual
+            return self.unpack(words), alpha, new_residual
         return self._compress_blocks_xla(blocks, residual)
 
     def _compress_blocks_xla(self, blocks: jnp.ndarray, residual: jnp.ndarray):
@@ -294,12 +352,12 @@ class BQCSCodec:
         else:
             sparse, new_residual = sparsify.block_sparsify(carry, cfg.s)
         x, alpha = sensing.project_blocks(sparse, self._a.T)
-        return encode(x, self.quantizer), alpha, new_residual
+        return self.codebook.encode(x), alpha, new_residual
 
     def compress_tree(self, grads: Any, residual_blocks: jnp.ndarray):
         blocks, spec, nbar = flatten_to_blocks(grads, self.cfg.block_size)
         words, alpha, new_res = self.compress_blocks_packed(blocks, residual_blocks)
-        payload = CompressedGradient(words, alpha, nbar, self.cfg.m, self.cfg.bits)
+        payload = CompressedGradient(words, alpha, nbar, self.cfg.m, self.codebook.bits)
         return payload, spec, new_res
 
     def zero_residual(self, grads_like: Any) -> jnp.ndarray:
@@ -308,18 +366,18 @@ class BQCSCodec:
 
     # -- wire --------------------------------------------------------------
     def pack(self, codes: jnp.ndarray) -> jnp.ndarray:
-        return pack_codes(codes, self.cfg.bits)
+        return pack_codes(codes, self.codebook.bits)
 
     def unpack(self, words: jnp.ndarray) -> jnp.ndarray:
-        return unpack_codes(words, self.cfg.bits, self.cfg.m)
+        """(..., W) words -> (..., n_codes) index view (n_codes = M / dim)."""
+        return unpack_codes(words, self.codebook.bits, self.n_codes)
 
     # -- decode helpers ------------------------------------------------------
     def dequantize(self, codes: jnp.ndarray) -> jnp.ndarray:
-        return decode(codes, self.quantizer)
+        return self.codebook.decode(codes, self.cfg.m)
 
     def dequantize_packed(self, words: jnp.ndarray) -> jnp.ndarray:
-        """Reconstruction levels straight from packed wire words (..., W) --
-        the index view never materializes (see :func:`decode_packed`)."""
-        return decode_packed(
-            words, self.cfg.bits, self.cfg.m, self.quantizer.jnp_levels()
-        )
+        """Reconstruction values straight from packed wire words (..., W) --
+        the index view never materializes on the scalar families (see
+        :func:`decode_packed`); vq unpacks indices then reads centroids."""
+        return self.codebook.decode_packed(words, self.cfg.m)

@@ -3,8 +3,12 @@
 This is the PS-side reconstruction engine.  Two output channels:
 
   * quantized (Q-EM-GAMP, estimate-and-aggregate): the observation is the code
-    index; the channel posterior is a truncated-Gaussian moment match between
-    the Lloyd-Max decision thresholds (eqs. 12-16).
+    index; for scalar codebooks (Lloyd-Max, dithered-uniform) the channel
+    posterior is a truncated-Gaussian moment match between the codebook's
+    decision thresholds (eqs. 12-16), with any shared-seed dither applied as
+    a per-lane shift of the cell edges; for vector codebooks (vq) no scalar
+    cell exists and the solve falls back to the Bussgang-linearized AWGN
+    channel built from the codebook's (gamma, psi) -- eqs. 23-24 with K=1.
   * awgn (EM-GAMP, aggregate-and-estimate): the observation is the Bussgang
     linearized aggregate q_tilde = A g + d, d ~ N(0, nu I) (eqs. 23-24);
     channel posterior is the Gaussian product rule.
@@ -34,7 +38,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantizer import LloydMaxQuantizer
+from repro.core.codebook import as_codebook
 
 __all__ = [
     "GampConfig",
@@ -189,9 +193,14 @@ def _npdf(x):
     return jnp.exp(-0.5 * jnp.square(x)) / jnp.sqrt(2.0 * jnp.pi).astype(x.dtype)
 
 
-def _quantized_channel(phat, nu_p, codes, lo_tau, hi_tau):
+def _quantized_channel(phat, nu_p, codes, lo_tau, hi_tau, shift=None):
     """Truncated-Gaussian posterior of x ~ N(phat, nu_p) given
-    x in (lo_tau[code], hi_tau[code]]  (eqs. 12-16).
+    x in (lo_tau[code] - shift, hi_tau[code] - shift]  (eqs. 12-16).
+
+    ``shift`` is the codebook's per-lane subtractive dither (or None): the
+    encoder observed ``x + u`` in the bin, so x itself lies in the bin
+    translated by -u -- the exact channel applies to the dithered-uniform
+    family with nothing but this edge translation.
 
     Numerically hardened: when the prior N(phat, nu_p) puts ~zero mass in the
     observed bin (|standardized boundary| large), the exact ratio formulas
@@ -204,6 +213,9 @@ def _quantized_channel(phat, nu_p, codes, lo_tau, hi_tau):
     nu_p = jnp.maximum(nu_p, _EPS)
     lo = lo_tau[codes.astype(jnp.int32)]
     hi = hi_tau[codes.astype(jnp.int32)]
+    if shift is not None:
+        lo = lo - shift
+        hi = hi - shift
     return trunc_channel_moments(phat, nu_p, lo, hi)
 
 
@@ -264,8 +276,9 @@ def _awgn_channel(phat, nu_p, y, nu_d):
 
 
 def tau_tables(taus: jnp.ndarray):
-    """Interior Lloyd-Max thresholds (2^Q - 1,) -> (lo_tau, hi_tau) bin-edge
-    tables (2^Q,) with +-4*_TRUNC_CLIP sentinels standing in for +-inf."""
+    """Interior scalar-codebook thresholds (L - 1,) -> (lo_tau, hi_tau)
+    bin-edge tables (L,) with +-4*_TRUNC_CLIP sentinels standing in for
+    +-inf (Lloyd-Max and dithered-uniform alike)."""
     big = jnp.asarray([4.0 * _TRUNC_CLIP], jnp.float32)
     taus = jnp.asarray(taus, jnp.float32)
     return jnp.concatenate([-big, taus]), jnp.concatenate([taus, big])
@@ -404,13 +417,25 @@ def _kernel_dispatch_ok(cfg: GampConfig) -> bool:
 def _qem_gamp_xla(codes, alpha, a, quantizer, cfg):
     """Pure-XLA Q-EM-GAMP solve; returns (guarded ghat, per-block converged
     flags) -- the flags feed the two-phase refinement sweep
-    (core/recon_engine.py)."""
+    (core/recon_engine.py).
+
+    Codebook dispatch: scalar families run the exact truncated-posterior
+    channel on the codebook's cell edges (dither = per-lane edge shift); a
+    vector codebook has no scalar cells, so the observation is Bussgang-
+    linearized into an AWGN channel (eqs. 23-24 with K=1) and the same GAMP
+    loop runs on it."""
+    cb = as_codebook(quantizer)
+    if cb.dim > 1:
+        return _vq_ea_xla(codes, alpha, a, cb, cfg)
     nb, m = codes.shape
     n = a.shape[1]
-    lo_tau, hi_tau = tau_tables(quantizer.jnp_thresholds())
+    lo_tau, hi_tau = tau_tables(cb.jnp_thresholds())
     alive = alpha > 0
     init_var = block_prior_energy(alpha, m, n)
-    out = partial(_quantized_channel, codes=codes, lo_tau=lo_tau, hi_tau=hi_tau)
+    out = partial(
+        _quantized_channel, codes=codes, lo_tau=lo_tau, hi_tau=hi_tau,
+        shift=cb.jnp_dither(),
+    )
     ghat, _, _, converged = _gamp_run(
         lambda p, v: out(p, v), a, alpha, init_var, cfg, nb, n, m
     )
@@ -420,11 +445,67 @@ def _qem_gamp_xla(codes, alpha, a, quantizer, cfg):
     return norm_guard(ghat, true_norm), converged | ~alive
 
 
+def _vq_ea_xla(codes, alpha, a, cb, cfg: GampConfig):
+    """Per-worker EA solve for a vector codebook: Bussgang-linearize the
+    dequantized observation, Q(alpha A g) = gamma alpha A g + d with
+    cov(d) = (psi - gamma^2) I, normalize by gamma*alpha, and run the AWGN
+    channel -- structurally eq. 23-24 with a single worker.  Returns
+    (guarded ghat, converged flags), matching _qem_gamp_xla."""
+    m = a.shape[0]
+    n = a.shape[1]
+    nb = codes.shape[0]
+    alive = alpha > 0
+    safe = jnp.where(alive, alpha, 1.0)
+    deq = cb.decode(codes, m)  # (nb, M)
+    y = jnp.where(alive[:, None], deq / (cb.gamma * safe[:, None]), 0.0)
+    nu = jnp.where(alive, cb.kappa / jnp.square(safe), 1.0)[:, None]
+    init_var = block_prior_energy(alpha, m, n)
+    out = lambda p, v: _awgn_channel(p, v, y, nu)
+    # alpha is absorbed into y, so the GAMP scaling is 1 for live rows; the
+    # 0/1 mask keeps dead rows frozen from iteration 0 exactly as before.
+    ghat, _, _, converged = _gamp_run(
+        out, a, alive.astype(jnp.float32), init_var, cfg, nb, n, m
+    )
+    true_norm = jnp.where(alive, jnp.sqrt(jnp.float32(m)) / safe, 0.0)
+    return norm_guard(ghat, true_norm), converged | ~alive
+
+
+def _ea_kernel_ok(cb, cfg: GampConfig) -> bool:
+    """The fused qgamp_step kernel consumes scalar cell-edge tables with no
+    per-lane shift, so it serves exactly the undithered scalar codebooks
+    (Lloyd-Max today); dithered cells and vector codebooks keep their XLA /
+    AE-kernel routes."""
+    return _kernel_dispatch_ok(cfg) and cb.dim == 1 and cb.dither is None
+
+
+def _vq_ea_kernel(codes, alpha, a, cb, cfg: GampConfig):
+    """Kernel route for the vq EA fallback: the Bussgang-linearized channel
+    is exactly the AE kernel's AWGN channel, so the solve scans the fused
+    gamp_step kernel (ops.gamp_ae_run) on the normalized observation."""
+    from repro.kernels import ops as kops  # deferred: kernels are optional
+
+    m = a.shape[0]
+    alive = alpha > 0
+    safe = jnp.where(alive, alpha, 1.0)
+    deq = cb.decode(codes, m)
+    y = jnp.where(alive[:, None], deq / (cb.gamma * safe[:, None]), 0.0)
+    nu = jnp.where(alive, cb.kappa / jnp.square(safe), 1.0)
+    init_var = block_prior_energy(alpha, m, a.shape[1])
+    ghat = kops.gamp_ae_run(
+        y, nu, a, init_var,
+        n_components=cfg.n_components, iters=cfg.iters, em=cfg.em,
+        lam0=cfg.lam0_init,
+    )
+    # gamp_ae_run's norm guard uses sqrt(init_var * N) == sqrt(M)/alpha, the
+    # true transmitted norm; dead rows still need the explicit zero.
+    return jnp.where(alive[:, None], ghat, 0.0)
+
+
 def qem_gamp(
-    codes: jnp.ndarray,  # (nb, M) uint8 Lloyd-Max code indices
+    codes: jnp.ndarray,  # (nb, n_codes) code indices
     alpha: jnp.ndarray,  # (nb,) transmitted scale factors
     a: jnp.ndarray,  # (M, N) sensing matrix
-    quantizer: LloydMaxQuantizer,
+    quantizer,  # Codebook (or legacy LloydMaxQuantizer)
     cfg: GampConfig,
     use_pallas: bool = False,
 ) -> jnp.ndarray:
@@ -432,27 +513,32 @@ def qem_gamp(
 
     Returns (nb, N) reconstructed blocks (pre-concatenation).
 
-    ``use_pallas`` routes the solve through the fused TPU kernel
-    (kernels/qgamp_step.py via ops.qgamp_ea_run).  The kernel implements
-    scalar-variance GAMP (the large-system simplification the production
-    configs run, EXPERIMENTS.md #Perf) at a fixed trip count with no
-    early-freeze (static work for the scheduler, DESIGN.md), so the dispatch
-    only takes effect when ``cfg.variance_mode == 'scalar'`` and
+    ``use_pallas`` routes the solve through the fused TPU kernels: the
+    quantized-channel kernel (ops.qgamp_ea_run) for undithered scalar
+    codebooks, the AWGN kernel (ops.gamp_ae_run) for the vq fallback; the
+    dithered family keeps the XLA path (its cell edges shift per lane).  The
+    kernels implement scalar-variance GAMP (the large-system simplification
+    the production configs run, EXPERIMENTS.md #Perf) at a fixed trip count
+    with no early-freeze (static work for the scheduler, DESIGN.md), so the
+    dispatch only takes effect when ``cfg.variance_mode == 'scalar'`` and
     ``cfg.damping == 1.0`` (undamped, no early-stop) -- other configs keep
     the XLA path rather than silently switching reconstruction algorithms.
     ``tol`` is the one accepted deviation: the kernel's fixed trip count vs
     the XLA path's early-freeze differ by well under the 1e-4 NMSE contract
     (pinned by tests/test_kernels.py at the default tol).
     """
-    if use_pallas and _kernel_dispatch_ok(cfg):
+    cb = as_codebook(quantizer)
+    if use_pallas and _kernel_dispatch_ok(cfg) and cb.dim > 1:
+        return _vq_ea_kernel(codes, alpha, a, cb, cfg)
+    if use_pallas and _ea_kernel_ok(cb, cfg):
         from repro.kernels import ops as kops  # deferred: kernels are optional
 
         return kops.qgamp_ea_run(
-            codes, alpha, a, quantizer.jnp_thresholds(),
+            codes, alpha, a, cb.jnp_thresholds(),
             n_components=cfg.n_components, iters=cfg.iters, em=cfg.em,
             lam0=cfg.lam0_init,
         )
-    ghat, _ = _qem_gamp_xla(codes, alpha, a, quantizer, cfg)
+    ghat, _ = _qem_gamp_xla(codes, alpha, a, cb, cfg)
     return ghat
 
 
@@ -460,34 +546,37 @@ def qem_gamp_packed(
     words: jnp.ndarray,  # (nb, W) uint32 packed wire words (pack_codes layout)
     alpha: jnp.ndarray,  # (nb,) transmitted scale factors
     a: jnp.ndarray,  # (M, N) sensing matrix
-    quantizer: LloydMaxQuantizer,
+    quantizer,  # Codebook (or legacy LloydMaxQuantizer)
     cfg: GampConfig,
-    m: int,  # true measurement count M (words carry W*(32//Q) >= M lanes)
+    m: int,  # true measurement count M (words carry >= M/dim index lanes)
     use_pallas: bool = False,
 ) -> jnp.ndarray:
     """Packed-domain Q-EM-GAMP: consumes the uint32 wire words directly.
 
-    On the kernel path the words stream into the fused qgamp_step kernel,
-    which unpacks per lane group in VMEM -- the (nb, M) uint8 index tensor
-    never exists in HBM.  The XLA path unpacks just-in-time at the solve
-    (so under the chunked decode of core/recon_engine.py at most one chunk's
-    index view is live at a time).  Bit-identical to
-    ``qem_gamp(unpack_codes(words, Q, M), ...)`` in both modes.
+    On the (undithered scalar) kernel path the words stream into the fused
+    qgamp_step kernel, which unpacks per lane group in VMEM -- the (nb, M)
+    uint8 index tensor never exists in HBM.  The XLA path (and the other
+    codebook families) unpack just-in-time at the solve (so under the
+    chunked decode of core/recon_engine.py at most one chunk's index view is
+    live at a time).  Bit-identical to
+    ``qem_gamp(unpack_codes(words, Q, n_codes), ...)`` in every mode.
     """
-    if use_pallas and _kernel_dispatch_ok(cfg):
+    cb = as_codebook(quantizer)
+    if use_pallas and _ea_kernel_ok(cb, cfg):
         from repro.kernels import ops as kops  # deferred: kernels are optional
 
         return kops.qgamp_ea_run_packed(
-            words, alpha, a, quantizer.jnp_thresholds(),
-            bits=quantizer.bits, m=m,
+            words, alpha, a, cb.jnp_thresholds(),
+            bits=cb.bits, m=m,
             n_components=cfg.n_components, iters=cfg.iters, em=cfg.em,
             lam0=cfg.lam0_init,
         )
     from repro.core.compression import unpack_codes  # deferred: layering
 
-    ghat, _ = _qem_gamp_xla(
-        unpack_codes(words, quantizer.bits, m), alpha, a, quantizer, cfg
-    )
+    codes = unpack_codes(words, cb.bits, cb.n_codes(m))
+    if use_pallas and _kernel_dispatch_ok(cfg) and cb.dim > 1:
+        return _vq_ea_kernel(codes, alpha, a, cb, cfg)
+    ghat, _ = _qem_gamp_xla(codes, alpha, a, cb, cfg)
     return ghat
 
 

@@ -31,6 +31,11 @@ __all__ = [
 
 _SQRT2 = math.sqrt(2.0)
 _INV_SQRT_2PI = 1.0 / math.sqrt(2.0 * math.pi)
+# Vectorized erf built ONCE at import: np.vectorize re-walks its dispatch
+# machinery on every construction, and _Phi sits inside the design_lloyd_max
+# fixed-point loop (hundreds of iterations per design; the VQ/dither designs
+# of core/codebook.py make config-time design hotter still).
+_ERF = np.vectorize(math.erf)
 
 
 def _phi(x: np.ndarray) -> np.ndarray:
@@ -40,7 +45,7 @@ def _phi(x: np.ndarray) -> np.ndarray:
 
 def _Phi(x: np.ndarray) -> np.ndarray:
     """Standard normal cdf (numpy, design-time only)."""
-    return 0.5 * (1.0 + np.vectorize(math.erf)(np.asarray(x, dtype=np.float64) / _SQRT2))
+    return 0.5 * (1.0 + _ERF(np.asarray(x, dtype=np.float64) / _SQRT2))
 
 
 @dataclasses.dataclass(frozen=True)

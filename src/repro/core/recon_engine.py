@@ -46,7 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compression import BQCSCodec, unpack_codes
+from repro.core.compression import BQCSCodec
 from repro.core.gamp import GampConfig, _qem_gamp_xla, qem_gamp, qem_gamp_packed
 
 __all__ = ["chunked_rows", "ea_solve_flat", "ea_decode", "ea_decode_two_phase"]
@@ -135,11 +135,11 @@ def ea_solve_flat(
     n = codec.cfg.block_size
     if packed:
         solve = lambda o, al: qem_gamp_packed(
-            o, al, codec.a, codec.quantizer, gamp, codec.cfg.m, use_pallas=use_pallas
+            o, al, codec.a, codec.codebook, gamp, codec.cfg.m, use_pallas=use_pallas
         )
     else:
         solve = lambda o, al: qem_gamp(
-            o, al, codec.a, codec.quantizer, gamp, use_pallas=use_pallas
+            o, al, codec.a, codec.codebook, gamp, use_pallas=use_pallas
         )
     return chunked_rows(solve, (obs, alpha), chunk, n, mesh=mesh, axis_name=axis_name)
 
@@ -217,10 +217,10 @@ def ea_decode_two_phase(
     # runs phase 1 (the kernel's fixed-trip scan has no freeze signal).
     p1 = dataclasses.replace(gamp, variance_mode="scalar")
     codes_of = (
-        (lambda o: unpack_codes(o, codec.cfg.bits, codec.cfg.m)) if packed else (lambda o: o)
+        (lambda o: codec.unpack(o)) if packed else (lambda o: o)
     )
     def solve_flags(o, al):
-        gh, fl = _qem_gamp_xla(codes_of(o), al, codec.a, codec.quantizer, p1)
+        gh, fl = _qem_gamp_xla(codes_of(o), al, codec.a, codec.codebook, p1)
         # converged flag rides as one extra output column through the scan
         return jnp.concatenate([gh, fl.astype(jnp.float32)[:, None]], axis=1)
 
@@ -242,7 +242,7 @@ def ea_decode_two_phase(
         )
         idx = jnp.asarray(survivors)
         refined, _ = jax.jit(
-            lambda o, al: _qem_gamp_xla(codes_of(o), al, codec.a, codec.quantizer, p2)
+            lambda o, al: _qem_gamp_xla(codes_of(o), al, codec.a, codec.codebook, p2)
         )(flat_obs[idx], flat_alpha[idx])
         ghat = ghat.at[idx].set(refined)
     stats = {

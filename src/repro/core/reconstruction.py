@@ -126,12 +126,15 @@ def aggregate_and_estimate(
     gamp = gamp or gamp_config_from(codec)
     if use_pallas is None:
         use_pallas = codec.cfg.use_kernels
-    k, nb, m = codes.shape
+    k, nb = codes.shape[:2]
+    # codes carry n_codes = M / dim lanes; the Bussgang/GAMP math runs in
+    # measurement space, so M comes from the config, not the payload shape.
+    m = codec.cfg.m
     n = codec.cfg.block_size
     if k % groups != 0:
         raise ValueError(f"K={k} not divisible by G={groups}")
     per = k // groups
-    q = codec.quantizer
+    q = codec.codebook
     out = jnp.zeros((nb, n), jnp.float32)
     ys, nus, energies = [], [], []
     for g in range(groups):

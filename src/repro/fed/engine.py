@@ -20,6 +20,13 @@ thousands-of-clients scale.  One round is two passes:
     ``em_gamp``'s ``noise_var`` next to the Bussgang quantization distortion
     (eq. 24 + channel term).
 
+The quantizer codebook is a scenario axis like the partition or channel:
+``FedQCSConfig.codebook`` ("lloyd_max" / "dithered_uniform" / "vq") selects
+the wire family for every fedqcs/qiht method, and the PS dispatch picks the
+matching channel automatically (exact truncated-posterior cells for scalar
+families, the Bussgang-linearized fallback for vq -- DESIGN.md #Codebooks);
+``examples/federated_mnist.py --compare`` sweeps EA/AE across the families.
+
 Participation contract (shared with ``runtime/collectives.py``): a cohort
 slot with ``rho_k = 0`` — scheduler dropout or channel outage — contributes
 exactly zero to the aggregate, and its error-feedback residual carries the
@@ -356,7 +363,7 @@ class CohortEngine:
             c, nb, m = codes.shape
             parts = baselines.qiht_reconstruct(
                 codes.reshape(c * nb, m), alphas.reshape(-1),
-                self.codec.a, self.codec.quantizer, self.fed_cfg.s,
+                self.codec.a, self.codec.codebook, self.fed_cfg.s,
             )
             ghat = jnp.einsum("k,kbn->bn", rhos_eff, parts.reshape(c, nb, -1))
         elif method == "fedqcs-ea":
@@ -367,7 +374,7 @@ class CohortEngine:
             )
         else:  # fedqcs-ae
             codes, alphas = payloads["codes"], payloads["alpha"]
-            q = self.codec.quantizer
+            q = self.codec.codebook
             nu_q = bussgang.effective_noise_var(alphas, rhos_eff, q)
             stats["nu_quant"] = jnp.mean(nu_q)
             if self.chan.kind == "ideal":

@@ -8,8 +8,23 @@ worker-side compressor *including the wire packing*:
     resid  = carry - sparse                    (new error-feedback state)
     alpha  = sqrt(M) / ||sparse||              (row reduction, eq. 9)
     y      = alpha * (sparse @ A^T)            (MXU GEMM)
-    code   = #{tau_j < y}                      (Lloyd-Max bucketize, eq. 10)
+    code   = codebook encode                   (broadcast-compare, eq. 10)
     word   = OR_j  code[group j] << (j * Q)    (uint32 packing, the wire)
+
+The codebook table rides in as an operand, so ONE kernel serves every
+registered family (core/codebook.py):
+
+  * scalar (Lloyd-Max / dithered-uniform): ``tab`` is the (L-1,) threshold
+    vector and ``code = #{tau_j < y (+ dither)}`` -- the broadcast-compare
+    bucketize; the optional shared-seed dither is one extra (Mp,) operand
+    added to y before the compare (absent for Lloyd-Max, so that path is
+    bit-identical to the pre-codebook kernel).
+  * vq (dim d > 1): ``tab`` is the (L, d) centroid table and the code is the
+    nearest centroid, argmax_l <y_g, c_l> - ||c_l||^2/2, computed with the
+    same broadcast-compare idiom: d static lane slices (the j-major group
+    layout of core.codebook.vq_nearest) each contribute a rank-1 update to
+    the (TB, G, L) score tensor, then a max/min-iota reduction picks the
+    first argmax -- no gather, no transpose, no reshape.
 
 The unfused path runs this as two kernels (block_topk, bqcs_encode) plus an
 XLA pack pass, which round-trips the (nb, N) carry, sparse, and residual
@@ -18,13 +33,14 @@ removes three full-gradient HBM round trips and emits the Q-bit wire payload
 directly, so nothing wider than the true wire format ever leaves the kernel.
 
 Packing layout (the canonical wire format, see DESIGN.md #Wire-format): the
-Mp = W * per_word measurement lanes (per_word = 32 // Q, W = ceil(M /
-per_word), A^T zero-padded to Mp columns) are split into per_word contiguous
-*lane groups* of width W; group j is shifted by j*Q bits and OR-accumulated
-into the (TB, W) word tile.  Measurement m therefore lives in word ``m % W``
-at bit offset ``(m // W) * Q`` -- contiguous static lane slices only, no
-in-kernel transpose or gather.  ``core.compression.pack_codes`` implements
-the identical layout for the XLA path.
+Gp = W * per_word code lanes (per_word = 32 // Q, W = ceil(n_codes /
+per_word); scalar: n_codes = M with A^T zero-padded to Gp columns, vq:
+n_codes = M // d with the code vector zero-padded to Gp in-register) are
+split into per_word contiguous *lane groups* of width W; group j is shifted
+by j*Q bits and OR-accumulated into the (TB, W) word tile.  Code lane ``c``
+therefore lives in word ``c % W`` at bit offset ``(c // W) * Q`` --
+contiguous static lane slices only.  ``core.compression.pack_codes``
+implements the identical layout for the XLA path.
 
 Grid: one program per TB-row tile of (nblocks, N).
 """
@@ -42,9 +58,14 @@ BISECT_ITERS = 26  # matches block_topk.py (threshold ~1e-7 of dynamic range)
 
 
 def _fused_kernel(
-    g_ref, r_ref, at_ref, tau_ref, words_ref, alpha_ref, resid_ref,
-    *, s: int, iters: int, m: int, bits: int,
+    *refs, s: int, iters: int, m: int, bits: int, vq_d: int, has_dither: bool,
 ):
+    if has_dither:
+        g_ref, r_ref, at_ref, tab_ref, dith_ref = refs[:5]
+        words_ref, alpha_ref, resid_ref = refs[5:]
+    else:
+        g_ref, r_ref, at_ref, tab_ref = refs[:4]
+        words_ref, alpha_ref, resid_ref = refs[4:]
     carry = g_ref[...] + r_ref[...]  # (TB, N) error-feedback add
 
     # -- bisection top-S threshold (same math + trip count as block_topk) --
@@ -64,7 +85,7 @@ def _fused_kernel(
     sparse = jnp.where(keep, carry, 0.0)
     resid_ref[...] = carry - sparse
 
-    # -- norm/scale + MXU projection + threshold bucketize --
+    # -- norm/scale + MXU projection --
     sq = jnp.sum(sparse * sparse, axis=1, keepdims=True)  # (TB, 1)
     alive = sq > 1e-30
     inv_norm = jax.lax.rsqrt(jnp.where(alive, sq, 1.0))
@@ -75,20 +96,50 @@ def _fused_kernel(
         dimension_numbers=(((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )  # (TB, Mp)
-    taus = tau_ref[...]  # (2^Q - 1,)
-    codes = jnp.sum(
-        (y[:, :, None] > taus[None, None, :]).astype(jnp.int32), axis=-1
-    )  # (TB, Mp), values in [0, 2^Q)
-    mp = codes.shape[1]
-    if mp != m:
-        # Zero the measurement lanes added by word-padding A^T so the padded
-        # word bits match pack_codes' zero fill bit-exactly.
-        lane = jax.lax.broadcasted_iota(jnp.int32, codes.shape, 1)
-        codes = jnp.where(lane < m, codes, 0)
+
+    if vq_d > 1:
+        # -- nearest-centroid encode over d-lane groups (j-major layout) --
+        c = tab_ref[...]  # (L, d) centroid table
+        n_lev = c.shape[0]
+        g = m // vq_d  # true code-lane count (Mp == M for vq)
+        cn = 0.5 * jnp.sum(c * c, axis=1)  # (L,)
+        # Accumulation order matches codebook.vq_nearest exactly: j = 0
+        # carries the -||c||^2/2 term, then j = 1..d-1 -- interpret-mode
+        # runs are bit-identical to the XLA oracle.
+        sc = y[:, 0:g][:, :, None] * c[None, None, :, 0] - cn[None, None, :]
+        for j in range(1, vq_d):
+            sc = sc + y[:, j * g : (j + 1) * g][:, :, None] * c[None, None, :, j]
+        mx = jnp.max(sc, axis=-1, keepdims=True)  # (TB, G, 1)
+        lvl = jax.lax.broadcasted_iota(jnp.int32, sc.shape, 2)
+        codes = jnp.min(jnp.where(sc == mx, lvl, n_lev), axis=-1)  # (TB, G)
+        # Zero-pad the code lanes to the word grid (pure pack-side padding;
+        # every measurement lane is real on the vq path).
+        per_word = 32 // bits
+        gp = -(-g // per_word) * per_word
+        if gp != g:
+            codes = jnp.concatenate(
+                [codes, jnp.zeros((codes.shape[0], gp - g), jnp.int32)], axis=1
+            )
+    else:
+        # -- threshold bucketize (broadcast-compare) --
+        if has_dither:
+            # shared-seed subtractive dither: the encoder quantizes y + u
+            # (padded lanes carry u = 0 and are masked below anyway)
+            y = y + dith_ref[...][None, :]
+        taus = tab_ref[...]  # (L - 1,)
+        codes = jnp.sum(
+            (y[:, :, None] > taus[None, None, :]).astype(jnp.int32), axis=-1
+        )  # (TB, Mp), values in [0, L)
+        mp = codes.shape[1]
+        if mp != m:
+            # Zero the measurement lanes added by word-padding A^T so the
+            # padded word bits match pack_codes' zero fill bit-exactly.
+            lane = jax.lax.broadcasted_iota(jnp.int32, codes.shape, 1)
+            codes = jnp.where(lane < m, codes, 0)
 
     # -- shift-accumulate pack over the 32 // Q lane groups --
     per_word = 32 // bits
-    w = mp // per_word
+    w = codes.shape[1] // per_word
     codes = codes.astype(jnp.uint32)
     words = codes[:, 0:w]
     for j in range(1, per_word):
@@ -97,15 +148,20 @@ def _fused_kernel(
     alpha_ref[...] = alpha
 
 
-@functools.partial(jax.jit, static_argnames=("s", "m", "bits", "tb", "iters", "interpret"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("s", "m", "bits", "vq_d", "tb", "iters", "interpret"),
+)
 def bqcs_encode_fused_pallas(
     blocks: jnp.ndarray,  # (nb, N) f32, nb % tb == 0
     residual: jnp.ndarray,  # (nb, N) f32 error-feedback state
-    a_t: jnp.ndarray,  # (N, Mp) f32, Mp = W * (32 // Q) zero-padded columns
-    taus: jnp.ndarray,  # (2^Q - 1,) f32 Lloyd-Max thresholds
+    a_t: jnp.ndarray,  # (N, Mp) f32; scalar: Mp = W * (32 // Q) zero-padded
+    tab: jnp.ndarray,  # (L-1,) thresholds (scalar) or (L, d) centroids (vq)
     s: int,
     m: int,  # true measurement count M <= Mp
-    bits: int,  # Q
+    bits: int,  # Q: index width on the wire
+    vq_d: int = 1,  # codebook dim; > 1 selects nearest-centroid encode
+    dither: jnp.ndarray | None = None,  # (Mp,) per-lane dither or None
     tb: int = DEFAULT_TB,
     iters: int = BISECT_ITERS,
     interpret: bool = False,
@@ -114,18 +170,31 @@ def bqcs_encode_fused_pallas(
     mp = a_t.shape[1]
     per_word = 32 // bits
     assert nb % tb == 0, (nb, tb)
-    assert mp % per_word == 0, (mp, per_word)
-    w = mp // per_word
-    kernel = functools.partial(_fused_kernel, s=s, iters=iters, m=m, bits=bits)
+    if vq_d > 1:
+        assert mp == m and m % vq_d == 0, (mp, m, vq_d)
+        w = -(-(m // vq_d) // per_word)
+    else:
+        assert mp % per_word == 0, (mp, per_word)
+        w = mp // per_word
+    has_dither = dither is not None
+    kernel = functools.partial(
+        _fused_kernel, s=s, iters=iters, m=m, bits=bits, vq_d=vq_d,
+        has_dither=has_dither,
+    )
+    in_specs = [
+        pl.BlockSpec((tb, n), lambda i: (i, 0)),  # gradient tile
+        pl.BlockSpec((tb, n), lambda i: (i, 0)),  # residual tile
+        pl.BlockSpec((n, mp), lambda i: (0, 0)),  # A^T, resident
+        pl.BlockSpec(tab.shape, (lambda i: (0, 0)) if tab.ndim == 2 else (lambda i: (0,))),
+    ]
+    operands = [blocks, residual, a_t, tab]
+    if has_dither:
+        in_specs.append(pl.BlockSpec((mp,), lambda i: (0,)))
+        operands.append(dither)
     words, alpha, resid = pl.pallas_call(
         kernel,
         grid=(nb // tb,),
-        in_specs=[
-            pl.BlockSpec((tb, n), lambda i: (i, 0)),  # gradient tile
-            pl.BlockSpec((tb, n), lambda i: (i, 0)),  # residual tile
-            pl.BlockSpec((n, mp), lambda i: (0, 0)),  # A^T, resident
-            pl.BlockSpec((taus.shape[0],), lambda i: (0,)),  # thresholds
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((tb, w), lambda i: (i, 0)),
             pl.BlockSpec((tb, 1), lambda i: (i, 0)),
@@ -137,5 +206,5 @@ def bqcs_encode_fused_pallas(
             jax.ShapeDtypeStruct((nb, n), jnp.float32),
         ],
         interpret=interpret,
-    )(blocks, residual, a_t, taus)
+    )(*operands)
     return words, alpha[:, 0], resid

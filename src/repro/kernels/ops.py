@@ -14,8 +14,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.codebook import as_codebook
 from repro.core.gamp import block_prior_energy, norm_guard, tau_tables
-from repro.core.quantizer import LloydMaxQuantizer
 from repro.kernels import bqcs_encode as _enc
 from repro.kernels import bqcs_encode_fused as _fenc
 from repro.kernels import block_topk as _topk
@@ -51,16 +51,18 @@ def _pad_rows_ones(arrays, tb: int):
 
 
 def bqcs_encode(
-    blocks: jnp.ndarray, a: jnp.ndarray, quantizer: LloydMaxQuantizer, tb: int | None = None
+    blocks: jnp.ndarray, a: jnp.ndarray, quantizer, tb: int | None = None
 ):
     """Fused scale+project+quantize.  blocks (nb, N), a (M, N).
+    ``quantizer``: a scalar Codebook or legacy LloydMaxQuantizer.
 
     Returns (codes uint8 (nb, M), alpha (nb,)).
     """
     tb = tb or min(_enc.DEFAULT_TB, max(8, blocks.shape[0]))
     padded, nb = _pad_rows(blocks.astype(jnp.float32), tb)
     codes, alpha = _enc.bqcs_encode_pallas(
-        padded, a.T, quantizer.jnp_thresholds(), tb=tb, interpret=_interpret()
+        padded, a.T, as_codebook(quantizer).jnp_thresholds(), tb=tb,
+        interpret=_interpret(),
     )
     return codes[:nb].astype(jnp.uint8), alpha[:nb]
 
@@ -69,38 +71,53 @@ def bqcs_encode_fused(
     blocks: jnp.ndarray,
     residual: jnp.ndarray,
     a: jnp.ndarray,
-    quantizer: LloydMaxQuantizer,
+    quantizer,  # Codebook of any family (or legacy LloydMaxQuantizer)
     s: int,
     tb: int | None = None,
 ):
     """Single-pass fused encoder: error-feedback add -> bisection top-S ->
-    scale/project/bucketize -> uint32 wire packing, one VMEM residency.
+    scale/project/encode -> uint32 wire packing, one VMEM residency.  The
+    codebook table (thresholds for the scalar families, centroids for vq,
+    plus the optional shared-seed dither vector) rides in as an operand, so
+    one kernel serves every registered family.
 
-    blocks/residual (nb, N), a (M, N).  Pads rows once to the tile multiple
-    and A^T's columns once to the word multiple (32 // Q); zero fill is
-    benign for both (dead rows get alpha=0; padded measurement lanes are
-    masked to code 0 in-kernel).
+    blocks/residual (nb, N), a (M, N).  Pads rows once to the tile multiple;
+    the scalar families additionally pad A^T's columns once to the word
+    multiple (32 // Q) -- zero fill is benign for both (dead rows get
+    alpha=0; padded measurement lanes are masked to code 0 in-kernel).  The
+    vq family pads at the code-lane level instead (every measurement lane is
+    real; M % d == 0 enforced at codebook design).
 
     Returns (words uint32 (nb, W), alpha (nb,), new_residual (nb, N)) with
-    W = ceil(M / (32 // Q)) -- the canonical packed wire layout of
+    W = ceil(n_codes / (32 // Q)) -- the canonical packed wire layout of
     ``core.compression.pack_codes``.
     """
     from repro.core.compression import packed_width
 
-    bits = quantizer.bits
+    cb = as_codebook(quantizer)
+    bits = cb.bits
     per_word = 32 // bits
     m, n = a.shape
-    w = packed_width(m, bits)  # the single wire-width definition
     a_t = a.T
-    pad_m = w * per_word - m
-    if pad_m:
-        a_t = jnp.concatenate([a_t, jnp.zeros((n, pad_m), a_t.dtype)], axis=1)
+    dither = None
+    if cb.dim > 1:
+        tab = cb.jnp_centroids()  # (L, d): nearest-centroid encode
+    else:
+        tab = cb.jnp_thresholds()  # (L - 1,): threshold bucketize
+        w = packed_width(m, bits)  # the single wire-width definition
+        pad_m = w * per_word - m
+        if pad_m:
+            a_t = jnp.concatenate([a_t, jnp.zeros((n, pad_m), a_t.dtype)], axis=1)
+        dither = cb.jnp_dither()
+        if dither is not None and pad_m:
+            dither = jnp.concatenate([dither, jnp.zeros((pad_m,), dither.dtype)])
     tb = tb or min(_fenc.DEFAULT_TB, max(8, blocks.shape[0]))
     padded_b, nb = _pad_rows(blocks.astype(jnp.float32), tb)
     padded_r, _ = _pad_rows(residual.astype(jnp.float32), tb)
     words, alpha, resid = _fenc.bqcs_encode_fused_pallas(
-        padded_b, padded_r, a_t, quantizer.jnp_thresholds(),
-        s=s, m=m, bits=bits, tb=tb, interpret=_interpret(),
+        padded_b, padded_r, a_t, tab,
+        s=s, m=m, bits=bits, vq_d=cb.dim, dither=dither,
+        tb=tb, interpret=_interpret(),
     )
     return words[:nb], alpha[:nb], resid[:nb]
 

@@ -15,16 +15,23 @@ import jax.numpy as jnp
 _EPS = 1e-12
 
 
-def bqcs_encode_ref(blocks: jnp.ndarray, a_t: jnp.ndarray, taus: jnp.ndarray):
-    """(nb, N), (N, M), (2^Q-1,) -> codes (nb, M) int32, alpha (nb,)."""
+def _scale_project_ref(blocks: jnp.ndarray, a_t: jnp.ndarray):
+    """alpha = sqrt(M)/||block|| (0 for dead blocks) and y = alpha * b @ A^T
+    -- the single scale/projection definition every encode-oracle branch
+    shares (same ops/order as the kernels' in-VMEM version)."""
     m = a_t.shape[1]
     sq = jnp.sum(blocks * blocks, axis=1, keepdims=True)
     alive = sq > 1e-30
     inv_norm = jax.lax.rsqrt(jnp.where(alive, sq, 1.0))
     alpha = jnp.where(alive, jnp.sqrt(jnp.float32(m)) * inv_norm, 0.0)
-    y = (blocks * alpha) @ a_t
+    return (blocks * alpha) @ a_t, alpha[:, 0]
+
+
+def bqcs_encode_ref(blocks: jnp.ndarray, a_t: jnp.ndarray, taus: jnp.ndarray):
+    """(nb, N), (N, M), (2^Q-1,) -> codes (nb, M) int32, alpha (nb,)."""
+    y, alpha = _scale_project_ref(blocks, a_t)
     codes = jnp.sum((y[:, :, None] > taus[None, None, :]).astype(jnp.int32), axis=-1)
-    return codes, alpha[:, 0]
+    return codes, alpha
 
 
 def bqcs_encode_fused_ref(
@@ -35,19 +42,38 @@ def bqcs_encode_fused_ref(
     s: int,
     bits: int,
     iters: int = 26,
+    dither: jnp.ndarray | None = None,
+    centroids: jnp.ndarray | None = None,
 ):
     """Single-pass fused encoder oracle: error-feedback add -> bisection
-    top-S -> scale/project/bucketize -> lane-group uint32 packing.
+    top-S -> scale/project/encode -> lane-group uint32 packing.
 
-    Composes the two stage oracles plus ``core.compression.pack_codes`` so
-    the packed wire layout has exactly one jnp definition.  Returns
+    The encode stage follows the codebook family: threshold bucketize
+    against ``taus`` (plus the optional per-lane subtractive ``dither``), or
+    nearest-centroid against ``centroids`` (L, d) when given -- the latter
+    via ``core.codebook.vq_nearest``, the single scoring definition the
+    kernel mirrors.  Composes the stage oracles plus
+    ``core.compression.pack_codes`` so the packed wire layout has exactly
+    one jnp definition.  Returns
     (words uint32 (nb, W), alpha (nb,), new_residual (nb, N)).
     """
     from repro.core.compression import pack_codes
 
     carry = blocks + residual
     sparse, resid = block_topk_ref(carry, s, iters=iters)
-    codes, alpha = bqcs_encode_ref(sparse, a_t, taus)
+    y, alpha = _scale_project_ref(sparse, a_t)
+    if centroids is not None:
+        from repro.core.codebook import vq_nearest
+
+        codes = vq_nearest(y, centroids)
+    else:
+        if dither is not None:
+            # the dithered encoder compares y + u against the thresholds,
+            # identically to the kernel's y += dither before the bucketize
+            y = y + dither[None, :]
+        codes = jnp.sum(
+            (y[:, :, None] > taus[None, None, :]).astype(jnp.int32), axis=-1
+        )
     return pack_codes(codes.astype(jnp.uint8), bits), alpha, resid
 
 

@@ -102,7 +102,9 @@ def run_federated(
 ) -> RunResult:
     """Runs the federated loop on the cohort engine; returns accuracy/NMSE
     traces.  The default arguments reproduce the paper's experiment exactly;
-    the scenario axes open the FedVQCS-style wireless cohort settings."""
+    the scenario axes open the FedVQCS-style wireless cohort settings.  The
+    quantizer codebook is a ``fed_cfg`` axis (``FedQCSConfig.codebook`` /
+    ``vq_dim``, DESIGN.md #Codebooks), passed through untouched."""
     (xtr, ytr, xte, yte), _ = mnist.load(seed)
     parts = partition_indices(
         ytr, k_devices, PartitionConfig(kind=partition, alpha=alpha, seed=seed)
@@ -111,6 +113,7 @@ def run_federated(
         reduction_ratio=3, bits=3, s_ratio=0.1, gamp_iters=25
     )
     # Paper blocking: B=10 blocks -> N = ceil(15910/10) = 1591.
+    # M = 1591 // R; the vq codebook needs vq_dim | M (checked at design).
     fed_cfg = dataclasses.replace(fed_cfg, block_size=1591)
 
     params = init_mlp(jax.random.PRNGKey(seed))

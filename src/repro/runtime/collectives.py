@@ -94,10 +94,8 @@ def fedqcs_pod_allreduce(
             return cs(ghat, "blocks", None), new_residual
         # AE: Bussgang-aggregate via the packed level lookup -- the only
         # index-domain consumer left, and it reads the words directly too.
-        y = bussgang.aggregate_packed(
-            all_words, all_alpha, rhos, codec.quantizer, cfg.bits, m
-        )
-        nu = bussgang.effective_noise_var(all_alpha, rhos, codec.quantizer)
+        y = bussgang.aggregate_packed(all_words, all_alpha, rhos, codec.codebook, m)
+        nu = bussgang.effective_noise_var(all_alpha, rhos, codec.codebook)
         energy = bussgang.signal_energy(all_alpha, rhos, m, n)
     else:  # psum_dequant: codes never cross the wire, only dequantized sums
         if cfg.use_kernels:
@@ -114,11 +112,11 @@ def fedqcs_pod_allreduce(
             deq = codec.dequantize(codes)
         new_residual = jnp.where(part > 0, new_residual, blocks + residual)
         new_residual = cs(new_residual, "blocks", None)
-        w = bussgang.bussgang_weight(rho_self, alpha, codec.quantizer)  # (nb,)
+        w = bussgang.bussgang_weight(rho_self, alpha, codec.codebook)  # (nb,)
         y_local = w[:, None] * deq
         y = jax.lax.psum(y_local, axis_name)
         safe = jnp.where(alpha > 0, alpha, 1.0)
-        nu_local = codec.quantizer.kappa * jnp.where(
+        nu_local = codec.codebook.kappa * jnp.where(
             alpha > 0, (rho_self / safe) ** 2, 0.0
         )
         nu = jax.lax.psum(nu_local, axis_name)
@@ -181,8 +179,8 @@ def fedqcs_vmapped_allreduce(
     new_residual = cs(new_residual, None, "blocks", None)
 
     # Bussgang-weighted sum over pods -> all-reduce over the pod axis.
-    y = bussgang.aggregate_codes(codes, alpha, rhos, codec.quantizer)
-    nu = bussgang.effective_noise_var(alpha, rhos, codec.quantizer)
+    y = bussgang.aggregate_codes(codes, alpha, rhos, codec.codebook)
+    nu = bussgang.effective_noise_var(alpha, rhos, codec.codebook)
     energy = bussgang.signal_energy(alpha, rhos, m, n)
     y = cs(y, "blocks", None)
     return _reconstruct(y, nu, energy, codec), new_residual
@@ -234,8 +232,8 @@ def make_sharded_allreduce(codec: BQCSCodec, mesh, local_shapes, nbar_local: int
             new_res = jnp.where(rhos[:, None, None] > 0, new_res, blocks + residual)
             # Bussgang-weighted sum over the (auto) pod axis -> cross-pod
             # all-reduce of the dequantized projections; everything else local.
-            y = bussgang.aggregate_codes(codes, alpha, rhos, codec.quantizer)
-            nu = bussgang.effective_noise_var(alpha, rhos, codec.quantizer)
+            y = bussgang.aggregate_codes(codes, alpha, rhos, codec.codebook)
+            nu = bussgang.effective_noise_var(alpha, rhos, codec.codebook)
             energy = bussgang.signal_energy(alpha, rhos, cfg.m, n)
             ghat = _reconstruct(y, nu, energy, codec)
             flat_hat = ghat.reshape(-1)[:nbar_local]

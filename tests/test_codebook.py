@@ -1,0 +1,422 @@
+"""Codebook-layer tests (DESIGN.md #Codebooks): family invariants, the
+lloyd_max bit-identity pin, wire accounting, kernel/XLA agreement, the
+kernel-bypass warning, and the vq-vs-scalar acceptance comparison."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression as compression_mod
+from repro.core import sensing, sparsify
+from repro.core.codebook import (
+    as_codebook,
+    design_dithered_uniform,
+    design_vq,
+    index_bits,
+    make_codebook,
+)
+from repro.core.compression import (
+    BQCSCodec,
+    CompressedGradient,
+    FedQCSConfig,
+    pack_codes,
+    packed_width,
+    unpack_codes,
+)
+from repro.core.gamp import GampConfig, qem_gamp, qem_gamp_packed
+from repro.core.quantizer import design_lloyd_max, encode as lm_encode
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _bg_blocks(rng, nb, n, s, scale=0.1):
+    g = np.zeros((nb, n), np.float32)
+    for i in range(nb):
+        idx = rng.choice(n, s, replace=False)
+        g[i, idx] = rng.normal(0, scale, s)
+    return jnp.asarray(g)
+
+
+# ---------------------------------------------------------------------------
+# family invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", list(range(1, 9)))
+def test_lloyd_max_fixed_point_gamma_equals_psi(bits):
+    """At the Lloyd-Max fixed point the centroid condition forces
+    gamma == psi, for EVERY wire width Q in 1..8 (Q=7 included -- the level
+    count need not divide the word)."""
+    cb = make_codebook(FedQCSConfig(bits=bits))
+    assert cb.family == "lloyd_max" and cb.dim == 1
+    assert cb.n_levels == 1 << bits and cb.bits == bits
+    assert abs(cb.gamma - cb.psi) < 1e-4
+    assert cb.kappa >= 0
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+def test_vq_mmse_moments(bits):
+    """k-means satisfies the centroid condition, so gamma ~= psi (the MMSE
+    identity E[<Q,x>] = E[||Q||^2]) holds on held-out data."""
+    cb = design_vq(1 << bits, 2, seed=0)
+    assert abs(cb.gamma - cb.psi) < 5e-3
+    assert 0 < cb.gamma < 1.0
+
+
+def test_vq_beats_product_quantizer_kappa():
+    """2-dim 16-centroid VQ vs the product of two Lloyd-Max Q=2 scalars
+    (identical 2 bits/measurement): the jointly-designed codebook has
+    strictly lower normalized distortion kappa -- the space-filling/shape
+    gain that motivates the whole codebook axis."""
+    vq = design_vq(16, 2, seed=0)
+    lm = as_codebook(design_lloyd_max(2))
+    assert vq.bits_per_entry == lm.bits_per_entry == 2.0
+    assert vq.kappa < lm.kappa, (vq.kappa, lm.kappa)
+
+
+def test_dithered_uniform_moments_match_monte_carlo():
+    cb = design_dithered_uniform(3, m=64, seed=0)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (1000, 64)), jnp.float32)
+    qx = np.asarray(cb.decode(cb.encode(x)))
+    x = np.asarray(x)
+    assert abs(float(np.mean(qx * x)) - cb.gamma) < 5e-3
+    assert abs(float(np.mean(qx**2)) - cb.psi) < 5e-3
+
+
+def test_dithered_uniform_bounded_error():
+    """Subtractive dither: |Q(x) - x| <= delta/2 for in-range inputs."""
+    cb = design_dithered_uniform(4, m=128, seed=3)
+    delta = float(cb.levels[1] - cb.levels[0])
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(np.clip(rng.normal(0, 1, (8, 128)), -3.0, 3.0), jnp.float32)
+    err = np.abs(np.asarray(cb.quantize(x)) - np.asarray(x))
+    assert err.max() <= 0.5 * delta + 1e-6
+
+
+def test_unknown_family_raises():
+    with pytest.raises(ValueError, match="unknown codebook"):
+        make_codebook(FedQCSConfig(codebook="nope"))
+
+
+def test_vq_dim_must_divide_m():
+    with pytest.raises(ValueError, match="must divide"):
+        make_codebook(FedQCSConfig(block_size=96, reduction_ratio=3, bits=4,
+                                   codebook="vq", vq_dim=3))  # M = 32
+
+
+# ---------------------------------------------------------------------------
+# the lloyd_max bit-identity pin (acceptance: pre-refactor wire unchanged)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits,use_kernels", [(2, False), (3, False), (3, True)])
+def test_lloyd_max_wire_bit_identical_to_pre_refactor(bits, use_kernels):
+    """codebook='lloyd_max' must produce the EXACT packed words of the
+    pre-codebook pipeline (golden: design_lloyd_max -> top-S -> project ->
+    searchsorted encode -> pack_codes), on the XLA and kernel paths, and
+    wire_bits() must be unchanged."""
+    rng = np.random.default_rng(7)
+    n, m_ratio = 256, 4
+    cfg = FedQCSConfig(block_size=n, reduction_ratio=m_ratio, bits=bits,
+                       s_ratio=0.1, use_kernels=use_kernels,
+                       gamp_variance_mode="scalar")
+    codec = BQCSCodec(cfg)
+    g = jnp.asarray(rng.normal(0, 0.1, (12, n)), jnp.float32)
+    r = jnp.asarray(rng.normal(0, 0.01, (12, n)), jnp.float32)
+    words, alpha, _ = codec.compress_blocks_packed(g, r)
+
+    quant = design_lloyd_max(bits)
+    sparse, _ = sparsify.block_sparsify(g + r, cfg.s)
+    x, alpha_g = sensing.project_blocks(sparse, codec.a.T)
+    golden = pack_codes(lm_encode(x, quant), bits)
+    np.testing.assert_array_equal(np.asarray(words), np.asarray(golden))
+    np.testing.assert_allclose(np.asarray(alpha), np.asarray(alpha_g), rtol=1e-6)
+
+    payload = CompressedGradient(words, alpha, 12 * n, cfg.m, codec.codebook.bits)
+    w = packed_width(cfg.m, bits)
+    assert payload.wire_bits() == 12 * (w * 32 + 32)  # the pre-refactor formula
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack at non-power-of-two level counts
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("levels", [3, 5, 6, 10, 12, 100])
+@pytest.mark.parametrize("lanes", [1, 31, 97])
+def test_pack_roundtrip_non_power_of_two_levels(levels, lanes):
+    """Index width is ceil(log2 L): codes in [0, L) for non-power-of-two L
+    roundtrip through the wire at that width."""
+    bits = index_bits(levels)
+    assert (1 << (bits - 1)) < levels <= (1 << bits)
+    rng = np.random.default_rng(levels * 100 + lanes)
+    codes = jnp.asarray(rng.integers(0, levels, (5, lanes)), jnp.uint8)
+    words = pack_codes(codes, bits)
+    assert words.shape == (5, packed_width(lanes, bits))
+    np.testing.assert_array_equal(
+        np.asarray(unpack_codes(words, bits, lanes)), np.asarray(codes)
+    )
+
+
+def test_vq_non_power_of_two_levels_end_to_end():
+    """A 12-centroid vq codebook packs at 4-bit width and roundtrips through
+    the real codec wire."""
+    rng = np.random.default_rng(5)
+    cfg = FedQCSConfig(block_size=256, reduction_ratio=4, bits=4, s_ratio=0.1,
+                       codebook="vq", vq_dim=2, vq_levels=12)
+    codec = BQCSCodec(cfg)
+    assert codec.codebook.n_levels == 12 and codec.codebook.bits == 4
+    g = jnp.asarray(rng.normal(0, 0.1, (6, 256)), jnp.float32)
+    words, alpha, _ = codec.compress_blocks_packed(g, jnp.zeros_like(g))
+    codes = codec.unpack(words)
+    assert int(codes.max()) < 12
+    np.testing.assert_array_equal(
+        np.asarray(pack_codes(codes, 4)), np.asarray(words)
+    )
+
+
+# ---------------------------------------------------------------------------
+# dithered-uniform shared-seed determinism
+# ---------------------------------------------------------------------------
+
+
+def test_dithered_shared_seed_determinism():
+    """Two independently-constructed codecs (worker and PS on different
+    devices) derive the IDENTICAL dither from the protocol seed -- the wire
+    needs no side channel; a different seed yields a different dither."""
+    cfg = FedQCSConfig(block_size=128, reduction_ratio=4, bits=3, s_ratio=0.1,
+                       codebook="dithered_uniform")
+    c1, c2 = BQCSCodec(cfg), BQCSCodec(cfg)
+    np.testing.assert_array_equal(c1.codebook.dither, c2.codebook.dither)
+    rng = np.random.default_rng(2)
+    g = jnp.asarray(rng.normal(0, 0.1, (8, 128)), jnp.float32)
+    w1, a1, _ = c1.compress_blocks_packed(g, jnp.zeros_like(g))
+    w2, a2, _ = c2.compress_blocks_packed(g, jnp.zeros_like(g))
+    np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
+    # decode on the "other side" inverts the same dither exactly
+    np.testing.assert_array_equal(
+        np.asarray(c1.dequantize_packed(w1)), np.asarray(c2.dequantize_packed(w2))
+    )
+    c3 = BQCSCodec(dataclasses.replace(cfg, seed=99))
+    assert not np.array_equal(c1.codebook.dither, c3.codebook.dither)
+
+
+def test_dithered_kernel_matches_xla_wire():
+    rng = np.random.default_rng(3)
+    cfg = FedQCSConfig(block_size=256, reduction_ratio=4, bits=3, s_ratio=0.1,
+                       codebook="dithered_uniform")
+    codec = BQCSCodec(cfg)
+    g = jnp.asarray(rng.normal(0, 0.1, (10, 256)), jnp.float32)
+    r = jnp.asarray(rng.normal(0, 0.01, (10, 256)), jnp.float32)
+    w_xla, a_xla, res_xla = codec.compress_blocks_packed(g, r)
+    from repro.kernels import ops
+
+    w_k, a_k, res_k = ops.bqcs_encode_fused(g, r, codec.a, codec.codebook, cfg.s)
+    np.testing.assert_array_equal(np.asarray(w_k), np.asarray(w_xla))
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_xla))
+    np.testing.assert_allclose(np.asarray(res_k), np.asarray(res_xla), atol=1e-6)
+
+
+def test_dithered_ea_exact_channel_reconstructs():
+    """The truncated-posterior EA channel applies to the dithered family via
+    the per-lane edge shift: recovery quality tracks lloyd_max at the same
+    Q on the same payload."""
+    rng = np.random.default_rng(4)
+    n, s, nb = 512, 40, 8
+    g = _bg_blocks(rng, nb, n, s)
+    out = {}
+    for fam in ("lloyd_max", "dithered_uniform"):
+        cfg = FedQCSConfig(block_size=n, reduction_ratio=3, bits=4,
+                          s_ratio=s / n, codebook=fam)
+        codec = BQCSCodec(cfg)
+        codes, alpha, _ = codec.compress_blocks(g, jnp.zeros_like(g))
+        ghat = qem_gamp(codes, alpha, codec.a, codec.codebook,
+                        GampConfig(iters=50))
+        out[fam] = np.median(np.asarray(
+            jnp.sum((ghat - g) ** 2, 1) / jnp.sum(g**2, 1)))
+    # Absolute quality: the shifted-cell channel recovers the blocks.  The
+    # lloyd_max ratio is loose -- at Q=4 the MMSE codebook's kappa is ~2.2x
+    # below the uniform one's and GAMP compounds it -- the bound only pins
+    # "same order of magnitude, channel not broken".
+    assert out["dithered_uniform"] < 0.05, out
+    assert out["dithered_uniform"] < 8.0 * out["lloyd_max"], out
+
+
+# ---------------------------------------------------------------------------
+# vq: kernel/XLA agreement + packed-domain equivalence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,m,d,bits", [
+    (256, 64, 2, 4),    # even everything (W = 4)
+    (256, 100, 2, 4),   # n_codes = 50: pack padding (W = 7, 6 slack lanes)
+    (128, 32, 4, 3),    # d = 4, Q = 3: 8 levels over 4 dims
+    (256, 66, 2, 5),    # Q = 5: 6 codes/word, n_codes = 33 -> W = 6
+])
+def test_vq_fused_kernel_matches_oracle(n, m, d, bits):
+    """Fused nearest-centroid encode == the jnp oracle (vq_nearest + pack),
+    words and alpha bit-exact in interpret mode, incl. the all-zero row."""
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(n + m + d)
+    cb = design_vq(1 << bits, d, seed=1)
+    blocks = jnp.asarray(rng.normal(0, 0.1, (9, n)), jnp.float32)
+    resid = jnp.asarray(rng.normal(0, 0.01, (9, n)), jnp.float32)
+    blocks = blocks.at[0].set(0.0)
+    resid = resid.at[0].set(0.0)
+    a = sensing.sensing_matrix(jax.random.PRNGKey(1), m, n)
+    s = max(1, n // 10)
+    wk, ak, rk = ops.bqcs_encode_fused(blocks, resid, a, cb, s)
+    wr, ar, rr = ref.bqcs_encode_fused_ref(
+        blocks, resid, a.T, None, s, bits, centroids=cb.jnp_centroids()
+    )
+    assert wk.dtype == jnp.uint32
+    assert wk.shape == (9, packed_width(m // d, bits))
+    np.testing.assert_array_equal(np.asarray(wk), np.asarray(wr))
+    np.testing.assert_array_equal(np.asarray(ak), np.asarray(ar))
+    np.testing.assert_allclose(np.asarray(rk), np.asarray(rr), atol=1e-6)
+    assert float(ak[0]) == 0.0
+
+
+def test_vq_decode_is_nearest_centroid():
+    rng = np.random.default_rng(6)
+    cb = design_vq(16, 2, seed=0)
+    y = jnp.asarray(rng.normal(0, 1, (4, 32)), jnp.float32)
+    deq = np.asarray(cb.quantize(y))
+    # brute-force nearest centroid per (j-major) group
+    yv = np.asarray(y).reshape(4, 2, 16)  # (nb, d, G)
+    dv = deq.reshape(4, 2, 16)
+    c = np.asarray(cb.centroids)
+    for b in range(4):
+        for g_idx in range(16):
+            vec = yv[b, :, g_idx]
+            best = c[np.argmin(((c - vec) ** 2).sum(1))]
+            np.testing.assert_allclose(dv[b, :, g_idx], best, rtol=1e-5)
+
+
+def test_vq_packed_ea_equals_unpacked():
+    rng = np.random.default_rng(8)
+    n, s, nb = 256, 24, 6
+    g = _bg_blocks(rng, nb, n, s)
+    cfg = FedQCSConfig(block_size=n, reduction_ratio=4, bits=4, s_ratio=s / n,
+                       codebook="vq", vq_dim=2, gamp_iters=20)
+    codec = BQCSCodec(cfg)
+    codes, alpha, _ = codec.compress_blocks(g, jnp.zeros_like(g))
+    words, alpha2, _ = codec.compress_blocks_packed(g, jnp.zeros_like(g))
+    np.testing.assert_array_equal(np.asarray(alpha), np.asarray(alpha2))
+    gcfg = GampConfig(iters=20)
+    gh_u = qem_gamp(codes, alpha, codec.a, codec.codebook, gcfg)
+    gh_p = qem_gamp_packed(words, alpha2, codec.a, codec.codebook, gcfg, cfg.m)
+    np.testing.assert_array_equal(np.asarray(gh_u), np.asarray(gh_p))
+
+
+# ---------------------------------------------------------------------------
+# acceptance: vq (d=2, Q=4) vs scalar on the synthetic BG recovery test
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_vq_wire_and_nmse_vs_scalar(use_kernels):
+    """vq with d=2, Q=4 rides the wire at no more bits than scalar Q=2 (the
+    4-bit code covers TWO measurements; by the ceil identity of
+    DESIGN.md #Wire-format the word counts coincide, so <= is the attainable
+    bound) and STRICTLY fewer than the same-resolution scalar Q=4 family
+    member it replaces -- at equal or better NMSE than scalar Q=2 on the
+    synthetic BG recovery test, on both the XLA and kernel (interpret-mode)
+    paths.  NMSE compares on the production AE decode, where both families
+    run the identical Bussgang-linearized channel and the comparison
+    isolates the CODEBOOK's distortion (kappa_vq < kappa_q2); the scalar
+    families' exact-channel EA decode is a decoder refinement orthogonal to
+    the codebook axis."""
+    from repro.core.reconstruction import aggregate_and_estimate
+
+    rng = np.random.default_rng(10)
+    n, s, nb = 512, 40, 16
+    g = _bg_blocks(rng, nb, n, s)
+    results = {}
+    for tag, ckw in (
+        ("scalar_q2", dict(codebook="lloyd_max", bits=2)),
+        ("scalar_q4", dict(codebook="lloyd_max", bits=4)),
+        ("vq_q4_d2", dict(codebook="vq", bits=4, vq_dim=2)),
+    ):
+        cfg = FedQCSConfig(block_size=n, reduction_ratio=4, s_ratio=s / n,
+                           use_kernels=use_kernels,
+                           gamp_variance_mode="scalar", **ckw)
+        codec = BQCSCodec(cfg)
+        words, alpha, _ = codec.compress_blocks_packed(g, jnp.zeros_like(g))
+        payload = CompressedGradient(words, alpha, nb * n, cfg.m,
+                                     codec.codebook.bits)
+        codes = codec.unpack(words)
+        ghat = aggregate_and_estimate(
+            codec, codes[None], alpha[None], jnp.ones((1,)),
+            gamp=GampConfig(iters=40, variance_mode="scalar"),
+            use_pallas=use_kernels,
+        )
+        nmse = float(np.median(np.asarray(
+            jnp.sum((ghat - g) ** 2, 1) / jnp.sum(g**2, 1))))
+        results[tag] = (payload.wire_bits(), nmse)
+    (w2, e2), (w4, e4), (wv, ev) = (
+        results["scalar_q2"], results["scalar_q4"], results["vq_q4_d2"])
+    assert wv <= w2, results  # equal wire to scalar Q=2 ...
+    assert wv < w4, results  # ... strictly below scalar Q=4
+    assert ev <= e2 * 1.02, results  # ... at equal-or-better NMSE
+
+
+# ---------------------------------------------------------------------------
+# the silent kernel-bypass warning (use_kernels + exact variance)
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_bypass_warns_once(monkeypatch):
+    monkeypatch.setattr(compression_mod, "_KERNEL_BYPASS_WARNED", False)
+    cfg = FedQCSConfig(block_size=128, reduction_ratio=4, bits=2,
+                       use_kernels=True)  # gamp_variance_mode="exact" default
+    with pytest.warns(UserWarning, match="scalar-variance"):
+        BQCSCodec(cfg)
+    # one-time: a second codec does not warn again
+    import warnings as _w
+
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        BQCSCodec(cfg)
+
+
+def test_no_bypass_warning_for_valid_configs(monkeypatch):
+    monkeypatch.setattr(compression_mod, "_KERNEL_BYPASS_WARNED", False)
+    import warnings as _w
+
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        BQCSCodec(FedQCSConfig(use_kernels=True, gamp_variance_mode="scalar"))
+        BQCSCodec(FedQCSConfig(use_kernels=False))  # exact + no kernels: fine
+
+
+# ---------------------------------------------------------------------------
+# fed engine: the codebook as a scenario axis
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method,fam", [
+    ("fedqcs-ae", "vq"), ("fedqcs-ea", "vq"),
+    ("fedqcs-ae", "dithered_uniform"), ("fedqcs-ea", "dithered_uniform"),
+])
+def test_engine_round_with_codebook_axis(method, fam):
+    from repro.fed.engine import ArrayClientData, CohortConfig, CohortEngine
+    from repro.fed.partition import PartitionConfig, partition_indices
+    from repro.fed.toy import toy_classification, toy_loss, toy_params
+
+    x, y = toy_classification()
+    parts = partition_indices(y, 6, PartitionConfig(kind="iid", min_size=4))
+    engine = CohortEngine(
+        toy_params(), jax.grad(toy_loss), ArrayClientData(x, y, parts, batch_size=4),
+        fed_cfg=FedQCSConfig(block_size=64, reduction_ratio=2, bits=4,
+                             codebook=fam, vq_dim=2, gamp_iters=10),
+        cohort=CohortConfig(method=method),
+    )
+    stats = engine.run_round()
+    assert np.isfinite(stats["nmse"]), stats
+    assert stats["nmse"] < 1.5, stats

@@ -250,7 +250,7 @@ def test_dequantize_packed_matches_unpacked(q):
         np.asarray(codec.dequantize_packed(words[0])),
         np.asarray(codec.dequantize(codes[0])),
     )
-    y_p = bussgang.aggregate_packed(words, alphas, rhos, codec.quantizer, q, cfg.m)
+    y_p = bussgang.aggregate_packed(words, alphas, rhos, codec.quantizer, cfg.m)
     y_u = bussgang.aggregate_codes(codes, alphas, rhos, codec.quantizer)
     np.testing.assert_array_equal(np.asarray(y_p), np.asarray(y_u))
 
