@@ -26,6 +26,7 @@ BENCH_ENCODE_JSON = os.path.join(_BENCH_DIR, "BENCH_encode.json")
 BENCH_FED_JSON = os.path.join(_BENCH_DIR, "BENCH_fed.json")
 BENCH_RECON_JSON = os.path.join(_BENCH_DIR, "BENCH_recon.json")
 BENCH_QUANT_JSON = os.path.join(_BENCH_DIR, "BENCH_quant.json")
+BENCH_STREAM_JSON = os.path.join(_BENCH_DIR, "BENCH_stream.json")
 
 
 def _write_bench_json(path: str, bench: str, entries: list) -> None:
@@ -552,6 +553,119 @@ def fed_cohort_scaling(fast=True):
     return rows
 
 
+def stream_scaling(fast=True):
+    """Streaming vs barrier PS decode at census registration scale
+    (EXPERIMENTS.md #Stream-bench): the scheduler tracks K registered
+    clients (10^4 and 10^6), samples a ~10^3-client cohort, and the PS
+    decodes the cohort's wire payloads either one-shot (the barrier path
+    materializes every dequantized payload at once, so its decode state
+    grows with the sampled cohort) or streamed through arrival-ordered
+    batches into the carry-save stat tree.
+
+    The streamed rounds' recorded ``peak_live_stats_bytes`` must be
+    IDENTICAL across K — the constant-memory claim CI's bench-smoke job
+    validates — and ``stream_vs_barrier_nmse`` must sit inside the pinned
+    f32-reassociation tolerance (tests/test_stream.py, NMSE <= 1e-8).
+    Payloads are generated once outside every timing window; the walls
+    measure the PS decode path only.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import aggregator
+    from repro.core.compression import BQCSCodec, FedQCSConfig
+    from repro.core.recon_engine import decode_from_stats
+    from repro.fed.scheduler import SchedulerConfig, SchedulerState, select_cohort
+    from repro.fed.stream import (
+        StreamConfig,
+        StreamingPS,
+        batch_arrivals,
+        simulate_arrivals,
+        stream_decode,
+    )
+
+    fed = FedQCSConfig(block_size=256, reduction_ratio=4, bits=2, s_ratio=0.1,
+                       gamp_iters=10 if fast else 15,
+                       gamp_variance_mode="scalar")
+    codec = BQCSCodec(fed)
+    cohort = 1000 if fast else 10_000
+    nb = 2
+    registered = (10_000, 1_000_000)
+    reps = 3 if fast else 5
+
+    # one sampled cohort's wire payloads, shared by every (K, path) cell
+    blocks = jax.random.normal(
+        jax.random.PRNGKey(0), (cohort, nb, fed.block_size), jnp.float32)
+    words, alphas, _ = jax.vmap(codec.compress_blocks_packed)(
+        blocks, jnp.zeros_like(blocks))
+    jax.block_until_ready(words)
+    m = fed.block_size // fed.reduction_ratio
+
+    scfg = StreamConfig(batch_clients=64, buffer_batches=8, fanout=8,
+                        deadline=1e9, seed=0)
+    ps = StreamingPS(codec, mode="ae", stream=scfg)  # one jit cache, all K
+    barrier_fn = jax.jit(lambda wd, al, wt: decode_from_stats(
+        codec, aggregator.ae_batch_stats(codec, wd, al, wt)))
+
+    rows, entries = [], []
+    for k in registered:
+        # the scheduler side really runs at K registrations; only the decode
+        # state may not scale with it
+        sched = SchedulerConfig(kind="uniform", sample_frac=cohort / k, seed=0)
+        ids, rhos, _ = select_cohort(
+            sched, SchedulerState.init(k), 0, np.ones(k))
+        assert len(ids) == cohort
+        w = rhos.astype(np.float32)
+        times = simulate_arrivals(scfg, 0, cohort, np.ones(cohort, bool))
+        batches = batch_arrivals(times, scfg.deadline, scfg.batch_clients)
+
+        def stream_once():
+            return stream_decode(codec, words, alphas, w, batches, ps=ps)
+
+        ghat_s, info = stream_once()  # warm the fold/finalize jits
+        jax.block_until_ready(ghat_s)
+        t0 = time.time()
+        for _ in range(reps):
+            ghat_s, info = stream_once()
+            jax.block_until_ready(ghat_s)
+        wall_s = (time.time() - t0) / reps
+
+        jw = jnp.asarray(w)
+        ghat_b = jax.block_until_ready(barrier_fn(words, alphas, jw))
+        t0 = time.time()
+        for _ in range(reps):
+            ghat_b = jax.block_until_ready(barrier_fn(words, alphas, jw))
+        wall_b = (time.time() - t0) / reps
+
+        nmse = float(jnp.sum(jnp.square(ghat_s - ghat_b))
+                     / (jnp.sum(jnp.square(ghat_b)) + 1e-30))
+        stream_peak = int(info["peak_live_stats_bytes"])
+        barrier_peak = cohort * nb * m * 4  # the one-shot (C, nb, M) deq array
+        for name, wall, peak in (
+            (f"stream_round[k{k}]", wall_s, stream_peak),
+            (f"barrier_round[k{k}]", wall_b, barrier_peak),
+        ):
+            derived = (
+                f"registered={k};sampled={cohort};"
+                f"peak_live_stats_bytes={peak};"
+                f"stream_vs_barrier_nmse={nmse:.3e}"
+            )
+            rows.append(f"stream[{name}],{1e6 * wall:.1f},{derived}")
+            entries.append({
+                "name": name, "wall_ms": round(wall * 1e3, 3),
+                "derived": derived, "registered": k, "sampled": cohort,
+                "peak_live_stats_bytes": peak,
+                "tree_tiers": int(info["tree_tiers"]),
+                "batches": int(info["batches_admitted"]),
+                "stream_vs_barrier_nmse": nmse,
+                "backend": jax.default_backend(),
+            })
+    _write_bench_json(BENCH_STREAM_JSON, "stream_scaling", entries)
+    rows.append(f"stream[json],0,{os.path.relpath(BENCH_STREAM_JSON)}")
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
@@ -593,6 +707,7 @@ def main() -> None:
         "quant": quant_codebooks,
         "recon": recon_scaling,
         "fed": fed_cohort_scaling,
+        "stream": stream_scaling,
     }
     selected = [s for s in args.only.split(",") if s] or list(benches)
     print("name,us_per_call,derived")

@@ -1,0 +1,224 @@
+"""Hierarchical partial aggregation of Bussgang/EA sufficient statistics
+(DESIGN.md #Streaming-PS).
+
+The barrier PS consumes all K payloads at once: one ``gather_codes``, one
+monolithic decode.  This module is the algebra that lets the PS fold payloads
+*incrementally*: both reconstruction strategies reduce, on the aggregation
+side, to sums that are associative in the cohort --
+
+  * **AE** (aggregate-and-estimate): the Bussgang observation ``y = sum_k
+    w_k deq_k`` (eq. 23), the effective-noise accumulator ``nu`` (eq. 24 + the
+    channel term), and the GAMP-init energy are all plain sums over clients.
+  * **EA** (estimate-and-aggregate): per-client GAMP estimates are summed
+    rho-weighted (Procedure 2 step 14) -- the decoded blocks themselves are
+    the additive statistic, so decode can run per arrival batch and only the
+    running sum stays live.
+
+Weights fold in RAW (pre-normalization): the streamed round does not know the
+final participant set until the deadline, so statistics accumulate with the
+scheduler's unnormalized weights and :func:`normalized_stats` rescales at
+finalization (``y`` is linear in rho -> 1/W; ``nu``/``energy`` are quadratic
+-> 1/W^2).  This is algebraically identical to the barrier path's
+``rho_k = w_k / W`` weighting; the only difference is f32 reassociation of
+the sums, which the streamed-vs-barrier tolerance contract in
+``tests/test_stream.py`` pins.
+
+:class:`AggregatorTree` is the carry-save reduction tree the streaming PS
+folds into: each tier holds ONE running partial sum and carries to its parent
+every ``fanout`` folds, so live PS decode state is O(tree depth) partial
+stats -- constant in the registered-client count and logarithmic in the
+arrival-batch count -- instead of O(K) payloads.  The tier structure is also
+the landing pad for MIMO-MAC partial aggregation (PAPERS.md): a tier's
+partial sum is exactly what a superimposed sub-cohort reception produces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bussgang
+from repro.core.compression import BQCSCodec
+
+__all__ = [
+    "PartialStats",
+    "zero_stats",
+    "stats_add",
+    "ae_batch_stats",
+    "ea_batch_stats",
+    "normalized_stats",
+    "AggregatorTree",
+]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PartialStats:
+    """Additive sufficient statistics of a (sub-)cohort, raw-weighted.
+
+    mode "ae": ``y`` is the (nb, M) Bussgang-weighted dequantized sum,
+    ``nu`` the (nb,) effective-noise accumulator (quantization + channel),
+    ``energy`` the (nb,) GAMP-init signal energy.
+    mode "ea": ``y`` is the (nb, N) weighted sum of per-client GAMP
+    estimates; ``nu``/``energy`` stay zero (decode already happened).
+
+    ``wsum`` is the raw-weight total folded so far (the normalizer W) and
+    ``count`` the number of contributing (weight > 0) clients.
+    """
+
+    mode: str
+    y: jnp.ndarray
+    nu: jnp.ndarray
+    energy: jnp.ndarray
+    wsum: jnp.ndarray
+    count: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.y, self.nu, self.energy, self.wsum, self.count), self.mode
+
+    @classmethod
+    def tree_unflatten(cls, mode, children):
+        return cls(mode, *children)
+
+    @property
+    def nbytes(self) -> int:
+        """Live bytes of one partial stat (the unit of PS decode state)."""
+        return sum(
+            int(x.size) * x.dtype.itemsize
+            for x in (self.y, self.nu, self.energy, self.wsum, self.count)
+        )
+
+
+def zero_stats(mode: str, nb: int, width: int) -> PartialStats:
+    """The additive identity: ``width`` is M for "ae", N for "ea"."""
+    if mode not in ("ae", "ea"):
+        raise ValueError(f"unknown stats mode {mode!r} (choose 'ae' or 'ea')")
+    return PartialStats(
+        mode,
+        jnp.zeros((nb, width), jnp.float32),
+        jnp.zeros((nb,), jnp.float32),
+        jnp.zeros((nb,), jnp.float32),
+        jnp.zeros((), jnp.float32),
+        jnp.zeros((), jnp.float32),
+    )
+
+
+def stats_add(a: PartialStats, b: PartialStats) -> PartialStats:
+    """Fold two partial stats (associative up to f32 reassociation)."""
+    if a.mode != b.mode:
+        raise ValueError(f"cannot fold {a.mode!r} stats into {b.mode!r} stats")
+    return PartialStats(
+        a.mode, a.y + b.y, a.nu + b.nu, a.energy + b.energy,
+        a.wsum + b.wsum, a.count + b.count,
+    )
+
+
+def ae_batch_stats(
+    codec: BQCSCodec,
+    words: jnp.ndarray,  # (B, nb, W) packed wire words of one sub-cohort batch
+    alphas: jnp.ndarray,  # (B, nb)
+    weights: jnp.ndarray,  # (B,) RAW (unnormalized) aggregation weights
+    nu_chan: Optional[jnp.ndarray] = None,  # (B, nb) channel variance
+    noise: Optional[jnp.ndarray] = None,  # (B, nb, M) sampled channel noise
+) -> PartialStats:
+    """AE sufficient statistics of one sub-cohort payload batch.
+
+    Dequantizes straight from the wire words (`decode_packed`: the uint8
+    index view never materializes), Bussgang-weights with the RAW weights,
+    and returns the batch's additive (y, nu, energy) contribution.  A zero
+    weight (padding slot / dropped client) contributes exactly nothing.
+    """
+    cb = codec.codebook
+    m = codec.cfg.m
+    deq = cb.decode_packed(words, m)  # (B, nb, M)
+    if noise is not None:
+        deq = deq + noise
+    w = bussgang.bussgang_weight(weights[:, None], alphas, cb)  # (B, nb)
+    y = jnp.sum(w[..., None] * deq, axis=0)
+    nu = bussgang.effective_noise_var(alphas, weights, cb)
+    if nu_chan is not None:
+        nu = nu + jnp.sum(jnp.square(w) * nu_chan, axis=0)
+    energy = bussgang.signal_energy(alphas, weights, m, codec.cfg.block_size)
+    return PartialStats(
+        "ae", y, nu, energy,
+        jnp.sum(weights), jnp.sum((weights > 0).astype(jnp.float32)),
+    )
+
+
+def ea_batch_stats(ghat: jnp.ndarray, weights: jnp.ndarray) -> PartialStats:
+    """EA sufficient statistics: ``ghat`` is the (B, nb, N) per-client GAMP
+    estimates of one arrival batch (decoded via the recon engine's chunk
+    streaming), folded as the raw-weighted sum."""
+    y = jnp.einsum("k,kbn->bn", weights, ghat)
+    nb = ghat.shape[1]
+    z = jnp.zeros((nb,), jnp.float32)
+    return PartialStats(
+        "ea", y, z, z,
+        jnp.sum(weights), jnp.sum((weights > 0).astype(jnp.float32)),
+    )
+
+
+def normalized_stats(stats: PartialStats):
+    """Rescales raw-weighted sums to the barrier path's rho_k = w_k / W
+    weighting: (y / W, nu / W^2, energy / W^2).  An empty round (W == 0)
+    normalizes to exact zeros -- the same zero-update the barrier blackout
+    path produces."""
+    safe = jnp.maximum(stats.wsum, 1e-30)
+    inv = jnp.where(stats.wsum > 0, 1.0 / safe, 0.0)
+    return stats.y * inv, stats.nu * inv**2, stats.energy * inv**2
+
+
+class AggregatorTree:
+    """Carry-save ``fanout``-ary reduction tree over partial stats.
+
+    Tier 0 absorbs arrival batches; every ``fanout`` folds a tier carries its
+    running sum to the parent tier and resets.  Live decode state is one
+    partial stat per tier -- O(log_fanout batches) -- and the fold order is a
+    deterministic function of the PUSH order alone, so a fixed arrival
+    sequence reproduces bit-identical sums regardless of wall-clock
+    interleaving.  ``root()`` folds the pending tiers bottom-up (tier 0
+    first), matching left-to-right pairwise summation.
+
+    Host-side orchestration object (the pushes themselves are jitted by the
+    caller); tracks ``peak_live_bytes``, the constant-memory number the
+    streaming bench records.
+    """
+
+    def __init__(self, zero: PartialStats, fanout: int = 8):
+        if fanout < 2:
+            raise ValueError(f"fanout must be >= 2, got {fanout}")
+        self.zero = zero
+        self.fanout = fanout
+        self.tiers: List[List] = []  # per tier: [running stats, folds since carry]
+        self.pushed = 0
+        self.peak_live_bytes = 0
+
+    @property
+    def live_bytes(self) -> int:
+        return len(self.tiers) * self.zero.nbytes
+
+    def push(self, stats: PartialStats) -> None:
+        self._fold(0, stats)
+        self.pushed += 1
+        self.peak_live_bytes = max(self.peak_live_bytes, self.live_bytes)
+
+    def _fold(self, tier: int, stats: PartialStats) -> None:
+        if tier == len(self.tiers):
+            self.tiers.append([self.zero, 0])
+        acc = self.tiers[tier]
+        acc[0] = stats_add(acc[0], stats)
+        acc[1] += 1
+        if acc[1] == self.fanout:
+            carried = acc[0]
+            self.tiers[tier] = [self.zero, 0]
+            self._fold(tier + 1, carried)
+
+    def root(self) -> PartialStats:
+        """Folds every pending tier into the round total (non-destructive)."""
+        total = self.zero
+        for acc, _ in self.tiers:
+            total = stats_add(total, acc)
+        return total

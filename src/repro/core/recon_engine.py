@@ -47,9 +47,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.compression import BQCSCodec
-from repro.core.gamp import GampConfig, _qem_gamp_xla, qem_gamp, qem_gamp_packed
+from repro.core.gamp import GampConfig, _qem_gamp_xla, em_gamp, qem_gamp, qem_gamp_packed
 
-__all__ = ["chunked_rows", "ea_solve_flat", "ea_decode", "ea_decode_two_phase"]
+__all__ = [
+    "chunked_rows",
+    "ea_solve_flat",
+    "ea_decode",
+    "ea_decode_two_phase",
+    "decode_from_stats",
+]
 
 
 def _pad_rows_zero(arrays, rows: int, target: int):
@@ -252,3 +258,32 @@ def ea_decode_two_phase(
     }
     agg = jnp.einsum("k,kbn->bn", rhos, ghat.reshape(k, nb, n))
     return agg, stats
+
+
+def decode_from_stats(
+    codec: BQCSCodec,
+    stats,  # core.aggregator.PartialStats (the folded round total)
+    gamp: Optional[GampConfig] = None,
+    *,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Finalizes a streamed round straight from folded partial sufficient
+    statistics (core/aggregator.py; DESIGN.md #Streaming-PS) -> (nb, N)
+    aggregated blocks.
+
+    "ea" stats already hold the raw-weighted sum of per-client GAMP
+    estimates, so finalization is just the 1/W renormalization.  "ae" stats
+    hold the Bussgang aggregate's (y, nu, energy) accumulated with RAW
+    weights; after the 1/W (linear) and 1/W^2 (quadratic) rescale this is
+    bit-for-bit the barrier AE observation up to f32 reassociation of the
+    client sums, and one EM-GAMP inversion finishes the decode exactly like
+    `reconstruction.aggregate_and_estimate`.  Jit-safe.
+    """
+    from repro.core.aggregator import normalized_stats  # deferred: layering
+    from repro.core.reconstruction import gamp_config_from  # deferred: layering
+
+    y, nu, energy = normalized_stats(stats)
+    if stats.mode == "ea":
+        return y
+    gamp = gamp or gamp_config_from(codec)
+    return em_gamp(y, nu, codec.a, gamp, init_var=energy, use_pallas=use_pallas)

@@ -17,7 +17,12 @@ over any registry model:
   * :mod:`repro.fed.server_opt` — FedAvg / FedAvgM / FedAdam server-side
     optimizers over the reconstructed aggregate;
   * :mod:`repro.fed.engine`     — the vmap(+scan-chunked) cohort round loop
-    with a Python-loop oracle for bit-exactness and benchmarking.
+    with a Python-loop oracle for bit-exactness and benchmarking;
+  * :mod:`repro.fed.stream`     — the streaming round mode: arrival-ordered
+    sub-cohort batches through a bounded ingest buffer into a carry-save
+    tree of partial Bussgang/EA sufficient statistics, with a deadline
+    cutoff that degrades into the non-participation contract
+    (DESIGN.md #Streaming-PS).
 """
 
 from repro.fed.channel import ChannelConfig, realize_uplink
@@ -25,9 +30,11 @@ from repro.fed.engine import ArrayClientData, CohortConfig, CohortEngine, TokenC
 from repro.fed.partition import PartitionConfig, partition_indices
 from repro.fed.scheduler import SchedulerConfig, SchedulerState, select_cohort
 from repro.fed.server_opt import ServerOptConfig
+from repro.fed.stream import BoundedIngestBuffer, StreamConfig, StreamingPS, stream_decode
 
 __all__ = [
     "ArrayClientData",
+    "BoundedIngestBuffer",
     "ChannelConfig",
     "CohortConfig",
     "CohortEngine",
@@ -35,8 +42,11 @@ __all__ = [
     "SchedulerConfig",
     "SchedulerState",
     "ServerOptConfig",
+    "StreamConfig",
+    "StreamingPS",
     "TokenClientData",
     "partition_indices",
     "realize_uplink",
     "select_cohort",
+    "stream_decode",
 ]

@@ -59,6 +59,14 @@ from repro.core.reconstruction import (
 from repro.fed.channel import ChannelConfig, realize_uplink
 from repro.fed.scheduler import SchedulerConfig, SchedulerState, select_cohort
 from repro.fed.server_opt import ServerOptConfig, init_server_state, server_update
+from repro.fed.stream import (
+    StreamConfig,
+    StreamingPS,
+    batch_arrivals,
+    late_discount,
+    simulate_arrivals,
+    stream_decode,
+)
 
 __all__ = ["CohortConfig", "CohortEngine", "ArrayClientData", "TokenClientData"]
 
@@ -181,9 +189,17 @@ class CohortEngine:
         sched: SchedulerConfig = SchedulerConfig(),
         chan: ChannelConfig = ChannelConfig(),
         server: ServerOptConfig = ServerOptConfig(),
+        stream: Optional[StreamConfig] = None,
     ):
         if cohort.method not in METHODS:
             raise ValueError(f"unknown method {cohort.method!r} (choose from {METHODS})")
+        if stream is not None and cohort.method not in ("fedqcs-ae", "fedqcs-ea"):
+            raise ValueError(
+                f"streaming rounds fold Bussgang/EA sufficient statistics, which "
+                f"only the fedqcs methods produce; got {cohort.method!r}"
+            )
+        if stream is not None and cohort.groups != 1:
+            raise ValueError("streaming fedqcs-ae has no group structure (groups must be 1)")
         if chan.kind != "ideal" and cohort.method != "fedqcs-ae":
             raise ValueError(
                 f"method {cohort.method!r} needs the exact codes at the PS, which "
@@ -194,6 +210,7 @@ class CohortEngine:
         if cohort.groups != 1 and (cohort.method != "fedqcs-ae" or chan.kind != "ideal"):
             raise ValueError("groups != 1 is only defined for fedqcs-ae over an ideal uplink")
         self.cohort, self.sched, self.chan, self.server = cohort, sched, chan, server
+        self.stream = stream
         self.fed_cfg = fed_cfg or FedQCSConfig()
         self.grad_fn = grad_fn
         self.data = data
@@ -229,6 +246,25 @@ class CohortEngine:
         )
         # per-round prep (effective rhos + per-client keys) in one dispatch
         self._prep_jit = jax.jit(self._prep_fn)
+        if stream is not None:
+            # One StreamingPS reused across rounds (owns the jitted folds).
+            self._stream_ps = StreamingPS(
+                self.codec,
+                mode="ae" if cohort.method == "fedqcs-ae" else "ea",
+                gamp=self.gamp,
+                stream=stream,
+                use_pallas=self.fed_cfg.use_kernels,
+                recon_chunk=self.fed_cfg.recon_chunk,
+            )
+            self._noise_keys_jit = jax.jit(
+                lambda jids, k: jax.vmap(lambda i: jax.random.fold_in(k, i))(jids)
+            )
+            self._nmse_jit = jax.jit(
+                lambda ghat, blocks, rhos: (
+                    jnp.sum(jnp.square(ghat - jnp.einsum("k,kbn->bn", rhos, blocks)))
+                    / (jnp.sum(jnp.square(jnp.einsum("k,kbn->bn", rhos, blocks))) + 1e-30)
+                )
+            )
         # blocks -> tree -> server update in one jitted apply (the per-round
         # fixed cost would otherwise be tens of eager dispatches and dominate
         # small cohorts).
@@ -285,10 +321,12 @@ class CohortEngine:
         lost).  ``key`` seeds per-client randomness (dither)."""
         payload: Dict[str, jnp.ndarray] = {}
         method = self.cohort.method
-        if method == "fedqcs-ea":
-            # EA consumes the wire words directly (packed reconstruction
-            # engine, DESIGN.md #Recon-engine): the payload carries what
-            # crosses the wire and the uint8 index view never materializes.
+        if method == "fedqcs-ea" or (method == "fedqcs-ae" and self.stream is not None):
+            # EA -- and every streaming round -- consumes the wire words
+            # directly (packed reconstruction engine / streaming ingest,
+            # DESIGN.md #Recon-engine, #Streaming-PS): the payload carries
+            # what crosses the wire and the uint8 index view never
+            # materializes.
             words, alpha, enc_res = self.codec.compress_blocks_packed(blocks, residual)
             payload["words"], payload["alpha"] = words, alpha
             new_res = jnp.where(rho > 0, enc_res, blocks + residual)
@@ -407,6 +445,8 @@ class CohortEngine:
     def run_round(self) -> Dict[str, float]:
         """One federated round; advances params/residuals/server state and
         returns the round's stats (python floats)."""
+        if self.stream is not None:
+            return self._run_round_streaming()
         t = self.round
         prev_sched = self.sched_state
         ids, rho0, new_sched = select_cohort(
@@ -441,6 +481,72 @@ class CohortEngine:
         out["participating"] = float(jnp.sum(rhos_eff > 0))
         return out
 
+    def _run_round_streaming(self) -> Dict[str, float]:
+        """Streaming round mode (DESIGN.md #Streaming-PS): same client pass,
+        but the PS folds arrival-ordered sub-cohort payload batches through
+        the bounded ingest buffer into partial sufficient statistics instead
+        of one barrier decode.  Missed-deadline clients are non-participants:
+        weight 0 (full residual carry) and un-stamped, exactly like channel
+        outage."""
+        t = self.round
+        prev_sched = self.sched_state
+        ids, rho0, new_sched = select_cohort(
+            self.sched, prev_sched, t, self.data.counts
+        )
+        kr = jax.random.fold_in(self.key, t)
+        k_chan, k_noise = jax.random.split(kr)
+        chan = self._uplink_jit(k_chan, len(ids), self.nb)
+        mask = np.asarray(chan.mask)
+        alive = (np.asarray(rho0) > 0) & (mask > 0)
+        times = simulate_arrivals(self.stream, t, len(ids), alive)
+        arrived = times <= self.stream.deadline
+        # Raw (unnormalized) weights: scheduler rho x channel mask x arrival
+        # x lateness discount; normalization happens at finalize (1/W).
+        w_raw = (
+            np.asarray(rho0, np.float64) * mask * arrived * late_discount(self.stream, times)
+        ).astype(np.float32)
+        # Channel outage OR missed deadline = failed participation: un-stamp.
+        dead = ids[(mask == 0) | ~arrived]
+        if len(dead):
+            new_sched.last_round[dead] = prev_sched.last_round[dead]
+        self.sched_state = new_sched
+        jids = jnp.asarray(ids)
+        jw = jnp.asarray(w_raw)
+        # _prep_fn's normalization of the raw weights is exactly the nmse
+        # reference weighting; the mask is already folded into w_raw.
+        rhos_eff, keys = self._prep_jit(jw, jnp.ones_like(jw), jids, kr)
+
+        batch = self.data.cohort_batch(t, ids)
+        res_c = self.residuals[jids]
+        payloads, new_res = self._client_pass(self.params, batch, res_c, jw, keys)
+
+        nu_chan = noise_keys = None
+        if self.chan.kind != "ideal":
+            nu_chan = chan.noise_var
+            noise_keys = self._noise_keys_jit(jids, k_noise)
+        batches = batch_arrivals(times, self.stream.deadline, self.stream.batch_clients)
+        ghat_blocks, sinfo = stream_decode(
+            self.codec, payloads["words"], payloads["alpha"], w_raw, batches,
+            nu_chan=nu_chan, noise_keys=noise_keys, ps=self._stream_ps,
+        )
+
+        self.residuals = self.residuals.at[jids].set(new_res)
+        self.params, self.server_state = self._apply_jit(
+            ghat_blocks, self.params, self.server_state, t
+        )
+        self.round = t + 1
+        out = {
+            k: float(v)
+            for k, v in sinfo.items()
+            if k not in ("participating",)  # recomputed below for parity
+        }
+        if self.cohort.record_nmse:
+            out["nmse"] = float(self._nmse_jit(ghat_blocks, payloads["blocks"], rhos_eff))
+        out["cohort"] = len(ids)
+        out["participating"] = float(np.sum(w_raw > 0))
+        out["arrived"] = float(np.sum(arrived))
+        return out
+
     def run(self, rounds: int) -> List[Dict[str, float]]:
         return [self.run_round() for _ in range(rounds)]
 
@@ -465,6 +571,11 @@ def _smoke_main(argv=None):
     ap.add_argument("--snr-db", type=float, default=None)
     ap.add_argument("--method", default="fedqcs-ae", choices=METHODS)
     ap.add_argument("--chunk", type=int, default=0)
+    ap.add_argument(
+        "--stream", type=int, default=0, metavar="BATCH",
+        help="streaming PS mode: sub-cohort ingest batch size (0 = barrier round)",
+    )
+    ap.add_argument("--deadline", type=float, default=8.0)
     args = ap.parse_args(argv)
 
     x, y = toy_classification()
@@ -485,6 +596,9 @@ def _smoke_main(argv=None):
         if args.snr_db is not None
         else ChannelConfig(),
         server=ServerOptConfig(kind="fedadam", lr=0.01),
+        stream=StreamConfig(batch_clients=args.stream, deadline=args.deadline)
+        if args.stream > 0
+        else None,
     )
     for i, stats in enumerate(engine.run(args.rounds)):
         print("round", i, stats)

@@ -37,7 +37,19 @@ from typing import Tuple
 
 import numpy as np
 
-__all__ = ["SchedulerConfig", "SchedulerState", "select_cohort"]
+__all__ = ["SchedulerConfig", "SchedulerState", "select_cohort", "staleness_discount"]
+
+
+def staleness_discount(staleness: np.ndarray, decay: float) -> np.ndarray:
+    """Polynomial trust discount ``(1 + staleness) ** -decay``.
+
+    Shared between the async scheduler (staleness = rounds since last
+    participation) and the streaming PS (staleness = soft-deadline overrun of
+    a late arrival, see ``fed/stream.py``): both are "older information gets
+    down-weighted" with the same knee.  Monotone non-increasing in staleness,
+    identity at staleness 0 or decay 0; negative staleness clips to 0.
+    """
+    return (1.0 + np.maximum(np.asarray(staleness, np.float64), 0.0)) ** (-decay)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,7 +103,7 @@ def select_cohort(
         staleness = np.where(
             state.last_round[ids] < 0, 0, round_idx - 1 - state.last_round[ids]
         ).clip(min=0)
-        w = w * (1.0 + staleness) ** (-cfg.staleness_decay)
+        w = w * staleness_discount(staleness, cfg.staleness_decay)
     total = w.sum()
     rhos = (w / total if total > 0 else w).astype(np.float32)
 

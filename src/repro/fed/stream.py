@@ -1,0 +1,334 @@
+"""Streaming rolling-cohort PS aggregation (DESIGN.md #Streaming-PS).
+
+Every pre-existing round shape is a barrier: one cohort, one ``gather_codes``,
+one monolithic decode over all K payloads.  This module is the Ape-X-style
+producer/consumer split of that round: clients "arrive" over simulated time
+(a deterministic latency/straggler model layered on the PR-3 scheduler's
+cohort), their payloads land in a :class:`BoundedIngestBuffer` in sub-cohort
+batches, and the :class:`StreamingPS` consumer drains the buffer into a
+carry-save :class:`~repro.core.aggregator.AggregatorTree` of partial
+Bussgang/EA sufficient statistics.  Consequences:
+
+  * PS decode state is O(tree depth) partial stats + one in-flight batch --
+    constant in the REGISTERED client count and logarithmic in the arrival
+    batch count, never O(K) payloads (the barrier's ``(C, nb, M)`` stack).
+  * Decode overlaps ingest: EA batches run their per-client GAMP inversions
+    through the recon engine's chunk streaming *as they arrive*; AE folds are
+    cheap dequant-and-accumulate with the single EM-GAMP at finalize.
+  * The round deadline degrades gracefully: whatever arrived by the cutoff is
+    decoded; non-arrivals keep their cohort slot with weight 0, so their
+    error-feedback residual absorbs the FULL carry (``engine._encode_fn``'s
+    rho = 0 branch) and the scheduler un-stamps them -- bit-identical to the
+    PR-3 non-participation contract.
+  * Late-but-before-deadline arrivals are down-weighted with the scheduler's
+    own ``staleness_discount`` (staleness = soft-deadline overrun), so
+    "stale by rounds" and "stale by seconds" share one knee.
+
+Weight normalization: the consumer cannot know the final participant set
+until the deadline, so stats fold with RAW weights and finalization rescales
+by 1/W (see ``aggregator.normalized_stats``).  The streamed result therefore
+matches the one-shot barrier decode up to f32 reassociation of the client
+sums -- the tolerance contract pinned in ``tests/test_stream.py``.
+
+Determinism: arrivals are a pure function of ``(StreamConfig.seed, round)``;
+batch admission dedups on payload identity (a redelivered batch is rejected,
+not double-counted); and the tree's fold order depends only on the admission
+order, so a fixed arrival sequence reproduces bit-identical sums.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregator
+from repro.core.compression import BQCSCodec
+from repro.core.gamp import GampConfig
+from repro.core.recon_engine import decode_from_stats, ea_solve_flat
+from repro.fed.scheduler import staleness_discount
+
+__all__ = [
+    "StreamConfig",
+    "simulate_arrivals",
+    "late_discount",
+    "batch_arrivals",
+    "BoundedIngestBuffer",
+    "StreamingPS",
+    "stream_decode",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Knobs of the streaming round.  Times are in units of the median
+    client latency (the log-normal's scale), so ``deadline=8`` means "wait
+    8x the typical client" regardless of absolute wall-clock."""
+
+    batch_clients: int = 64  # sub-cohort payload batch size (ingest unit)
+    buffer_batches: int = 8  # BoundedIngestBuffer capacity (backpressure past this)
+    fanout: int = 8  # aggregator-tree carry fanout
+    deadline: float = 8.0  # round cutoff: later arrivals are non-participants
+    soft_deadline: float = 4.0  # overrun past this is "staleness" for late_decay
+    late_decay: float = 0.0  # staleness_discount exponent for late arrivals
+    latency_sigma: float = 0.35  # log-normal latency spread
+    straggler_prob: float = 0.0  # P(client latency is multiplied by straggler_mult)
+    straggler_mult: float = 8.0
+    seed: int = 0
+
+
+def simulate_arrivals(
+    cfg: StreamConfig, round_idx: int, n: int, alive: np.ndarray
+) -> np.ndarray:
+    """Deterministic per-client arrival times (n,) for one round.
+
+    Latency is log-normal (median 1) with a heavy straggler tail; clients not
+    ``alive`` (scheduler-dropped or channel outage) never arrive (inf).
+    Pure function of (cfg.seed, round_idx) -- the 0xA881 tag keeps this
+    stream disjoint from the scheduler's and the data sampler's.
+    """
+    rng = np.random.default_rng((cfg.seed, 0xA881, round_idx))
+    lat = rng.lognormal(mean=0.0, sigma=cfg.latency_sigma, size=n)
+    if cfg.straggler_prob > 0:
+        lat = np.where(rng.random(n) < cfg.straggler_prob, lat * cfg.straggler_mult, lat)
+    return np.where(np.asarray(alive, bool), lat, np.inf)
+
+
+def late_discount(cfg: StreamConfig, times: np.ndarray) -> np.ndarray:
+    """Aggregation-weight discount for late-but-in-deadline arrivals:
+    ``staleness_discount`` over the soft-deadline overrun.  Identity when
+    ``late_decay == 0`` or the client beat the soft deadline."""
+    if cfg.late_decay <= 0:
+        return np.ones_like(np.asarray(times, np.float64))
+    overrun = np.where(np.isfinite(times), np.maximum(times - cfg.soft_deadline, 0.0), 0.0)
+    return staleness_discount(overrun, cfg.late_decay)
+
+
+def batch_arrivals(
+    times: np.ndarray, deadline: float, batch_clients: int
+) -> List[np.ndarray]:
+    """Groups the in-deadline arrivals into arrival-ordered sub-cohort payload
+    batches of ``batch_clients`` positions (the last batch may be short).
+    Ties break by cohort position (stable sort) -- deterministic."""
+    arrived = np.flatnonzero(times <= deadline)
+    order = arrived[np.argsort(times[arrived], kind="stable")]
+    return [order[i : i + batch_clients] for i in range(0, len(order), batch_clients)]
+
+
+class BoundedIngestBuffer:
+    """Bounded FIFO between arrival and the folding consumer.
+
+    ``push`` admits a batch under a content key and REJECTS redelivery: a key
+    seen before (this round) is counted in ``rejected_dup`` and never occupies
+    a slot, so a duplicated batch cannot be double-counted downstream.
+    ``push`` raises when full -- the driver must drain first (backpressure),
+    which is what bounds ingest memory.  Tracks ``peak_occupancy``.
+    """
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError(f"buffer capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._q: deque = deque()
+        self._seen: set = set()
+        self.admitted = 0
+        self.rejected_dup = 0
+        self.peak_occupancy = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    @property
+    def full(self) -> bool:
+        return len(self._q) >= self.capacity
+
+    def push(self, key: bytes, item) -> bool:
+        """Admit ``item`` under ``key``; False (rejected) for a duplicate."""
+        if key in self._seen:
+            self.rejected_dup += 1
+            return False
+        if self.full:
+            raise RuntimeError(
+                f"ingest buffer full ({self.capacity} batches): drain before pushing"
+            )
+        self._seen.add(key)
+        self._q.append(item)
+        self.admitted += 1
+        self.peak_occupancy = max(self.peak_occupancy, len(self._q))
+        return True
+
+    def pop(self):
+        return self._q.popleft()
+
+
+class StreamingPS:
+    """The consumer: folds gathered payload batches into the aggregator tree
+    and finalizes the round decode from the folded root.
+
+    Holds the jitted fold/finalize functions, so one instance should be
+    reused across rounds (the engine owns one); ``begin_round`` resets the
+    tree.  Batches must be padded to a fixed ``batch_clients`` width by the
+    caller (zero-weight pad slots contribute exactly nothing) so every fold
+    hits the same compiled shape.
+    """
+
+    def __init__(
+        self,
+        codec: BQCSCodec,
+        mode: str = "ae",
+        gamp: Optional[GampConfig] = None,
+        stream: StreamConfig = StreamConfig(),
+        use_pallas: bool = False,
+        recon_chunk: int = 0,
+    ):
+        if mode not in ("ae", "ea"):
+            raise ValueError(f"unknown streaming mode {mode!r} (choose 'ae' or 'ea')")
+        from repro.core.reconstruction import gamp_config_from
+
+        self.codec = codec
+        self.mode = mode
+        self.gamp = gamp or gamp_config_from(codec)
+        self.stream = stream
+        self.tree: Optional[aggregator.AggregatorTree] = None
+
+        def fold_ae_ideal(words, alphas, w):
+            return aggregator.ae_batch_stats(codec, words, alphas, w)
+
+        def fold_ae_noisy(words, alphas, w, nu_chan, keys):
+            # Per-CLIENT noise keys (fold_in of the round noise key by client
+            # id), so the draw is invariant to how arrivals batch up.
+            m = codec.cfg.m
+            nb = alphas.shape[1]
+            noise = jax.vmap(lambda k: jax.random.normal(k, (nb, m)))(keys)
+            noise = noise * jnp.sqrt(nu_chan)[..., None]
+            return aggregator.ae_batch_stats(codec, words, alphas, w, nu_chan, noise)
+
+        def fold_ea(words, alphas, w):
+            # Decode-overlapped-with-ingest: this batch's per-client GAMP
+            # problems stream through the recon engine's chunked solver NOW,
+            # while later arrivals are still in flight.
+            b, nb = alphas.shape
+            ghat = ea_solve_flat(
+                codec,
+                words.reshape((b * nb,) + words.shape[2:]),
+                alphas.reshape(b * nb),
+                self.gamp,
+                packed=True,
+                use_pallas=use_pallas,
+                chunk=recon_chunk,
+            )
+            return aggregator.ea_batch_stats(ghat.reshape(b, nb, -1), w)
+
+        self._fold_ae_ideal = jax.jit(fold_ae_ideal)
+        self._fold_ae_noisy = jax.jit(fold_ae_noisy)
+        self._fold_ea = jax.jit(fold_ea)
+        self._final = jax.jit(
+            lambda stats: decode_from_stats(codec, stats, self.gamp, use_pallas=use_pallas)
+        )
+
+    def begin_round(self, nb: int) -> None:
+        width = self.codec.cfg.m if self.mode == "ae" else self.codec.cfg.block_size
+        self.tree = aggregator.AggregatorTree(
+            aggregator.zero_stats(self.mode, nb, width), fanout=self.stream.fanout
+        )
+
+    def fold_batch(self, words, alphas, weights, nu_chan=None, noise_keys=None) -> None:
+        """Fold one gathered (padded) sub-cohort batch into the tree."""
+        if self.mode == "ea":
+            stats = self._fold_ea(words, alphas, weights)
+        elif nu_chan is None:
+            stats = self._fold_ae_ideal(words, alphas, weights)
+        else:
+            stats = self._fold_ae_noisy(words, alphas, weights, nu_chan, noise_keys)
+        self.tree.push(stats)
+
+    def finalize(self) -> Tuple[jnp.ndarray, aggregator.PartialStats]:
+        """Folds the pending tiers and decodes -> ((nb, N) blocks, root stats).
+        An empty round (nothing arrived) short-circuits to the exact zero
+        update, the same graceful degradation as the barrier blackout path."""
+        root = self.tree.root()
+        if float(root.count) == 0:
+            nb = root.y.shape[0]
+            return jnp.zeros((nb, self.codec.cfg.block_size), jnp.float32), root
+        return self._final(root), root
+
+
+def stream_decode(
+    codec: BQCSCodec,
+    words: jnp.ndarray,  # (C, nb, W) packed wire words of the whole cohort
+    alphas: jnp.ndarray,  # (C, nb)
+    weights: np.ndarray,  # (C,) RAW weights (0 = non-participant)
+    batches: List[np.ndarray],  # arrival-ordered position batches
+    *,
+    mode: str = "ae",
+    stream: Optional[StreamConfig] = None,
+    gamp: Optional[GampConfig] = None,
+    nu_chan: Optional[jnp.ndarray] = None,  # (C, nb) channel variance (noisy AE)
+    noise_keys: Optional[jnp.ndarray] = None,  # (C,) per-client PRNG keys
+    use_pallas: bool = False,
+    recon_chunk: int = 0,
+    ps: Optional[StreamingPS] = None,
+) -> Tuple[jnp.ndarray, Dict[str, float]]:
+    """One streamed round, driven end to end: producers push each arrival
+    batch into the bounded buffer (draining one batch first when full --
+    backpressure), the consumer folds drained batches into the tree, and the
+    round finalizes from the folded root.
+
+    Single-host deterministic simulation of the producer/consumer split; the
+    testable unit for fault injection (``batches`` may be reordered,
+    duplicated, or partially dropped by the caller).  Returns
+    ((nb, N) aggregated blocks, info dict).
+    """
+    if ps is None:
+        ps = StreamingPS(
+            codec, mode, gamp, stream or StreamConfig(),
+            use_pallas=use_pallas, recon_chunk=recon_chunk,
+        )
+    cfg = ps.stream
+    w_np = np.asarray(weights, np.float32)
+    nb = alphas.shape[1]
+    ps.begin_round(nb)
+    buf = BoundedIngestBuffer(cfg.buffer_batches)
+
+    def consume_one():
+        pos, valid = buf.pop()
+        w_b = jnp.asarray(w_np[pos] * valid)
+        ps.fold_batch(
+            words[pos],
+            alphas[pos],
+            w_b,
+            None if nu_chan is None else nu_chan[pos],
+            None if noise_keys is None else noise_keys[pos],
+        )
+
+    for pos in batches:
+        pos = np.asarray(pos, np.int64)
+        key = pos.tobytes()  # content identity: a redelivered batch dedups
+        pad = cfg.batch_clients - len(pos)
+        if pad < 0:
+            raise ValueError(
+                f"batch of {len(pos)} clients exceeds batch_clients={cfg.batch_clients}"
+            )
+        valid = np.concatenate([np.ones(len(pos), np.float32), np.zeros(pad, np.float32)])
+        padded = np.concatenate([pos, np.full(pad, pos[0] if len(pos) else 0, np.int64)])
+        if buf.full:
+            consume_one()  # backpressure: bounded ingest memory
+        buf.push(key, (padded, valid))
+    while len(buf):
+        consume_one()
+
+    ghat, root = ps.finalize()
+    info = {
+        "batches_admitted": buf.admitted,
+        "batches_rejected_dup": buf.rejected_dup,
+        "buffer_peak_occupancy": buf.peak_occupancy,
+        "tree_tiers": len(ps.tree.tiers),
+        "peak_live_stats_bytes": ps.tree.peak_live_bytes,
+        "participating": float(root.count),
+        "weight_sum": float(root.wsum),
+    }
+    return ghat, info

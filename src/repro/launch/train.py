@@ -62,6 +62,13 @@ def main():
     ap.add_argument("--sample-frac", type=float, default=1.0)
     ap.add_argument("--dropout", type=float, default=0.0,
                     help="per-round straggler probability")
+    ap.add_argument("--stream", type=int, default=0, metavar="BATCH",
+                    help="streaming PS round mode: fold arrival batches of "
+                         "BATCH clients (0 = one-shot barrier; "
+                         "DESIGN.md #Streaming-PS)")
+    ap.add_argument("--deadline", type=float, default=8.0,
+                    help="streaming round deadline (latency units); late "
+                         "clients carry full residuals")
     ap.add_argument("--scheduler", default=None,
                     choices=["full", "uniform", "async"],
                     help="default: uniform when --sample-frac < 1, else full")
@@ -134,6 +141,7 @@ def run_fed_cohort(args, cfg):
     from repro.fed.engine import CohortConfig, CohortEngine, TokenClientData
     from repro.fed.scheduler import SchedulerConfig
     from repro.fed.server_opt import ServerOptConfig
+    from repro.fed.stream import StreamConfig
     from repro.models import model
 
     fed = FedQCSConfig(block_size=255, reduction_ratio=args.R, bits=args.Q,
@@ -155,6 +163,8 @@ def run_fed_cohort(args, cfg):
         chan=(ChannelConfig(kind="awgn", snr_db=args.snr_db)
               if args.snr_db is not None else ChannelConfig()),
         server=ServerOptConfig(kind=args.server_opt, lr=args.lr),
+        stream=(StreamConfig(batch_clients=args.stream, deadline=args.deadline)
+                if args.stream > 0 else None),
     )
     probe = TokenDataset(cfg.vocab_size, batch=16, seq=args.seq, seed=123).get_batch(0)
     eval_loss = jax.jit(lambda p: model.train_loss(p, probe, cfg))

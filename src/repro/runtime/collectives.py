@@ -45,7 +45,7 @@ from repro.core.gamp import GampConfig, em_gamp
 from repro.core.reconstruction import estimate_and_aggregate_packed
 from repro.models.sharding import cs
 
-__all__ = ["fedqcs_pod_allreduce"]
+__all__ = ["fedqcs_pod_allreduce", "fedqcs_partial_fold", "fedqcs_partial_finalize"]
 
 
 def fedqcs_pod_allreduce(
@@ -244,6 +244,45 @@ def make_sharded_allreduce(codec: BQCSCodec, mesh, local_shapes, nbar_local: int
             return (new_res, *outs)
 
     return body  # steps.py wraps this with jax.shard_map (needs param specs)
+
+
+def fedqcs_partial_fold(
+    stats,  # core.aggregator.PartialStats or None (None starts a round)
+    words: jnp.ndarray,  # (B, nb, W) packed wire words of one payload batch
+    alphas: jnp.ndarray,  # (B, nb)
+    weights: jnp.ndarray,  # (B,) RAW (unnormalized) aggregation weights
+    codec: BQCSCodec,
+    nu_chan: jnp.ndarray | None = None,  # (B, nb) channel variance
+    noise: jnp.ndarray | None = None,  # (B, nb, M) sampled channel noise
+):
+    """Partial-aggregation entry point beside gather_codes/psum_dequant
+    (DESIGN.md #Streaming-PS): folds one gathered sub-cohort payload batch
+    into running AE sufficient statistics and returns the new running stats.
+
+    This is the third wire shape: where gather_codes ships every payload to
+    every pod and psum_dequant all-reduces one dequantized sum, partial folds
+    let arrival-ordered SUBSETS of the cohort aggregate early -- the building
+    block for the streaming PS (fed/stream.py) and for MIMO-MAC partial
+    aggregation, where a superimposed sub-cohort reception IS a partial stat.
+    Weights are RAW; finalize renormalizes (aggregator.normalized_stats).
+    Jit-safe and associative: fold order changes nothing beyond f32
+    reassociation.
+    """
+    from repro.core import aggregator  # deferred: keep collectives import-light
+
+    batch = aggregator.ae_batch_stats(codec, words, alphas, weights, nu_chan, noise)
+    return batch if stats is None else aggregator.stats_add(stats, batch)
+
+
+def fedqcs_partial_finalize(stats, codec: BQCSCodec, gamp: GampConfig | None = None):
+    """Decodes the round from folded partial stats -> (nb, N) aggregated
+    blocks: the streaming counterpart of `_reconstruct` (one EM-GAMP on the
+    renormalized Bussgang observation)."""
+    from repro.core import recon_engine  # deferred: keep collectives import-light
+
+    return recon_engine.decode_from_stats(
+        codec, stats, gamp, use_pallas=codec.cfg.use_kernels
+    )
 
 
 def _reconstruct(y, nu, energy, codec: BQCSCodec) -> jnp.ndarray:

@@ -420,3 +420,74 @@ def test_engine_round_with_codebook_axis(method, fam):
     stats = engine.run_round()
     assert np.isfinite(stats["nmse"]), stats
     assert stats["nmse"] < 1.5, stats
+
+
+# ---------------------------------------------------------------------------
+# wire roundtrip property tests: every family x Q in 1..8 x lane counts that
+# do NOT fill the last uint32 word (the word-slack paths)
+# ---------------------------------------------------------------------------
+
+try:  # optional dev dependency (pyproject [dev] extra)
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:  # property tests skip via importorskip
+    from hypothesis_stub import hypothesis, st
+
+import functools
+
+from repro.core.codebook import VectorCodebook
+
+
+@functools.lru_cache(maxsize=None)
+def _lm_cb(bits):
+    return as_codebook(design_lloyd_max(bits))
+
+
+@functools.lru_cache(maxsize=None)
+def _du_cb(bits, m, seed):
+    return design_dithered_uniform(bits, m, seed)
+
+
+@functools.lru_cache(maxsize=None)
+def _vq_cb(bits, dim, seed):
+    # The wire layer only reads (bits, dim, n_levels) + a centroid table, so
+    # random centroids stand in for the (slow) k-means design here.
+    rng = np.random.default_rng((seed, 0x70))
+    n_lev = 1 << bits
+    return VectorCodebook(
+        family="vq", bits=bits, dim=dim, n_levels=n_lev, gamma=0.5, psi=0.5,
+        centroids=rng.normal(size=(n_lev, dim)),
+    )
+
+
+@hypothesis.given(
+    family=st.sampled_from(["lloyd_max", "dithered_uniform", "vq"]),
+    bits=st.integers(1, 8),
+    lanes=st.integers(1, 97),
+    nb=st.integers(1, 3),
+    dim=st.integers(2, 3),
+    seed=st.integers(0, 99),
+)
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_wire_roundtrip_all_families(family, bits, lanes, nb, dim, seed):
+    """pack -> unpack is the identity and packed-domain dequantization equals
+    index-domain dequantization, across all three codebook families, every
+    wire width Q in 1..8, and arbitrary (non-word-multiple) lane counts."""
+    if family == "vq":
+        m = lanes * dim  # one index covers `dim` measurements
+        cb = _vq_cb(bits, dim, seed)
+    else:
+        m = lanes
+        cb = _lm_cb(bits) if family == "lloyd_max" else _du_cb(bits, m, seed)
+    assert cb.n_codes(m) == lanes
+    rng = np.random.default_rng((seed, bits, lanes))
+    codes = jnp.asarray(rng.integers(0, cb.n_levels, size=(nb, lanes)), jnp.uint8)
+    words = pack_codes(codes, cb.bits)
+    assert words.dtype == jnp.uint32
+    assert words.shape == (nb, packed_width(lanes, cb.bits))
+    np.testing.assert_array_equal(
+        np.asarray(unpack_codes(words, cb.bits, lanes)), np.asarray(codes)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(cb.decode_packed(words, m)), np.asarray(cb.decode(codes, m))
+    )

@@ -16,7 +16,12 @@ from repro.fed.engine import (
     TokenClientData,
 )
 from repro.fed.partition import PartitionConfig, partition_indices, partition_stats
-from repro.fed.scheduler import SchedulerConfig, SchedulerState, select_cohort
+from repro.fed.scheduler import (
+    SchedulerConfig,
+    SchedulerState,
+    select_cohort,
+    staleness_discount,
+)
 from repro.fed.server_opt import ServerOptConfig
 from repro.fed.toy import toy_classification, toy_loss, toy_params
 
@@ -405,3 +410,104 @@ def test_mnist_mlp_1000_client_round():
     assert stats["nu_channel"] > 0  # the uplink term reached em_gamp
     assert np.isfinite(stats["nmse"])
     assert all(np.isfinite(np.asarray(l)).all() for l in jax.tree_util.tree_leaves(engine.params))
+
+
+# ---------------------------------------------------------------------------
+# scheduler property tests + channel edge regimes (streaming-PS hardening)
+# ---------------------------------------------------------------------------
+
+try:  # optional dev dependency (pyproject [dev] extra)
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:  # property tests skip via importorskip
+    from hypothesis_stub import hypothesis, st
+
+
+@hypothesis.given(
+    kind=st.sampled_from(["full", "uniform", "async"]),
+    clients=st.integers(1, 40),
+    sample_frac=st.floats(0.05, 1.0),
+    dropout=st.floats(0.0, 1.0),
+    decay=st.floats(0.0, 3.0),
+    round_idx=st.integers(0, 6),
+    seed=st.integers(0, 999),
+)
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_scheduler_weight_invariants(
+    kind, clients, sample_frac, dropout, decay, round_idx, seed
+):
+    """Invariants over every scheduler kind and knob draw: cohort ids are
+    unique, rhos are nonnegative and renormalize to exactly 1 (or all-zero on
+    a total blackout), and the participation stamps are EXACTLY the rho > 0
+    support -- a dropped/outage slot is never stamped as participation."""
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(1, 50, size=clients)
+    state = SchedulerState.init(clients)
+    if round_idx > 0:  # arbitrary prior history, strictly before this round
+        state.last_round[:] = rng.integers(-1, round_idx, size=clients)
+    prior = state.last_round.copy()
+    cfg = SchedulerConfig(
+        kind=kind, sample_frac=sample_frac, dropout_prob=dropout,
+        staleness_decay=decay, seed=seed,
+    )
+    ids, rhos, new = select_cohort(cfg, state, round_idx, counts)
+    assert len(np.unique(ids)) == len(ids)
+    if kind in ("uniform", "async"):
+        assert len(ids) == min(max(1, int(np.ceil(sample_frac * clients))), clients)
+    assert rhos.shape == ids.shape and np.all(rhos >= 0)
+    total = float(rhos.sum())
+    assert total == pytest.approx(1.0, abs=1e-5) or total == 0.0
+    stamped = np.flatnonzero(new.last_round == round_idx)
+    np.testing.assert_array_equal(np.sort(stamped), np.sort(ids[rhos > 0]))
+    assert np.intersect1d(stamped, ids[rhos == 0]).size == 0
+    untouched = np.setdiff1d(np.arange(clients), ids[rhos > 0])
+    np.testing.assert_array_equal(new.last_round[untouched], prior[untouched])
+
+
+@hypothesis.given(
+    decay=st.floats(0.0, 4.0),
+    staleness=st.lists(st.floats(0.0, 1e3), min_size=2, max_size=16),
+)
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_staleness_discount_monotone(decay, staleness):
+    """The shared discount (async scheduler + streaming late arrivals) is
+    monotone non-increasing in staleness, bounded in (0, 1], and the
+    identity at staleness 0 or decay 0."""
+    s = np.sort(np.asarray(staleness))
+    d = staleness_discount(s, decay)
+    assert np.all(np.diff(d) <= 1e-12)
+    assert np.all((d > 0) & (d <= 1.0))
+    assert staleness_discount(np.zeros(1), decay)[0] == 1.0
+    np.testing.assert_array_equal(staleness_discount(s, 0.0), 1.0)
+
+
+def test_awgn_infinite_snr_is_ideal_bitexact():
+    """SNR -> inf degrades the awgn uplink to the ideal one bit-exactly
+    (zero added variance, everyone alive) -- the sweep's regime boundary."""
+    key = jax.random.PRNGKey(3)
+    ideal = realize_uplink(ChannelConfig(kind="ideal"), key, 7, 5)
+    awgn = realize_uplink(ChannelConfig(kind="awgn", snr_db=np.inf), key, 7, 5)
+    assert snr_noise_var(np.inf) == 0.0
+    np.testing.assert_array_equal(
+        np.asarray(awgn.noise_var), np.asarray(ideal.noise_var)
+    )
+    np.testing.assert_array_equal(np.asarray(awgn.mask), np.asarray(ideal.mask))
+
+
+def test_rayleigh_fixed_key_deterministic_across_jit():
+    """A fixed key gives the same block-fading draw whether realize_uplink
+    runs eagerly or jitted (the frozen config is a static argument) -- the
+    determinism the engine's loop/vmap bit-exactness rests on."""
+    cfg = ChannelConfig(kind="rayleigh", snr_db=10.0)
+    key = jax.random.PRNGKey(7)
+    eager = realize_uplink(cfg, key, 64, 3)
+    jit_fn = jax.jit(realize_uplink, static_argnums=(0, 2, 3))
+    jitted = jit_fn(cfg, key, 64, 3)
+    np.testing.assert_array_equal(
+        np.asarray(eager.noise_var), np.asarray(jitted.noise_var)
+    )
+    np.testing.assert_array_equal(np.asarray(eager.mask), np.asarray(jitted.mask))
+    again = jit_fn(cfg, key, 64, 3)
+    np.testing.assert_array_equal(
+        np.asarray(jitted.noise_var), np.asarray(again.noise_var)
+    )

@@ -154,3 +154,55 @@ def test_moe_combine_conserves_weighting():
     p0 = jax.tree_util.tree_map(jnp.zeros_like, p)
     y0 = moe_mod.apply_moe({"router": p["router"], "experts": p0["experts"]}, x, cfg)
     np.testing.assert_array_equal(np.asarray(y0), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# fed-cohort grad path (launch/train.py --fed-cohort feeds jax.grad of
+# train_loss into the cohort engine's flatten_to_blocks wire)
+# ---------------------------------------------------------------------------
+
+FED_COHORT_ARCHS = ["qwen3-0.6b", "mamba2-1.3b", "qwen3-moe-235b-a22b"]
+
+
+@pytest.mark.parametrize("arch", FED_COHORT_ARCHS)
+def test_fed_cohort_grad_smoke(arch):
+    """The exact composition --fed-cohort runs per client: grad of train_loss
+    on a token batch must mirror the param tree (same structure, shapes,
+    dtypes) with every leaf finite and at least one nonzero."""
+    cfg = smoke_config(arch)
+    params = M.init_params(cfg, KEY)
+    batch = _batch(cfg, b=2, s=16)
+    grads = jax.grad(lambda p, b: M.train_loss(p, b, cfg))(params, batch)
+    assert (jax.tree_util.tree_structure(grads)
+            == jax.tree_util.tree_structure(params))
+    for g, p in zip(jax.tree.leaves(grads), jax.tree.leaves(params)):
+        assert g.shape == p.shape and g.dtype == p.dtype
+        assert np.isfinite(np.asarray(g)).all()
+    assert any(float(jnp.abs(g).max()) > 0 for g in jax.tree.leaves(grads))
+
+
+@pytest.mark.parametrize("arch", FED_COHORT_ARCHS)
+def test_fed_cohort_grad_blocks_roundtrip(arch):
+    """Grad trees survive the engine's wire layout: flatten_to_blocks at the
+    fed-cohort block size then blocks_to_tree is the identity, and the same
+    grad fn vmaps over a client batch axis (the engine's cohort axis)."""
+    from repro.core.compression import blocks_to_tree, flatten_to_blocks
+
+    cfg = smoke_config(arch)
+    params = M.init_params(cfg, KEY)
+    grad_fn = jax.grad(lambda p, b: M.train_loss(p, b, cfg))
+    grads = grad_fn(params, _batch(cfg, b=1, s=16))
+    blocks, spec, nbar = flatten_to_blocks(grads, 255)
+    assert blocks.ndim == 2 and blocks.shape[1] == 255
+    back = blocks_to_tree(blocks, spec, nbar)
+    for g, r in zip(jax.tree.leaves(grads), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+    # cohort axis: 3 clients' token batches through one vmapped grad pass
+    tokens = jnp.stack(
+        [_batch(cfg, b=1, s=16)["tokens"] + k for k in range(3)]
+    ) % cfg.vocab_size
+    cohort = {"tokens": tokens, "labels": tokens}
+    gb = jax.vmap(grad_fn, in_axes=(None, 0))(params, cohort)
+    for g, leaf in zip(jax.tree.leaves(grads), jax.tree.leaves(gb)):
+        assert leaf.shape == (3,) + g.shape
+        assert np.isfinite(np.asarray(leaf)).all()

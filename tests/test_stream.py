@@ -1,0 +1,472 @@
+"""Streaming-PS tests (DESIGN.md #Streaming-PS): the partial-stat algebra,
+the carry-save aggregator tree's memory bound, the pinned streamed-vs-barrier
+tolerance contract, fault injection (drop / duplicate / reorder), deadline
+degradation into the non-participation contract, and the bounded ingest
+buffer's backpressure semantics."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregator, bussgang
+from repro.core.compression import BQCSCodec, FedQCSConfig
+from repro.core.recon_engine import decode_from_stats
+from repro.core.reconstruction import (
+    aggregate_and_estimate,
+    estimate_and_aggregate_packed,
+    gamp_config_from,
+)
+from repro.fed.channel import ChannelConfig
+from repro.fed.engine import ArrayClientData, CohortConfig, CohortEngine
+from repro.fed.partition import PartitionConfig, partition_indices
+from repro.fed.scheduler import SchedulerConfig
+from repro.fed.server_opt import ServerOptConfig
+from repro.fed.stream import (
+    BoundedIngestBuffer,
+    StreamConfig,
+    batch_arrivals,
+    late_discount,
+    simulate_arrivals,
+    stream_decode,
+)
+from repro.fed.toy import toy_classification, toy_loss, toy_params
+from repro.runtime.collectives import fedqcs_partial_fold, fedqcs_partial_finalize
+
+jax.config.update("jax_platform_name", "cpu")
+
+FED = FedQCSConfig(block_size=64, reduction_ratio=2, bits=3, s_ratio=0.2,
+                   gamp_iters=10, gamp_variance_mode="scalar")
+
+# The PINNED streamed-vs-barrier tolerance contract: partial-aggregation
+# order may change the decoded aggregate only through f32 reassociation of
+# the client sums, so decoded aggregates agree to NMSE <= 1e-8 (observed
+# ~1e-13 at these sizes) and entrywise to the usual reconstruction round-off.
+NMSE_TOL = 1e-8
+ATOL = 1e-5
+
+
+def _nmse(a, b):
+    return float(jnp.sum(jnp.square(a - b)) / (jnp.sum(jnp.square(b)) + 1e-30))
+
+
+@pytest.fixture(scope="module")
+def payload():
+    """One 13-client cohort's wire payloads + raw weights (one weight zero:
+    a dropped client riding in the cohort arrays)."""
+    codec = BQCSCodec(FED)
+    c, nb = 13, 3
+    blocks = jax.random.normal(jax.random.PRNGKey(0), (c, nb, FED.block_size))
+    res = jnp.zeros_like(blocks)
+    words, alphas, _ = jax.vmap(codec.compress_blocks_packed)(blocks, res)
+    codes = jax.vmap(codec.compress_blocks)(blocks, res)[0]
+    w = np.abs(np.random.default_rng(0).normal(size=c)).astype(np.float32)
+    w[3] = 0.0
+    return codec, words, codes, alphas, w
+
+
+def _scfg(**kw):
+    defaults = dict(batch_clients=4, buffer_batches=2, fanout=2)
+    defaults.update(kw)
+    return StreamConfig(**defaults)
+
+
+def _batches(c, size=4):
+    times = np.arange(c, dtype=float) * 0.1
+    return batch_arrivals(times, 1e9, size)
+
+
+# ---------------------------------------------------------------------------
+# partial-stat algebra
+# ---------------------------------------------------------------------------
+
+
+def test_ae_partial_fold_matches_oneshot_stats(payload):
+    """Folding per-batch AE sufficient statistics equals the one-shot stats
+    over the full cohort, and their normalization equals the barrier
+    Bussgang aggregate built from the normalized rhos."""
+    codec, words, _, alphas, w = payload
+    jw = jnp.asarray(w)
+    one = aggregator.ae_batch_stats(codec, words, alphas, jw)
+    folded = None
+    for sl in (slice(0, 5), slice(5, 9), slice(9, 13)):
+        part = aggregator.ae_batch_stats(codec, words[sl], alphas[sl], jw[sl])
+        folded = part if folded is None else aggregator.stats_add(folded, part)
+    for a, b in zip(jax.tree_util.tree_leaves(folded), jax.tree_util.tree_leaves(one)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+    rhos = jnp.asarray(w / w.sum())
+    y_n, nu_n, en_n = aggregator.normalized_stats(folded)
+    q = codec.codebook
+    np.testing.assert_allclose(
+        np.asarray(y_n),
+        np.asarray(bussgang.aggregate_packed(words, alphas, rhos, q, FED.m)),
+        rtol=1e-4, atol=1e-6,
+    )
+    np.testing.assert_allclose(
+        np.asarray(nu_n),
+        np.asarray(bussgang.effective_noise_var(alphas, rhos, q)),
+        rtol=1e-4,
+    )
+    np.testing.assert_allclose(
+        np.asarray(en_n),
+        np.asarray(bussgang.signal_energy(alphas, rhos, FED.m, FED.block_size)),
+        rtol=1e-4,
+    )
+    assert float(folded.count) == 12.0  # the w == 0 slot is not a participant
+
+
+def test_zero_weight_slots_contribute_nothing(payload):
+    """A zero-weight (padding / dropped) slot leaves every statistic
+    unchanged -- the contract that makes fixed-shape batch padding sound."""
+    codec, words, _, alphas, w = payload
+    jw = jnp.asarray(w[:4])
+    base = aggregator.ae_batch_stats(codec, words[:4], alphas[:4], jw)
+    padded = aggregator.ae_batch_stats(
+        codec,
+        jnp.concatenate([words[:4], words[7:8]]),
+        jnp.concatenate([alphas[:4], alphas[7:8]]),
+        jnp.concatenate([jw, jnp.zeros((1,), jnp.float32)]),
+    )
+    for a, b in zip(jax.tree_util.tree_leaves(base), jax.tree_util.tree_leaves(padded)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7)
+
+
+def test_aggregator_tree_matches_linear_fold_and_bounds_memory():
+    """The carry-save tree's root equals the plain left-to-right fold, and
+    live stats stay O(log batches): 37 pushes at fanout 4 never hold more
+    than a handful of tiers, far below the 37 a barrier would stack."""
+    rng = np.random.default_rng(1)
+    zero = aggregator.zero_stats("ea", 2, 8)
+    tree = aggregator.AggregatorTree(zero, fanout=4)
+    linear = zero
+    for _ in range(37):
+        s = aggregator.PartialStats(
+            "ea",
+            jnp.asarray(rng.normal(size=(2, 8)), jnp.float32),
+            jnp.zeros((2,), jnp.float32),
+            jnp.zeros((2,), jnp.float32),
+            jnp.asarray(rng.random(), jnp.float32),
+            jnp.ones((), jnp.float32),
+        )
+        tree.push(s)
+        linear = aggregator.stats_add(linear, s)
+    np.testing.assert_allclose(
+        np.asarray(tree.root().y), np.asarray(linear.y), rtol=1e-5, atol=1e-6
+    )
+    assert tree.pushed == 37
+    assert len(tree.tiers) <= 4  # ceil(log4 37) + 1
+    assert tree.peak_live_bytes <= 4 * zero.nbytes
+    assert tree.peak_live_bytes < 37 * zero.nbytes
+
+
+def test_stats_mode_mismatch_raises():
+    a = aggregator.zero_stats("ae", 1, 8)
+    b = aggregator.zero_stats("ea", 1, 8)
+    with pytest.raises(ValueError, match="fold"):
+        aggregator.stats_add(a, b)
+    with pytest.raises(ValueError, match="mode"):
+        aggregator.zero_stats("nope", 1, 8)
+
+
+# ---------------------------------------------------------------------------
+# streamed decode vs the one-shot barrier (the pinned contract)
+# ---------------------------------------------------------------------------
+
+
+def test_stream_decode_matches_barrier_ae(payload):
+    codec, words, codes, alphas, w = payload
+    rhos = jnp.asarray(w / w.sum())
+    g_bar = aggregate_and_estimate(codec, codes, alphas, rhos, gamp=gamp_config_from(codec))
+    g_str, info = stream_decode(
+        codec, words, alphas, w, _batches(13), mode="ae", stream=_scfg()
+    )
+    assert _nmse(g_str, g_bar) <= NMSE_TOL
+    np.testing.assert_allclose(np.asarray(g_str), np.asarray(g_bar), atol=ATOL)
+    assert info["participating"] == 12.0
+    assert info["batches_admitted"] == 4
+
+
+def test_stream_decode_matches_barrier_ea(payload):
+    codec, words, _, alphas, w = payload
+    rhos = jnp.asarray(w / w.sum())
+    g_bar = estimate_and_aggregate_packed(codec, words, alphas, rhos)
+    g_str, _ = stream_decode(
+        codec, words, alphas, w, _batches(13), mode="ea", stream=_scfg()
+    )
+    assert _nmse(g_str, g_bar) <= NMSE_TOL
+    np.testing.assert_allclose(np.asarray(g_str), np.asarray(g_bar), atol=ATOL)
+
+
+def test_stream_reorder_within_contract(payload):
+    """Sub-cohort batches arriving in ANY order decode the same aggregate
+    (fold order changes only f32 reassociation)."""
+    codec, words, _, alphas, w = payload
+    batches = _batches(13)
+    ref, _ = stream_decode(codec, words, alphas, w, batches, stream=_scfg())
+    for perm in ([3, 1, 0, 2], [1, 3, 2, 0]):
+        got, _ = stream_decode(
+            codec, words, alphas, w, [batches[i] for i in perm], stream=_scfg()
+        )
+        assert _nmse(got, ref) <= NMSE_TOL
+
+
+def test_stream_duplicate_batch_rejected_not_double_counted(payload):
+    """A redelivered batch is rejected at buffer admission: the decode is
+    BITWISE identical to the clean round, with the rejection counted."""
+    codec, words, _, alphas, w = payload
+    batches = _batches(13)
+    ref, info0 = stream_decode(codec, words, alphas, w, batches, stream=_scfg())
+    dup = batches[:1] + batches  # batch 0 delivered twice
+    got, info = stream_decode(codec, words, alphas, w, dup, stream=_scfg())
+    assert info["batches_rejected_dup"] == 1
+    assert info["batches_admitted"] == info0["batches_admitted"]
+    assert bool(jnp.all(got == ref))
+
+
+def test_stream_dropped_batch_degrades_to_nonparticipation(payload):
+    """A batch that never arrives decodes as if its clients had weight 0 --
+    exactly the barrier aggregate over the surviving sub-cohort."""
+    codec, words, codes, alphas, w = payload
+    batches = _batches(13)
+    survived = batches[:2] + batches[3:]  # batch 2 lost
+    w_eff = w.copy()
+    w_eff[batches[2]] = 0.0
+    rhos = jnp.asarray(w_eff / w_eff.sum())
+    g_bar = aggregate_and_estimate(codec, codes, alphas, rhos, gamp=gamp_config_from(codec))
+    g_str, info = stream_decode(codec, words, alphas, w, survived, stream=_scfg())
+    assert _nmse(g_str, g_bar) <= NMSE_TOL
+    assert info["participating"] == float(np.sum(w_eff > 0))
+
+
+def test_stream_empty_round_is_exact_zero_update(payload):
+    """Nothing arrived by the deadline: graceful degradation to the exact
+    zero aggregate (the barrier blackout behavior), no GAMP run."""
+    codec, words, _, alphas, w = payload
+    g, info = stream_decode(codec, words, alphas, w, [], stream=_scfg())
+    np.testing.assert_array_equal(np.asarray(g), 0.0)
+    assert info["participating"] == 0.0
+
+
+def test_noisy_stream_is_batching_invariant(payload):
+    """Per-CLIENT noise keys make the channel draw independent of how
+    arrivals batch up: 4-client batches and one 13-client batch fold the
+    same noisy observation (up to reassociation)."""
+    codec, words, _, alphas, w = payload
+    nu_chan = jnp.full(alphas.shape, 0.05, jnp.float32)
+    keys = jax.vmap(lambda i: jax.random.fold_in(jax.random.PRNGKey(9), i))(
+        jnp.arange(13)
+    )
+    a, _ = stream_decode(
+        codec, words, alphas, w, _batches(13, 4), stream=_scfg(),
+        nu_chan=nu_chan, noise_keys=keys,
+    )
+    b, _ = stream_decode(
+        codec, words, alphas, w, _batches(13, 13),
+        stream=_scfg(batch_clients=13, buffer_batches=1),
+        nu_chan=nu_chan, noise_keys=keys,
+    )
+    assert _nmse(a, b) <= NMSE_TOL
+
+
+# ---------------------------------------------------------------------------
+# bounded ingest buffer
+# ---------------------------------------------------------------------------
+
+
+def test_bounded_buffer_contract():
+    buf = BoundedIngestBuffer(2)
+    assert buf.push(b"a", 1) and buf.push(b"b", 2)
+    assert buf.full and len(buf) == 2
+    assert not buf.push(b"a", 1)  # duplicate: rejected, does NOT occupy a slot
+    assert buf.rejected_dup == 1 and len(buf) == 2
+    with pytest.raises(RuntimeError, match="full"):
+        buf.push(b"c", 3)
+    assert buf.pop() == 1  # FIFO
+    assert buf.push(b"c", 3)
+    assert not buf.push(b"b", 2)  # dedup persists across drains
+    assert buf.peak_occupancy == 2
+    with pytest.raises(ValueError, match="capacity"):
+        BoundedIngestBuffer(0)
+
+
+def test_stream_backpressure_bounds_buffer(payload):
+    """With a 1-slot buffer the driver must drain before every push: the
+    round still decodes every batch, with peak occupancy pinned at 1."""
+    codec, words, _, alphas, w = payload
+    batches = _batches(13, 2)
+    ref, _ = stream_decode(codec, words, alphas, w, batches, stream=_scfg(batch_clients=2))
+    got, info = stream_decode(
+        codec, words, alphas, w, batches,
+        stream=_scfg(batch_clients=2, buffer_batches=1),
+    )
+    assert info["buffer_peak_occupancy"] == 1
+    assert info["batches_admitted"] == len(batches)
+    assert _nmse(got, ref) <= NMSE_TOL
+
+
+# ---------------------------------------------------------------------------
+# arrival simulator
+# ---------------------------------------------------------------------------
+
+
+def test_simulate_arrivals_deterministic_and_masks_dead():
+    cfg = StreamConfig(seed=5, straggler_prob=0.3, straggler_mult=100.0)
+    alive = np.array([True] * 8 + [False] * 2)
+    t1 = simulate_arrivals(cfg, 3, 10, alive)
+    t2 = simulate_arrivals(cfg, 3, 10, alive)
+    np.testing.assert_array_equal(t1, t2)
+    assert np.all(np.isinf(t1[8:])) and np.all(np.isfinite(t1[:8]))
+    assert not np.array_equal(t1, simulate_arrivals(cfg, 4, 10, alive))
+
+
+def test_batch_arrivals_partitions_in_arrival_order():
+    times = np.array([5.0, 0.1, np.inf, 2.0, 9.0, 1.0])
+    batches = batch_arrivals(times, 8.0, 2)
+    assert [list(b) for b in batches] == [[1, 5], [3, 0]]  # 4 missed, 2 is inf
+    flat = np.concatenate(batches)
+    assert np.all(np.diff(times[flat]) >= 0)
+
+
+def test_late_discount_monotone_and_identity():
+    cfg = StreamConfig(soft_deadline=2.0, late_decay=0.7)
+    t = np.array([0.5, 2.0, 3.0, 5.0, np.inf])
+    d = late_discount(cfg, t)
+    assert d[0] == d[1] == 1.0  # beat the soft deadline: undiscounted
+    assert np.all(np.diff(d[1:4]) < 0)  # later arrival => smaller weight
+    np.testing.assert_array_equal(
+        late_discount(StreamConfig(late_decay=0.0), t), 1.0
+    )
+
+
+# ---------------------------------------------------------------------------
+# collectives partial-aggregation entry points
+# ---------------------------------------------------------------------------
+
+
+def test_collectives_partial_fold_and_finalize(payload):
+    codec, words, codes, alphas, w = payload
+    jw = jnp.asarray(w)
+    stats = None
+    for sl in (slice(0, 6), slice(6, 13)):
+        stats = fedqcs_partial_fold(stats, words[sl], alphas[sl], jw[sl], codec)
+    one = aggregator.ae_batch_stats(codec, words, alphas, jw)
+    np.testing.assert_allclose(np.asarray(stats.y), np.asarray(one.y), rtol=1e-5, atol=1e-6)
+    rhos = jnp.asarray(w / w.sum())
+    g_bar = aggregate_and_estimate(codec, codes, alphas, rhos, gamp=gamp_config_from(codec))
+    g = fedqcs_partial_finalize(stats, codec)
+    assert _nmse(g, g_bar) <= NMSE_TOL
+
+
+def test_decode_from_stats_ea_is_normalized_sum():
+    ghat = jnp.asarray(np.random.default_rng(2).normal(size=(5, 2, 16)), jnp.float32)
+    w = jnp.asarray([0.5, 1.5, 0.0, 2.0, 1.0])
+    stats = aggregator.ea_batch_stats(ghat, w)
+    out = decode_from_stats(BQCSCodec(FED), stats)
+    want = jnp.einsum("k,kbn->bn", w / jnp.sum(w), ghat)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# engine streaming round mode
+# ---------------------------------------------------------------------------
+
+DIM, CLASSES = 24, 4
+
+
+def _engine(clients=8, **kw):
+    x, y = toy_classification(n_samples=600, dim=DIM, classes=CLASSES, seed=0)
+    parts = partition_indices(
+        y, clients, PartitionConfig(kind="dirichlet", alpha=0.2, min_size=4)
+    )
+    defaults = dict(
+        fed_cfg=FED,
+        cohort=CohortConfig(method="fedqcs-ae"),
+        sched=SchedulerConfig(),
+        chan=ChannelConfig(),
+        server=ServerOptConfig(lr=0.01),
+    )
+    defaults.update(kw)
+    return CohortEngine(
+        toy_params(dim=DIM, classes=CLASSES, seed=0),
+        jax.grad(toy_loss),
+        ArrayClientData(x, y, parts, batch_size=4),
+        **defaults,
+    )
+
+
+def test_engine_streaming_matches_barrier_round():
+    """With a deadline no client misses, the streaming round and the barrier
+    round drive IDENTICAL training trajectories (within the reconstruction
+    round-off of the pinned contract)."""
+    barrier = _engine()
+    stream = _engine(stream=StreamConfig(batch_clients=3, deadline=1e9, fanout=2))
+    for _ in range(2):
+        sb = barrier.run_round()
+        ss = stream.run_round()
+        assert np.isfinite(sb["nmse"]) and np.isfinite(ss["nmse"])
+    assert ss["participating"] == sb["participating"] == 8.0
+    for a, b in zip(
+        jax.tree_util.tree_leaves(barrier.params), jax.tree_util.tree_leaves(stream.params)
+    ):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=ATOL)
+    np.testing.assert_allclose(
+        np.asarray(barrier.residuals), np.asarray(stream.residuals), atol=ATOL
+    )
+
+
+def test_engine_streaming_ea_round_runs():
+    e = _engine(
+        cohort=CohortConfig(method="fedqcs-ea"),
+        stream=StreamConfig(batch_clients=4, deadline=1e9),
+    )
+    stats = e.run(2)[-1]
+    assert np.isfinite(stats["nmse"])
+    assert stats["participating"] == 8.0
+
+
+def test_engine_streaming_deadline_cutoff_full_residual_carry():
+    """Total straggler blackout: nobody beats the deadline.  The round still
+    completes as an exact zero update, every cohort residual absorbs the FULL
+    gradient (the PR-3 non-participation contract), and no client is stamped
+    as having participated."""
+    e = _engine(
+        sched=SchedulerConfig(kind="async", sample_frac=1.0),
+        stream=StreamConfig(
+            batch_clients=4, deadline=8.0, straggler_prob=1.0, straggler_mult=1e12
+        ),
+    )
+    ref = _engine()  # same seeds: reproduces the round-0 gradient blocks
+    params0 = e.params
+    ids = np.arange(8)
+    blocks = ref._grads_jit(ref.params, ref.data.cohort_batch(0, ids))
+
+    stats = e.run_round()
+    assert stats["participating"] == 0.0 and stats["arrived"] == 0.0
+    # zero update: fedavg with a zero aggregate leaves params untouched
+    for a, b in zip(jax.tree_util.tree_leaves(params0), jax.tree_util.tree_leaves(e.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # full carry: residual == blocks + (zero) prior residual, bit-exact
+    np.testing.assert_array_equal(np.asarray(e.residuals), np.asarray(blocks))
+    # non-arrival is not participation: nobody's last_round was stamped
+    np.testing.assert_array_equal(e.sched_state.last_round, -1)
+
+
+def test_engine_streaming_noisy_channel_round():
+    e = _engine(
+        chan=ChannelConfig(kind="awgn", snr_db=10.0),
+        stream=StreamConfig(batch_clients=3, deadline=1e9),
+    )
+    stats = e.run(2)[-1]
+    assert np.isfinite(stats["nmse"])
+
+
+def test_engine_streaming_rejects_non_fedqcs_methods():
+    with pytest.raises(ValueError, match="streaming"):
+        _engine(cohort=CohortConfig(method="signsgd"), stream=StreamConfig())
+    with pytest.raises(ValueError, match="groups"):
+        _engine(
+            cohort=CohortConfig(method="fedqcs-ae", groups=2), stream=StreamConfig()
+        )
