@@ -27,6 +27,7 @@ BENCH_FED_JSON = os.path.join(_BENCH_DIR, "BENCH_fed.json")
 BENCH_RECON_JSON = os.path.join(_BENCH_DIR, "BENCH_recon.json")
 BENCH_QUANT_JSON = os.path.join(_BENCH_DIR, "BENCH_quant.json")
 BENCH_STREAM_JSON = os.path.join(_BENCH_DIR, "BENCH_stream.json")
+BENCH_CHANNEL_JSON = os.path.join(_BENCH_DIR, "BENCH_channel.json")
 
 
 def _write_bench_json(path: str, bench: str, entries: list) -> None:
@@ -666,6 +667,134 @@ def stream_scaling(fast=True):
     return rows
 
 
+def channel_uplink(fast=True):
+    """Gather vs over-the-air MIMO-MAC uplink at cohort sizes {32, 256, 1000}
+    (EXPERIMENTS.md #Channel-bench; DESIGN.md #Channels).
+
+    Two columns per cohort size K in runs/bench/BENCH_channel.json:
+
+      * ``channel_gather[cK]`` -- the digital gather uplink: every client
+        ships its packed wire words to the PS (``uplink_bytes`` grows
+        linearly in K) and the PS runs the one-shot AE decode over the
+        gathered (K, nb, W) payload matrix.
+      * ``channel_mimo[cK]`` -- the mimo_mac family: all K clients transmit
+        their Bussgang-pre-scaled dequantized rows SIMULTANEOUSLY, the PS
+        receives one (n_rx, nb, M) superimposed signal whose
+        ``uplink_bytes`` is CONSTANT in K (the claim CI's bench-smoke job
+        validates against this file), and the decode wall is the
+        joint-estimation path: spatial combining + EM-GAMP from the
+        combined stats.
+
+    The transmit-side superposition (``Y = H X + N``) is nature, not PS
+    compute, so it runs outside the mimo timing window; both walls measure
+    the PS decode path only.  ``cross_nmse_vs_gather`` records the
+    joint-estimation estimate against the gather-decode oracle -- tight only
+    where n_rx >= K (the c32 column at n_rx=64; tests/test_channel.py pins
+    that regime), and degrading gracefully once the combiner is
+    underdetermined (K > n_rx).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import aggregator, bussgang
+    from repro.core.compression import BQCSCodec, FedQCSConfig
+    from repro.core.recon_engine import decode_from_stats
+    from repro.fed.channel import (
+        ChannelConfig,
+        ChannelRealization,
+        get_channel_family,
+        mimo_tx_gain,
+        realize_uplink,
+    )
+
+    fed = FedQCSConfig(block_size=256, reduction_ratio=4, bits=2, s_ratio=0.1,
+                       gamp_iters=10 if fast else 15,
+                       gamp_variance_mode="scalar")
+    codec = BQCSCodec(fed)
+    nb = 2
+    m = fed.m
+    n_rx = 64
+    chan = ChannelConfig(kind="mimo_mac", snr_db=40.0, n_rx=n_rx)
+    fam = get_channel_family("mimo_mac")
+    sizes = (32, 256, 1000)
+    reps = 3 if fast else 5
+
+    gather_fn = jax.jit(lambda wd, al, wt: decode_from_stats(
+        codec, aggregator.ae_batch_stats(codec, wd, al, wt)))
+
+    def mimo_decode(y_rx, wq, al, wt, active, eta, sigma2, h, h_hat):
+        # PS-side joint estimation only: combine the superimposed reception,
+        # then EM-GAMP from the combined stats (the engine's MAC decode path).
+        real = ChannelRealization(
+            jnp.zeros(al.shape, jnp.float32), active,
+            h=h, h_hat=h_hat, sigma2=sigma2,
+        )
+        y_eff, nu = fam.combine(chan, real, y_rx, wq, active,
+                                psi=codec.codebook.psi, tx_gain=eta)
+        return decode_from_stats(
+            codec, aggregator.mimo_batch_stats(codec, y_eff, nu, al, wt))
+
+    mimo_fn = jax.jit(mimo_decode)
+
+    rows, entries = [], []
+    for k in sizes:
+        blocks = jax.random.normal(
+            jax.random.PRNGKey(1), (k, nb, fed.block_size), jnp.float32)
+        words, alphas, _ = jax.vmap(codec.compress_blocks_packed)(
+            blocks, jnp.zeros_like(blocks))
+        w = jnp.ones((k,), jnp.float32)
+        nwords = int(words.shape[-1])
+        gather_bytes = k * nb * (nwords * 4 + 4)  # packed words + alpha, per client
+        mimo_bytes = n_rx * nb * m * 4  # the one (n_rx, nb, M) f32 reception
+
+        # the over-the-air part, outside the timing window: realize the
+        # round's H, power-control + pre-scale, superimpose
+        real = realize_uplink(chan, jax.random.PRNGKey(2 + k), k, nb)
+        deq = codec.codebook.decode_packed(words, m)
+        wq = bussgang.bussgang_weight(w[:, None], alphas, codec.codebook)
+        active = (w > 0).astype(jnp.float32)
+        eta = mimo_tx_gain(wq, active)
+        y_rx = jax.block_until_ready(fam.transmit(
+            chan, real, (eta * wq)[..., None] * deq, jax.random.PRNGKey(3 + k)))
+
+        ghat_g = jax.block_until_ready(gather_fn(words, alphas, w))
+        t0 = time.time()
+        for _ in range(reps):
+            ghat_g = jax.block_until_ready(gather_fn(words, alphas, w))
+        wall_g = (time.time() - t0) / reps
+
+        ghat_m = jax.block_until_ready(mimo_fn(
+            y_rx, wq, alphas, w, active, eta, real.sigma2, real.h, real.h_hat))
+        t0 = time.time()
+        for _ in range(reps):
+            ghat_m = jax.block_until_ready(mimo_fn(
+                y_rx, wq, alphas, w, active, eta, real.sigma2, real.h,
+                real.h_hat))
+        wall_m = (time.time() - t0) / reps
+
+        nmse = float(jnp.sum(jnp.square(ghat_m - ghat_g))
+                     / (jnp.sum(jnp.square(ghat_g)) + 1e-30))
+        for name, wall, nbytes, derived in (
+            (f"channel_gather[c{k}]", wall_g, gather_bytes,
+             f"cohort={k};uplink_bytes={gather_bytes};wire=gather_codes"),
+            (f"channel_mimo[c{k}]", wall_m, mimo_bytes,
+             f"cohort={k};uplink_bytes={mimo_bytes};n_rx={n_rx};"
+             f"cross_nmse_vs_gather={nmse:.3e}"),
+        ):
+            rows.append(f"channel[{name}],{1e6 * wall:.1f},{derived}")
+            entries.append({
+                "name": name, "wall_ms": round(wall * 1e3, 3),
+                "derived": derived, "cohort": k,
+                "path": "mimo_mac" if "mimo" in name else "gather",
+                "uplink_bytes": nbytes, "n_rx": n_rx,
+                "cross_nmse_vs_gather": nmse,
+                "backend": jax.default_backend(),
+            })
+    _write_bench_json(BENCH_CHANNEL_JSON, "channel_uplink", entries)
+    rows.append(f"channel[json],0,{os.path.relpath(BENCH_CHANNEL_JSON)}")
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
@@ -708,6 +837,7 @@ def main() -> None:
         "recon": recon_scaling,
         "fed": fed_cohort_scaling,
         "stream": stream_scaling,
+        "channel": channel_uplink,
     }
     selected = [s for s in args.only.split(",") if s] or list(benches)
     print("name,us_per_call,derived")

@@ -48,7 +48,14 @@ def main():
     ap.add_argument("--sample-frac", type=float, default=1.0,
                     help="cohort fraction per round (uniform sampling when < 1)")
     ap.add_argument("--snr-db", type=float, default=None,
-                    help="AWGN uplink SNR in dB (unset = ideal channel)")
+                    help="uplink SNR in dB (unset = ideal channel)")
+    ap.add_argument("--channel", default=None,
+                    help="uplink family (ideal/awgn/rayleigh/mimo_mac; "
+                         "default: awgn when --snr-db is set, else ideal)")
+    ap.add_argument("--n-rx", type=int, default=8,
+                    help="mimo_mac receive antennas")
+    ap.add_argument("--csi-error", type=float, default=0.0,
+                    help="mimo_mac CSI estimate error variance")
     ap.add_argument("--dropout", type=float, default=0.0,
                     help="per-round straggler probability")
     ap.add_argument("--chunk", type=int, default=0,
@@ -89,8 +96,11 @@ def main():
         scheduler="uniform" if args.sample_frac < 1.0 else "full",
         sample_frac=args.sample_frac,
         dropout=args.dropout,
-        channel="awgn" if args.snr_db is not None else "ideal",
+        channel=args.channel
+        or ("awgn" if args.snr_db is not None else "ideal"),
         snr_db=args.snr_db if args.snr_db is not None else 20.0,
+        n_rx=args.n_rx,
+        csi_error=args.csi_error,
         chunk=args.chunk,
     )
     print(f"(R,Q)=({args.R},{args.Q}) -> {fed.bits_per_entry:.2f} bits/entry "
@@ -100,9 +110,11 @@ def main():
     print(f"{'method':24s} {'bits/entry':>10s} {'final acc':>9s} {'mean NMSE':>9s} {'wall':>6s}")
     import dataclasses as _dc
 
+    from repro.fed.channel import get_channel_family
+
     for m, cbk, q in rows:
         kw = dict(cohort_kw)
-        if m != "fedqcs-ae" and kw["channel"] != "ideal":
+        if m != "fedqcs-ae" and not get_channel_family(kw["channel"]).exact_codes:
             # code-domain methods need the exact codes at the PS: only the
             # Bussgang-linearized AE path absorbs uplink noise (DESIGN.md)
             print(f"  ({m}: noisy uplink unsupported -> ideal channel)")

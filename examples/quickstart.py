@@ -57,7 +57,8 @@ def main():
 
     truth = jax.tree.map(lambda *xs: sum(r * x for r, x in zip(rhos, xs)), *workers)
     for mode in ("ea", "ae"):
-        ghat = api.reconstruct(codec, payloads, rhos, spec, mode=mode)
+        ghat = api.reconstruct(codec, payloads, rhos, spec,
+                               recon=api.ReconSpec(mode=mode))
         num = sum(float(jnp.sum((a - b) ** 2)) for a, b in
                   zip(jax.tree.leaves(ghat), jax.tree.leaves(truth)))
         den = sum(float(jnp.sum(b**2)) for b in jax.tree.leaves(truth))

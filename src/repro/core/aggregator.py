@@ -48,6 +48,7 @@ __all__ = [
     "zero_stats",
     "stats_add",
     "ae_batch_stats",
+    "mimo_batch_stats",
     "ea_batch_stats",
     "normalized_stats",
     "AggregatorTree",
@@ -144,6 +145,28 @@ def ae_batch_stats(
     energy = bussgang.signal_energy(alphas, weights, m, codec.cfg.block_size)
     return PartialStats(
         "ae", y, nu, energy,
+        jnp.sum(weights), jnp.sum((weights > 0).astype(jnp.float32)),
+    )
+
+
+def mimo_batch_stats(
+    codec: BQCSCodec,
+    y_eff: jnp.ndarray,  # (nb, M) spatially-combined sub-cohort observation
+    nu_mimo: jnp.ndarray,  # (nb,) post-combining channel noise variance
+    alphas: jnp.ndarray,  # (B, nb)
+    weights: jnp.ndarray,  # (B,) RAW (unnormalized) aggregation weights
+) -> PartialStats:
+    """AE sufficient statistics of one superimposed sub-cohort reception
+    (multiple-access uplink): the channel already summed the batch's
+    Bussgang-weighted rows, so ``y_eff`` IS the batch's ``y`` contribution
+    and only the per-client quantization-noise/energy accumulators remain to
+    compute here (the docstring above: a tier's partial sum is exactly what
+    a superimposed sub-cohort reception produces)."""
+    cb = codec.codebook
+    nu = bussgang.effective_noise_var(alphas, weights, cb) + nu_mimo
+    energy = bussgang.signal_energy(alphas, weights, codec.cfg.m, codec.cfg.block_size)
+    return PartialStats(
+        "ae", y_eff, nu, energy,
         jnp.sum(weights), jnp.sum((weights > 0).astype(jnp.float32)),
     )
 

@@ -6,7 +6,14 @@ consume:
     codec = fedqcs.make_codec(FedQCSConfig(...))
     state = fedqcs.init_state(codec, grads_template)
     payload, state = fedqcs.compress(codec, grads, state)      # worker side
-    ghat = fedqcs.reconstruct(codec, payloads, rhos, mode=...)  # PS side
+    ghat = fedqcs.reconstruct(codec, payloads, rhos, spec,
+                              recon=ReconSpec(mode=...))        # PS side
+
+``ReconSpec`` (core/recon_engine.py) is the one value that says HOW the PS
+reconstructs -- mode, AE grouping, chunking, kernel routing, and optionally a
+received multiple-access channel observation ``(y_eff, nu_eff)`` in place of
+the per-payload codes.  The pre-spec ``mode=``/``groups=`` keywords still
+work as a deprecated shim for one release.
 
 For the distributed (in-step, cross-pod) path see runtime/collectives.py,
 which uses the same codec under shard_map.
@@ -15,24 +22,30 @@ which uses the same codec under shard_map.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Sequence
+import warnings
+from typing import Any, Optional, Sequence
 
 import jax.numpy as jnp
 
+from repro.core import bussgang
 from repro.core.compression import (
     BQCSCodec,
     CompressedGradient,
     FedQCSConfig,
     blocks_to_tree,
 )
+from repro.core.gamp import em_gamp
+from repro.core.recon_engine import ReconSpec
 from repro.core.reconstruction import (
     aggregate_and_estimate,
     estimate_and_aggregate_packed,
+    gamp_config_from,
 )
 
 __all__ = [
     "FedQCSConfig",
     "BQCSCodec",
+    "ReconSpec",
     "make_codec",
     "init_state",
     "compress",
@@ -70,32 +83,74 @@ def reconstruct(
     payloads: Sequence[CompressedGradient],
     rhos: Sequence[float],
     spec: Any,
-    mode: str = "ae",
-    groups: int = 1,
+    recon: Optional[ReconSpec] = None,
+    mode: Optional[str] = None,
+    groups: Optional[int] = None,
 ) -> Any:
     """PS side: fuses K payloads into the reconstructed gradient pytree.
 
-    mode="ea" (estimate-and-aggregate, Procedure 2) runs one Q-EM-GAMP per
-    worker payload; mode="ae" (aggregate-and-estimate) Bussgang-combines
-    first.  Both route through the fused Pallas kernels when
-    ``codec.cfg.use_kernels`` is set AND ``codec.cfg.gamp_variance_mode ==
-    'scalar'`` (the kernels implement scalar-variance GAMP; exact-variance
-    configs keep the XLA path -- see DESIGN.md).
+    ``recon`` (a :class:`ReconSpec`) selects the strategy: mode="ea"
+    (estimate-and-aggregate, Procedure 2) runs one Q-EM-GAMP per worker
+    payload; mode="ae" (aggregate-and-estimate) Bussgang-combines first; an
+    AE spec carrying ``channel=(y_eff, nu_eff)`` decodes a received
+    multiple-access observation instead of the payload codes (joint
+    estimation -- the payloads then contribute only their alphas, for the
+    quantization-noise and GAMP-init terms).  Chunking/kernel routing come
+    from the spec, deferring to the codec config where unset; the fused
+    Pallas kernels engage when resolved use_pallas is set AND
+    ``codec.cfg.gamp_variance_mode == 'scalar'`` (see DESIGN.md).
+
+    The pre-spec ``mode=``/``groups=`` keywords are a deprecated shim.
     """
+    if recon is None:
+        if mode is not None or groups is not None:
+            warnings.warn(
+                "reconstruct(mode=..., groups=...) is deprecated; pass "
+                "recon=ReconSpec(mode=..., groups=...) instead",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+        recon = ReconSpec(
+            mode=mode if mode is not None else "ae",
+            groups=groups if groups is not None else 1,
+        )
+    elif mode is not None or groups is not None:
+        raise TypeError(
+            "pass either recon=ReconSpec(...) or the deprecated "
+            "mode=/groups= keywords, not both"
+        )
+    recon = recon.resolve(codec.cfg)
     alphas = jnp.stack([p.alpha for p in payloads])
     rhos = jnp.asarray(rhos, jnp.float32)
-    if mode == "ea":
+    if recon.mode == "ea":
         # The payload words pass straight through to the packed
         # reconstruction engine (DESIGN.md #Recon-engine) -- the uint8 index
         # view never materializes on the EA path.
         words = jnp.stack([p.codes for p in payloads])
-        blocks = estimate_and_aggregate_packed(codec, words, alphas, rhos)
-    elif mode == "ae":
+        blocks = estimate_and_aggregate_packed(
+            codec, words, alphas, rhos,
+            use_pallas=recon.use_pallas, chunk=recon.chunk,
+        )
+    elif recon.channel is not None:
+        # Joint-estimation decode of one superimposed reception: y_eff is
+        # already the Bussgang aggregate estimate (eq. 23 over the air), so
+        # only the quantization-noise + channel-noise variances and the
+        # GAMP-init energy remain to assemble here (eq. 24 + nu_eff).
+        y_eff, nu_eff = recon.channel
+        cfg = codec.cfg
+        nu = bussgang.effective_noise_var(alphas, rhos, codec.codebook) + nu_eff
+        energy = bussgang.signal_energy(alphas, rhos, cfg.m, cfg.block_size)
+        blocks = em_gamp(
+            y_eff, nu, codec.a, gamp_config_from(codec),
+            init_var=energy, use_pallas=recon.use_pallas,
+        )
+    else:
         # PS boundary: AE's Bussgang combine still consumes indices; unpack
         # here, once (codec.unpack knows the codebook's index width and
         # code-lane count, which differ from (Q, M) for vq).
         codes = jnp.stack([codec.unpack(p.codes) for p in payloads])
-        blocks = aggregate_and_estimate(codec, codes, alphas, rhos, groups=groups)
-    else:
-        raise ValueError(f"unknown mode {mode!r} (want 'ea' or 'ae')")
+        blocks = aggregate_and_estimate(
+            codec, codes, alphas, rhos,
+            groups=recon.groups, use_pallas=recon.use_pallas,
+        )
     return blocks_to_tree(blocks, spec, payloads[0].nbar)

@@ -85,6 +85,57 @@ class FedQCSConfig:
     # materializes for more than one chunk at a time.  0 = monolithic batch.
     recon_chunk: int = 0
 
+    def validate(self) -> "FedQCSConfig":
+        """Raises ValueError on incoherent knob combinations, with the fix
+        named in the message.  Called by ``BQCSCodec`` (so ``make_codec``
+        rejects a bad protocol at construction, not rounds later inside a
+        collective); returns self so it chains.  Note R need not divide N --
+        M = floor(N / R) is the paper's own Sec. VI blocking (1591 // 3)."""
+        if self.block_size < 1 or self.reduction_ratio < 1:
+            raise ValueError(
+                f"block_size={self.block_size} and reduction_ratio="
+                f"{self.reduction_ratio} must both be >= 1"
+            )
+        if self.m < 1:
+            raise ValueError(
+                f"reduction_ratio={self.reduction_ratio} leaves no measurements "
+                f"(M = {self.block_size} // {self.reduction_ratio} = 0); use "
+                f"reduction_ratio <= block_size"
+            )
+        if not (1 <= self.bits <= 8):
+            raise ValueError(f"bits must be in [1, 8], got {self.bits}")
+        if not (0.0 < self.s_ratio <= 1.0):
+            raise ValueError(f"s_ratio must be in (0, 1], got {self.s_ratio}")
+        if self.wire_mode not in ("gather_codes", "psum_dequant"):
+            raise ValueError(
+                f"unknown wire_mode {self.wire_mode!r} "
+                "(choose 'gather_codes' or 'psum_dequant')"
+            )
+        if self.recon_mode not in ("ae", "ea"):
+            raise ValueError(
+                f"unknown recon_mode {self.recon_mode!r} (choose 'ae' or 'ea')"
+            )
+        if self.recon_mode == "ea" and self.wire_mode != "gather_codes":
+            raise ValueError(
+                "recon_mode='ea' needs the per-worker codes on the PS side, "
+                "i.e. wire_mode='gather_codes' (see DESIGN.md); "
+                f"got wire_mode={self.wire_mode!r}"
+            )
+        if self.recon_chunk < 0:
+            raise ValueError(f"recon_chunk must be >= 0, got {self.recon_chunk}")
+        if self.gamp_variance_mode not in ("exact", "scalar"):
+            raise ValueError(
+                f"unknown gamp_variance_mode {self.gamp_variance_mode!r} "
+                "(choose 'exact' or 'scalar')"
+            )
+        if self.codebook == "vq" and self.m % self.vq_dim:
+            raise ValueError(
+                f"vq_dim={self.vq_dim} must divide M={self.m} "
+                f"(= block_size // reduction_ratio); pick a vq_dim that "
+                f"divides {self.m} or adjust the blocking"
+            )
+        return self
+
     @property
     def m(self) -> int:
         return self.block_size // self.reduction_ratio
@@ -289,7 +340,7 @@ class BQCSCodec:
     """
 
     def __init__(self, cfg: FedQCSConfig):
-        self.cfg = cfg
+        self.cfg = cfg.validate()
         _warn_kernel_bypass_once(cfg)
         self.codebook: Codebook = make_codebook(cfg)
         key = jax.random.PRNGKey(cfg.seed)

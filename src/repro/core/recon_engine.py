@@ -40,7 +40,7 @@ it from drivers (benchmarks, offline decode), not inside a train step.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,12 +50,64 @@ from repro.core.compression import BQCSCodec
 from repro.core.gamp import GampConfig, _qem_gamp_xla, em_gamp, qem_gamp, qem_gamp_packed
 
 __all__ = [
+    "ReconSpec",
     "chunked_rows",
     "ea_solve_flat",
     "ea_decode",
     "ea_decode_two_phase",
     "decode_from_stats",
 ]
+
+
+@dataclasses.dataclass(frozen=True)
+class ReconSpec:
+    """One value describing HOW the PS reconstructs a round.
+
+    Consolidates the stringly knobs that had accreted across
+    ``api.reconstruct`` / the collectives / the recon engine (positional
+    ``mode``, ``groups``, per-call chunk overrides) into a single spec every
+    entry point accepts:
+
+      mode: "ae" (aggregate-and-estimate: Bussgang combine, one EM-GAMP) or
+        "ea" (estimate-and-aggregate: per-worker Q-EM-GAMP, rho-sum).
+      groups: AE grouping G (ideal uplink only; eq. 25 grouping).
+      chunk: recon-engine row chunking; None defers to the codec's
+        ``cfg.recon_chunk``.
+      use_pallas: fused-kernel routing; None defers to ``cfg.use_kernels``.
+      channel: optional received multiple-access observation in place of the
+        per-payload codes: a ``(y_eff (nb, M), nu_eff (nb,))`` pair as
+        produced by a channel family's ``combine`` hook (fed/channel.py --
+        typed loosely here: core stays fed-agnostic).  AE only; the payloads
+        then contribute alphas (quantization noise + GAMP init), not codes.
+    """
+
+    mode: str = "ae"
+    groups: int = 1
+    chunk: Optional[int] = None
+    use_pallas: Optional[bool] = None
+    channel: Any = None
+
+    def __post_init__(self):
+        if self.mode not in ("ae", "ea"):
+            raise ValueError(f"unknown recon mode {self.mode!r} (want 'ea' or 'ae')")
+        if self.groups < 1:
+            raise ValueError(f"groups must be >= 1, got {self.groups}")
+        if self.mode == "ea" and self.channel is not None:
+            raise ValueError(
+                "a superimposed multiple-access reception has no per-client "
+                "codes, so recon mode 'ea' cannot consume a channel "
+                "observation (use mode='ae')"
+            )
+        if self.channel is not None and self.groups != 1:
+            raise ValueError("groups != 1 is only defined for exact-code AE")
+
+    def resolve(self, cfg) -> "ReconSpec":
+        """Fills the defer-to-codec fields from a FedQCSConfig."""
+        return dataclasses.replace(
+            self,
+            chunk=cfg.recon_chunk if self.chunk is None else self.chunk,
+            use_pallas=cfg.use_kernels if self.use_pallas is None else self.use_pallas,
+        )
 
 
 def _pad_rows_zero(arrays, rows: int, target: int):
@@ -162,15 +214,20 @@ def ea_decode(
     chunk: int = 0,
     mesh=None,
     axis_name: str = "recon",
+    spec: Optional[ReconSpec] = None,
 ) -> jnp.ndarray:
     """FedQCS-EA decode through the engine: flatten the (K, nb) problem grid,
     chunk/shard-solve, rho-weight and sum -> (nb, N) aggregated blocks.
 
     Jit-safe (the chunk stream is a ``lax.scan``); this is what
     `reconstruction.estimate_and_aggregate` / ``_packed`` delegate to.
+    A ``spec`` (ReconSpec) overrides the chunk/use_pallas knobs in one value.
     """
     from repro.core.reconstruction import gamp_config_from  # deferred: layering
 
+    if spec is not None:
+        spec = spec.resolve(codec.cfg)
+        chunk, use_pallas = spec.chunk, spec.use_pallas
     gamp = gamp or gamp_config_from(codec)
     k, nb = obs.shape[:2]
     flat = ea_solve_flat(

@@ -11,9 +11,11 @@ over any registry model:
   * :mod:`repro.fed.scheduler`  — full / uniform-sampling / staleness-
     weighted async participation plus straggler-dropout, driving the
     ``rho_k`` weighting end to end;
-  * :mod:`repro.fed.channel`    — ideal / AWGN / Rayleigh block-fading
-    uplinks whose effective noise variance threads into EM-GAMP's
-    ``noise_var`` (DESIGN.md #Fed-engine);
+  * :mod:`repro.fed.channel`    — the pluggable ``ChannelFamily`` registry:
+    ideal / AWGN / Rayleigh block-fading uplinks whose effective noise
+    variance threads into EM-GAMP's ``noise_var``, plus the ``mimo_mac``
+    over-the-air multiple-access uplink (Y = HX + N, joint-estimation
+    decode; DESIGN.md #Channels, #Fed-engine);
   * :mod:`repro.fed.server_opt` — FedAvg / FedAvgM / FedAdam server-side
     optimizers over the reconstructed aggregate;
   * :mod:`repro.fed.engine`     — the vmap(+scan-chunked) cohort round loop
@@ -25,7 +27,15 @@ over any registry model:
     (DESIGN.md #Streaming-PS).
 """
 
-from repro.fed.channel import ChannelConfig, realize_uplink
+from repro.fed.channel import (
+    CHANNEL_FAMILIES,
+    ChannelConfig,
+    ChannelFamily,
+    ChannelRealization,
+    get_channel_family,
+    register_channel_family,
+    realize_uplink,
+)
 from repro.fed.engine import ArrayClientData, CohortConfig, CohortEngine, TokenClientData
 from repro.fed.partition import PartitionConfig, partition_indices
 from repro.fed.scheduler import SchedulerConfig, SchedulerState, select_cohort
@@ -35,7 +45,10 @@ from repro.fed.stream import BoundedIngestBuffer, StreamConfig, StreamingPS, str
 __all__ = [
     "ArrayClientData",
     "BoundedIngestBuffer",
+    "CHANNEL_FAMILIES",
     "ChannelConfig",
+    "ChannelFamily",
+    "ChannelRealization",
     "CohortConfig",
     "CohortEngine",
     "PartitionConfig",
@@ -45,8 +58,10 @@ __all__ = [
     "StreamConfig",
     "StreamingPS",
     "TokenClientData",
+    "get_channel_family",
     "partition_indices",
     "realize_uplink",
+    "register_channel_family",
     "select_cohort",
     "stream_decode",
 ]

@@ -1,65 +1,148 @@
-"""Wireless uplink models (DESIGN.md #Fed-engine).
+"""Wireless uplink models behind the `ChannelFamily` registry
+(DESIGN.md #Channels).
 
 The paper's Sec. IV reconstruction already consumes a per-block AWGN variance
-(``em_gamp(..., noise_var)``); the repo's drivers fed it only the Bussgang
-quantization distortion of eq. 24.  This module supplies the missing wireless
-term: each client's M normalized measurements (the BQCS ``alpha`` scaling
-makes them ~ N(0,1), i.e. unit transmit power) cross an uplink that adds
-noise, and the *effective* post-equalization variance is threaded into the
-same ``noise_var`` hook — exactly the FedVQCS scenario axis
-(arXiv:2204.07692).
+(``em_gamp(..., noise_var)``); this module supplies the wireless term.  Like
+the quantizer codebooks (core/codebook.py), uplink physics is a *pluggable
+family*: each model registers a :class:`ChannelFamily` whose hooks the engine
+calls, so a new channel lands as one registration -- never another
+``if kind ==`` branch in the engine.
 
-Models (``ChannelConfig.kind``):
+Family hooks (all jit-safe; ``cfg`` is the frozen :class:`ChannelConfig`):
 
-  * ``ideal``    — error-free digital uplink: zero added variance.  The only
-    model under which code-domain methods (EA, QIHT, dither, signsgd) are
-    well-defined, since those need the exact codes at the PS.
-  * ``awgn``     — unit channel gain, noise variance ``sigma^2 =
-    10**(-snr_db/10)`` per measurement (SNR is defined against the unit
-    transmit power the alpha-scaling guarantees).
-  * ``rayleigh`` — block-fading: one power gain ``g_k = |h_k|^2 ~ Exp(1)``
-    per client per round, constant across that client's blocks.  Clients
-    transmit at the fixed unit power and the PS zero-forces the known
-    channel (divides by ``h_k``), so the equalized noise variance is
-    ``sigma^2 / g_k`` — deep fades cost noise, not transmit power.  A gain
-    below ``outage_gain`` makes the equalized SNR unusable and the client
-    goes into outage (its cohort slot gets ``rho_k = 0``, same straggler
-    contract as the scheduler).
+  * ``realize(cfg, key, clients, nblocks) -> ChannelRealization`` -- one
+    round's channel draw for a ``clients``-slot cohort, sampled *before* the
+    cohort passes run (so outage folds into the effective rhos / residual
+    carry, and the vmapped and loop paths consume bit-identical draws).
+  * ``transmit(cfg, realization, x, key) -> y`` -- pushes the cohort's
+    transmitted measurement rows ``x`` through the channel.  Per-client
+    families return per-client receptions of ``x``'s shape; multiple-access
+    families return the SUPERIMPOSED signal ``Y = H X + N`` whose size does
+    not grow with the cohort.
+  * ``effective_noise(realization) -> (C, nblocks)`` -- the per-client
+    post-equalization variance threaded into ``em_gamp``'s ``noise_var``
+    (per-client families; MAC families estimate noise in ``combine``).
+  * ``combine(cfg, realization, y, w, active) -> (y_eff, nu_eff)`` --
+    multiple-access only: joint-estimation decode of the superimposed
+    reception (see below).
 
-The realization is sampled *before* the cohort passes run, so the outage
-mask can fold into the effective rhos and the per-client residual carry rule
-(engine.py) — and so the vmapped and Python-loop paths consume bit-identical
-channel draws.
+Traits drive the engine's method gating (no string dispatch):
+
+  * ``exact_codes`` -- error-free digital uplink: the only regime where
+    code-domain methods (EA, QIHT, dither, signsgd) are well-defined.
+  * ``multiple_access`` -- the PS receives ONE superimposed signal and must
+    joint-estimate the aggregate (the ``combine`` hook).
+
+Registered families:
+
+  * ``ideal``    -- error-free digital uplink: zero added variance.
+  * ``awgn``     -- unit channel gain, noise variance ``sigma^2 =
+    10**(-snr_db/10)`` per measurement (SNR against the unit transmit power
+    the BQCS alpha-scaling guarantees).
+  * ``rayleigh`` -- block-fading: one power gain ``g_k = |h_k|^2 ~ Exp(1)``
+    per client per round; the PS zero-forces the known channel so the
+    equalized noise variance is ``sigma^2 / g_k``; a gain below
+    ``outage_gain`` puts the client in outage (``rho_k = 0``, the scheduler's
+    straggler contract).
+  * ``mimo_mac`` -- the over-the-air MIMO multiple-access uplink of the
+    paper's sequels (arXiv:2206.05723, arXiv:2003.08059): a per-round real
+    fading matrix ``H`` (n_rx antennas x C clients), every participating
+    client transmits its Bussgang-weighted dequantized measurement rows
+    *simultaneously*, and the PS receives ``Y = H X + sigma N`` -- one
+    ``(n_rx, nblocks, M)`` signal independent of cohort size.  Imperfect CSI
+    is a scenario axis: the PS combines with ``H_hat = H + sqrt(csi_error)
+    Delta``.  Decode is LMMSE (or zero-forcing) spatial combining into an
+    estimate of the rho-weighted aggregate plus its effective post-combining
+    noise variance, which threads straight into the existing Bussgang/EM-GAMP
+    machinery (eq. 24 + the ``nu_eff`` term).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["ChannelConfig", "ChannelRealization", "realize_uplink", "snr_noise_var"]
+__all__ = [
+    "ChannelConfig",
+    "ChannelRealization",
+    "ChannelFamily",
+    "CHANNEL_FAMILIES",
+    "register_channel_family",
+    "get_channel_family",
+    "realize_uplink",
+    "snr_noise_var",
+    "mimo_tx_gain",
+    "mimo_combine",
+]
 
 
 @dataclasses.dataclass(frozen=True)
 class ChannelConfig:
-    kind: str = "ideal"  # ideal | awgn | rayleigh
+    kind: str = "ideal"  # any registered family: ideal | awgn | rayleigh | mimo_mac
     snr_db: float = 20.0  # receive SNR per measurement (unit transmit power)
-    outage_gain: float = 0.05  # truncated-inversion floor on |h|^2
+    outage_gain: float = 0.05  # truncated-inversion floor on |h|^2 (rayleigh)
+    # -- mimo_mac scenario axes --------------------------------------------
+    n_rx: int = 8  # PS receive antennas (rows of H)
+    csi_error: float = 0.0  # per-entry variance of the PS's CSI estimate error
+    combiner: str = "lmmse"  # spatial combiner: lmmse | zf
 
 
 class ChannelRealization(NamedTuple):
     """One round's uplink draw for a C-client cohort.
 
     noise_var: (C, nblocks) effective post-equalization AWGN variance on each
-      client's unit-power measurement rows (0 for ideal / outage slots).
+      client's unit-power measurement rows (0 for ideal / outage / MAC slots).
     mask: (C,) 1.0 for clients whose uplink closed, 0.0 for outage.
+    h / h_hat / sigma2: multiple-access families only -- the true (n_rx, C)
+      fading matrix, the PS's CSI estimate of it, and the scalar receiver
+      noise variance.  ``None`` for per-client families (jit-safe: None
+      leaves drop out of the pytree).
     """
 
     noise_var: jnp.ndarray
     mask: jnp.ndarray
+    h: Optional[jnp.ndarray] = None
+    h_hat: Optional[jnp.ndarray] = None
+    sigma2: Optional[jnp.ndarray] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelFamily:
+    """The protocol every uplink model implements (module docstring)."""
+
+    name: str
+    exact_codes: bool  # error-free digital wire: code-domain methods OK
+    multiple_access: bool  # superimposed reception: joint-estimation decode
+    realize: Callable[..., ChannelRealization]
+    transmit: Callable[..., jnp.ndarray]
+    effective_noise: Callable[[ChannelRealization], jnp.ndarray]
+    combine: Optional[Callable[..., Tuple[jnp.ndarray, jnp.ndarray]]] = None
+
+
+CHANNEL_FAMILIES: Dict[str, ChannelFamily] = {}
+
+
+def register_channel_family(name: str, family: ChannelFamily) -> None:
+    """Registers ``family`` under ``ChannelConfig.kind == name``.  This is
+    the plugin point: new uplink physics (correlated fading, OFDM subcarrier
+    maps, jamming) lands as one registration, and the engine, the streaming
+    PS, and the drivers all pick it up through the traits + hooks."""
+    CHANNEL_FAMILIES[name] = family
+
+
+def get_channel_family(kind: str) -> ChannelFamily:
+    """Resolves a registered family; the ONLY kind dispatch in the repo."""
+    try:
+        return CHANNEL_FAMILIES[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown channel kind {kind!r} "
+            f"(registered: {sorted(CHANNEL_FAMILIES)})"
+        ) from None
 
 
 def snr_noise_var(snr_db: float) -> float:
@@ -70,22 +153,220 @@ def snr_noise_var(snr_db: float) -> float:
 def realize_uplink(
     cfg: ChannelConfig, key: jax.Array, clients: int, nblocks: int
 ) -> ChannelRealization:
-    """Samples one round's channel state for a ``clients``-slot cohort."""
-    ones = jnp.ones((clients,), jnp.float32)
-    if cfg.kind == "ideal":
-        return ChannelRealization(jnp.zeros((clients, nblocks), jnp.float32), ones)
+    """Samples one round's channel state for a ``clients``-slot cohort
+    through the registry (bit-identical draws to the pre-registry models,
+    pinned by tests/test_channel.py)."""
+    return get_channel_family(cfg.kind).realize(cfg, key, clients, nblocks)
+
+
+# ---------------------------------------------------------------------------
+# per-client families: ideal / awgn / rayleigh
+# ---------------------------------------------------------------------------
+
+
+def _ideal_realize(cfg, key, clients, nblocks):
+    return ChannelRealization(
+        jnp.zeros((clients, nblocks), jnp.float32), jnp.ones((clients,), jnp.float32)
+    )
+
+
+def _awgn_realize(cfg, key, clients, nblocks):
     sigma2 = snr_noise_var(cfg.snr_db)
-    if cfg.kind == "awgn":
-        return ChannelRealization(
-            jnp.full((clients, nblocks), sigma2, jnp.float32), ones
+    return ChannelRealization(
+        jnp.full((clients, nblocks), sigma2, jnp.float32),
+        jnp.ones((clients,), jnp.float32),
+    )
+
+
+def _rayleigh_realize(cfg, key, clients, nblocks):
+    sigma2 = snr_noise_var(cfg.snr_db)
+    gain = jax.random.exponential(key, (clients,), jnp.float32)  # |h|^2
+    alive = gain >= cfg.outage_gain
+    safe = jnp.where(alive, gain, 1.0)
+    nu = jnp.where(alive, sigma2 / safe, 0.0)
+    return ChannelRealization(
+        jnp.broadcast_to(nu[:, None], (clients, nblocks)).astype(jnp.float32),
+        alive.astype(jnp.float32),
+    )
+
+
+def _ideal_transmit(cfg, real, x, key):
+    return x
+
+
+def _pointwise_transmit(cfg, real, x, key):
+    """Per-client reception: each client's (nb, M) rows arrive with their
+    equalized noise sampled at the realization's per-(client, block)
+    variance.  x: (C, nb, M)."""
+    noise = jax.random.normal(key, x.shape, x.dtype)
+    return x + noise * jnp.sqrt(real.noise_var)[..., None]
+
+
+def _pointwise_noise(real):
+    return real.noise_var
+
+
+register_channel_family("ideal", ChannelFamily(
+    name="ideal", exact_codes=True, multiple_access=False,
+    realize=_ideal_realize, transmit=_ideal_transmit,
+    effective_noise=_pointwise_noise,
+))
+register_channel_family("awgn", ChannelFamily(
+    name="awgn", exact_codes=False, multiple_access=False,
+    realize=_awgn_realize, transmit=_pointwise_transmit,
+    effective_noise=_pointwise_noise,
+))
+register_channel_family("rayleigh", ChannelFamily(
+    name="rayleigh", exact_codes=False, multiple_access=False,
+    realize=_rayleigh_realize, transmit=_pointwise_transmit,
+    effective_noise=_pointwise_noise,
+))
+
+
+# ---------------------------------------------------------------------------
+# mimo_mac: over-the-air MIMO multiple-access uplink
+# ---------------------------------------------------------------------------
+
+
+def _mimo_realize(cfg, key, clients, nblocks):
+    if cfg.n_rx < 1:
+        raise ValueError(f"mimo_mac needs n_rx >= 1 receive antennas, got {cfg.n_rx}")
+    if cfg.combiner not in ("lmmse", "zf"):
+        raise ValueError(
+            f"unknown mimo_mac combiner {cfg.combiner!r} (choose 'lmmse' or 'zf')"
         )
-    if cfg.kind == "rayleigh":
-        gain = jax.random.exponential(key, (clients,), jnp.float32)  # |h|^2
-        alive = gain >= cfg.outage_gain
-        safe = jnp.where(alive, gain, 1.0)
-        nu = jnp.where(alive, sigma2 / safe, 0.0)
-        return ChannelRealization(
-            jnp.broadcast_to(nu[:, None], (clients, nblocks)).astype(jnp.float32),
-            alive.astype(jnp.float32),
+    k_h, k_e = jax.random.split(key)
+    h = jax.random.normal(k_h, (cfg.n_rx, clients), jnp.float32)
+    if cfg.csi_error > 0:
+        h_hat = h + np.sqrt(cfg.csi_error) * jax.random.normal(
+            k_e, h.shape, jnp.float32
         )
-    raise ValueError(f"unknown channel kind {cfg.kind!r}")
+    else:
+        h_hat = h
+    return ChannelRealization(
+        jnp.zeros((clients, nblocks), jnp.float32),
+        jnp.ones((clients,), jnp.float32),
+        h=h,
+        h_hat=h_hat,
+        sigma2=jnp.float32(snr_noise_var(cfg.snr_db)),
+    )
+
+
+def _mimo_transmit(cfg, real, x, key):
+    """The multiple-access superposition: every client transmits its rows
+    SIMULTANEOUSLY and the channel adds them -- ``Y = H X + sigma N``.
+
+    x: (C, nb, M) pre-scaled transmit rows (non-participants carry zero rows,
+    so masking H columns is implicit) -> (n_rx, nb, M) received signal, whose
+    size is independent of the cohort size C.
+    """
+    y = jnp.einsum("rk,kbm->rbm", real.h, x)
+    noise = jax.random.normal(key, y.shape, y.dtype)
+    return y + jnp.sqrt(real.sigma2) * noise
+
+
+def _mimo_noise(real):
+    # The MAC has no per-client equalized variance; the decode-side noise
+    # estimate comes out of `combine` (post-combining, per block).
+    return real.noise_var
+
+
+def mimo_tx_gain(w: jnp.ndarray, active: jnp.ndarray) -> jnp.ndarray:
+    """Open-loop power control: ONE broadcast scalar ``eta`` normalizing the
+    cohort's average transmit power to the unit power the SNR is defined
+    against.
+
+    Clients pre-scale by their Bussgang weight ``w_k ~ rho_k / (gamma
+    alpha_k)``; without power control the transmitted power carries a
+    ``rho^2`` penalty (a 1/K^2 SNR loss at uniform weights) that the
+    per-client families never pay, because they weight AFTER the channel.
+    ``eta = 1 / rms(active w)`` restores unit average power; it is a single
+    scalar negotiated once per round (the standard OTA-FL power-control
+    feedback loop), NOT per-client side information.  Returns 0 when the
+    whole cohort is silent (nothing transmits).
+    """
+    w2 = jnp.square(w) * active[:, None]  # (C, nb)
+    n = jnp.maximum(jnp.sum(active) * w.shape[1], 1.0)
+    mean_w2 = jnp.sum(w2) / n
+    return jnp.where(
+        mean_w2 > 0, jax.lax.rsqrt(jnp.maximum(mean_w2, 1e-30)), 0.0
+    ).astype(jnp.float32)
+
+
+def mimo_combine(
+    cfg: ChannelConfig,
+    real: ChannelRealization,
+    y: jnp.ndarray,  # (n_rx, nb, M) superimposed reception
+    w: jnp.ndarray,  # (C, nb) Bussgang weights the clients pre-scaled with
+    active: jnp.ndarray,  # (C,) 1.0 = transmitted this round, 0.0 = silent
+    psi: float = 1.0,  # codebook per-entry second moment (transmit power)
+    tx_gain: Optional[jnp.ndarray] = None,  # mimo_tx_gain eta (None = 1)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Joint-estimation decode: spatial combining of ``Y = H X + sigma N``
+    into an estimate of the rho-weighted aggregate measurement vector plus
+    its effective post-combining noise variance.
+
+    Clients transmit ``x_k = eta * w_k * deq_k`` (Bussgang pre-scaling: rho
+    is broadcast by the PS, alpha is client-local, so NO per-client side
+    information crosses the uplink; ``eta`` is :func:`mimo_tx_gain`'s
+    broadcast power-control scalar, which the PS divides back out here),
+    making the target combining response ``f^T h_k = 1`` on every active
+    column.  One combining vector ``f`` serves all blocks:
+
+      * ``lmmse``: ``f = (H P H^T + (sigma^2 + csi_error tr P) I)^-1 H p``
+        with per-client power ``p_k = psi * mean_b w_kb^2`` (0 for silent
+        clients, which drops them from the combiner automatically);
+      * ``zf``: ``f^T h_k = 1`` exactly on active columns (needs
+        n_rx >= #active); silent columns are pinned out of the solve with
+        static shapes.
+
+    The combiner only sees ``h_hat`` (imperfect CSI); the returned noise
+    estimate charges the residual target mismatch, the CSI error, and the
+    combined receiver noise:
+
+        nu_b = psi sum_k w_kb^2 (f^T h_hat_k - t_k)^2
+             + psi csi_error ||f||^2 sum_k w_kb^2
+             + sigma^2 ||f||^2.
+
+    Returns ``(y_eff (nb, M), nu_eff (nb,))`` -- a linear AWGN observation of
+    the aggregated gradient, exactly what ``em_gamp``'s ``noise_var`` hook
+    consumes next to the eq. 24 quantization term.
+    """
+    h_hat = real.h_hat
+    if tx_gain is not None:
+        # the combiner sees the powers actually on the air
+        w = w * tx_gain
+    w2 = jnp.square(w) * active[:, None]  # (C, nb)
+    if cfg.combiner == "zf":
+        # Pin silent columns to the identity so the (C, C) solve keeps static
+        # shapes: their Gram row becomes e_k with a zero target -> c_k = 0.
+        ha = h_hat * active[None, :]
+        gram = ha.T @ ha + jnp.diag(1.0 - active)
+        c = jnp.linalg.solve(gram, active)
+        f = ha @ c  # (n_rx,)
+    else:  # lmmse
+        p = psi * jnp.mean(w2, axis=1)  # (C,) per-client transmit power
+        cov = (h_hat * p[None, :]) @ h_hat.T
+        reg = real.sigma2 + float(cfg.csi_error) * jnp.sum(p)
+        eye = jnp.eye(cfg.n_rx, dtype=jnp.float32)
+        f = jnp.linalg.solve(cov + reg * eye, h_hat @ p)
+    y_eff = jnp.einsum("r,rbm->bm", f, y)
+    e = jnp.einsum("r,rk->k", f, h_hat) - active  # target mismatch per column
+    f2 = jnp.sum(jnp.square(f))
+    nu = psi * jnp.einsum("k,kb->b", jnp.square(e) * active, w2)
+    nu = nu + psi * float(cfg.csi_error) * f2 * jnp.sum(w2, axis=0)
+    nu = nu + real.sigma2 * f2
+    if tx_gain is not None:
+        # back to the un-amplified aggregate's domain (eta = 0 means the
+        # whole cohort was silent: f = 0 already, return the zero signal)
+        inv = jnp.where(tx_gain > 0, 1.0 / jnp.maximum(tx_gain, 1e-30), 0.0)
+        y_eff = y_eff * inv
+        nu = nu * jnp.square(inv)
+    return y_eff, nu
+
+
+register_channel_family("mimo_mac", ChannelFamily(
+    name="mimo_mac", exact_codes=False, multiple_access=True,
+    realize=_mimo_realize, transmit=_mimo_transmit,
+    effective_noise=_mimo_noise, combine=mimo_combine,
+))

@@ -56,7 +56,13 @@ from repro.core.reconstruction import (
     estimate_and_aggregate_packed,
     gamp_config_from,
 )
-from repro.fed.channel import ChannelConfig, realize_uplink
+from repro.fed.channel import (
+    CHANNEL_FAMILIES,
+    ChannelConfig,
+    get_channel_family,
+    mimo_tx_gain,
+    realize_uplink,
+)
 from repro.fed.scheduler import SchedulerConfig, SchedulerState, select_cohort
 from repro.fed.server_opt import ServerOptConfig, init_server_state, server_update
 from repro.fed.stream import (
@@ -200,15 +206,19 @@ class CohortEngine:
             )
         if stream is not None and cohort.groups != 1:
             raise ValueError("streaming fedqcs-ae has no group structure (groups must be 1)")
-        if chan.kind != "ideal" and cohort.method != "fedqcs-ae":
+        # Channel gating is by family TRAITS, not kind strings: the registry
+        # (fed/channel.py) is the only place a kind resolves to behavior.
+        fam = get_channel_family(chan.kind)
+        if not fam.exact_codes and cohort.method != "fedqcs-ae":
             raise ValueError(
                 f"method {cohort.method!r} needs the exact codes at the PS, which "
                 "only an ideal (error-free digital) uplink provides; noisy "
                 "channels are supported by 'fedqcs-ae' (Bussgang + channel "
                 "variance into em_gamp noise_var, DESIGN.md #Fed-engine)"
             )
-        if cohort.groups != 1 and (cohort.method != "fedqcs-ae" or chan.kind != "ideal"):
+        if cohort.groups != 1 and (cohort.method != "fedqcs-ae" or not fam.exact_codes):
             raise ValueError("groups != 1 is only defined for fedqcs-ae over an ideal uplink")
+        self._chan_family = fam
         self.cohort, self.sched, self.chan, self.server = cohort, sched, chan, server
         self.stream = stream
         self.fed_cfg = fed_cfg or FedQCSConfig()
@@ -255,6 +265,7 @@ class CohortEngine:
                 stream=stream,
                 use_pallas=self.fed_cfg.use_kernels,
                 recon_chunk=self.fed_cfg.recon_chunk,
+                chan=self.chan if fam.multiple_access else None,
             )
             self._noise_keys_jit = jax.jit(
                 lambda jids, k: jax.vmap(lambda i: jax.random.fold_in(k, i))(jids)
@@ -375,12 +386,15 @@ class CohortEngine:
 
     # -- PS side ------------------------------------------------------------
 
-    def _ps_fn(self, payloads, rhos_eff, nu_chan, key):
+    def _ps_fn(self, payloads, rhos_eff, chan, key):
         """Reconstruction once per round from the stacked cohort payloads.
-        ``nu_chan`` (C, nb) is the channel realization's effective variance;
-        for fedqcs-ae it threads into em_gamp's noise_var next to the
-        Bussgang term, and the received measurements get a matching noise
-        draw (faithful simulation, not just a variance hint)."""
+        ``chan`` is the round's full ChannelRealization; for fedqcs-ae over a
+        per-client noisy uplink its effective variance threads into em_gamp's
+        noise_var next to the Bussgang term and the received measurements get
+        a matching noise draw (faithful simulation, not just a variance
+        hint); over a multiple-access uplink the PS sees only the
+        superimposed ``fam.transmit`` output and joint-estimates the
+        aggregate through ``fam.combine``."""
         method = self.cohort.method
         stats: Dict[str, jnp.ndarray] = {}
         true_sum = None
@@ -413,9 +427,10 @@ class CohortEngine:
         else:  # fedqcs-ae
             codes, alphas = payloads["codes"], payloads["alpha"]
             q = self.codec.codebook
+            fam = self._chan_family
             nu_q = bussgang.effective_noise_var(alphas, rhos_eff, q)
             stats["nu_quant"] = jnp.mean(nu_q)
-            if self.chan.kind == "ideal":
+            if fam.exact_codes:
                 stats["nu_channel"] = jnp.zeros(())
                 ghat = aggregate_and_estimate(
                     self.codec, codes, alphas, rhos_eff,
@@ -424,10 +439,31 @@ class CohortEngine:
             else:
                 m = self.fed_cfg.m
                 deq = self.codec.dequantize(codes)  # (C, nb, M)
-                noise = jax.random.normal(key, deq.shape) * jnp.sqrt(nu_chan)[..., None]
                 w = bussgang.bussgang_weight(rhos_eff[:, None], alphas, q)  # (C, nb)
-                y = jnp.sum(w[..., None] * (deq + noise), axis=0)
-                nu_ch = jnp.sum(jnp.square(w) * nu_chan, axis=0)  # (nb,)
+                if fam.multiple_access:
+                    # Over-the-air joint estimation: every client pre-scales
+                    # by its Bussgang weight (rho is PS-broadcast, alpha is
+                    # client-local -- no per-client side channel) times the
+                    # round's broadcast power-control scalar (mimo_tx_gain:
+                    # unit average power on the air) and transmits
+                    # SIMULTANEOUSLY; non-participants carry w = 0 rows.
+                    # The PS spatially combines the one superimposed
+                    # reception into the aggregate observation + its
+                    # effective noise.
+                    active = (rhos_eff > 0).astype(jnp.float32)
+                    eta = mimo_tx_gain(w, active)
+                    x = (eta * w)[..., None] * deq  # (C, nb, M) transmit rows
+                    y_rx = fam.transmit(self.chan, chan, x, key)
+                    y, nu_ch = fam.combine(self.chan, chan, y_rx, w, active,
+                                           psi=q.psi, tx_gain=eta)
+                else:
+                    # Per-client reception: equalized rows + their effective
+                    # variance, Bussgang-combined at the PS (eq. 23/24 +
+                    # channel term).
+                    nu_chan = fam.effective_noise(chan)
+                    y_rx = fam.transmit(self.chan, chan, deq, key)
+                    y = jnp.sum(w[..., None] * y_rx, axis=0)
+                    nu_ch = jnp.sum(jnp.square(w) * nu_chan, axis=0)  # (nb,)
                 stats["nu_channel"] = jnp.mean(nu_ch)
                 energy = bussgang.signal_energy(alphas, rhos_eff, m, self.n)
                 ghat = em_gamp(
@@ -469,7 +505,7 @@ class CohortEngine:
         res_c = self.residuals[jids]
 
         payloads, new_res = self._client_pass(self.params, batch, res_c, rhos_eff, keys)
-        ghat_blocks, stats = self._ps_jit(payloads, rhos_eff, chan.noise_var, k_noise)
+        ghat_blocks, stats = self._ps_jit(payloads, rhos_eff, chan, k_noise)
 
         self.residuals = self.residuals.at[jids].set(new_res)
         self.params, self.server_state = self._apply_jit(
@@ -520,14 +556,21 @@ class CohortEngine:
         res_c = self.residuals[jids]
         payloads, new_res = self._client_pass(self.params, batch, res_c, jw, keys)
 
-        nu_chan = noise_keys = None
-        if self.chan.kind != "ideal":
-            nu_chan = chan.noise_var
+        fam = self._chan_family
+        nu_chan = noise_keys = chan_real = chan_key = None
+        if fam.multiple_access:
+            # Each arrival batch is one superimposed sub-cohort reception
+            # over this round's H (the aggregator-tree tiers fold exactly
+            # that); the receiver noise key is per admitted batch.
+            chan_real, chan_key = chan, k_noise
+        elif not fam.exact_codes:
+            nu_chan = fam.effective_noise(chan)
             noise_keys = self._noise_keys_jit(jids, k_noise)
         batches = batch_arrivals(times, self.stream.deadline, self.stream.batch_clients)
         ghat_blocks, sinfo = stream_decode(
             self.codec, payloads["words"], payloads["alpha"], w_raw, batches,
-            nu_chan=nu_chan, noise_keys=noise_keys, ps=self._stream_ps,
+            nu_chan=nu_chan, noise_keys=noise_keys,
+            chan_real=chan_real, chan_key=chan_key, ps=self._stream_ps,
         )
 
         self.residuals = self.residuals.at[jids].set(new_res)
@@ -569,6 +612,13 @@ def _smoke_main(argv=None):
     ap.add_argument("--sample-frac", type=float, default=1.0)
     ap.add_argument("--alpha", type=float, default=0.3)
     ap.add_argument("--snr-db", type=float, default=None)
+    ap.add_argument(
+        "--channel", default=None, choices=sorted(CHANNEL_FAMILIES),
+        help="uplink family (default: awgn when --snr-db is set, else ideal)",
+    )
+    ap.add_argument("--n-rx", type=int, default=8, help="mimo_mac receive antennas")
+    ap.add_argument("--csi-error", type=float, default=0.0,
+                    help="mimo_mac CSI estimate error variance")
     ap.add_argument("--method", default="fedqcs-ae", choices=METHODS)
     ap.add_argument("--chunk", type=int, default=0)
     ap.add_argument(
@@ -592,9 +642,13 @@ def _smoke_main(argv=None):
             kind="uniform" if args.sample_frac < 1.0 else "full",
             sample_frac=args.sample_frac,
         ),
-        chan=ChannelConfig(kind="awgn", snr_db=args.snr_db)
-        if args.snr_db is not None
-        else ChannelConfig(),
+        chan=ChannelConfig(
+            kind=args.channel
+            or ("awgn" if args.snr_db is not None else "ideal"),
+            snr_db=args.snr_db if args.snr_db is not None else 20.0,
+            n_rx=args.n_rx,
+            csi_error=args.csi_error,
+        ),
         server=ServerOptConfig(kind="fedadam", lr=0.01),
         stream=StreamConfig(batch_clients=args.stream, deadline=args.deadline)
         if args.stream > 0

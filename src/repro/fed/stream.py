@@ -46,10 +46,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregator
+from repro.core import aggregator, bussgang
 from repro.core.compression import BQCSCodec
 from repro.core.gamp import GampConfig
 from repro.core.recon_engine import decode_from_stats, ea_solve_flat
+from repro.fed.channel import (
+    ChannelConfig,
+    ChannelRealization,
+    get_channel_family,
+    mimo_tx_gain,
+)
 from repro.fed.scheduler import staleness_discount
 
 __all__ = [
@@ -184,6 +190,7 @@ class StreamingPS:
         stream: StreamConfig = StreamConfig(),
         use_pallas: bool = False,
         recon_chunk: int = 0,
+        chan: Optional[ChannelConfig] = None,
     ):
         if mode not in ("ae", "ea"):
             raise ValueError(f"unknown streaming mode {mode!r} (choose 'ae' or 'ea')")
@@ -194,6 +201,19 @@ class StreamingPS:
         self.gamp = gamp or gamp_config_from(codec)
         self.stream = stream
         self.tree: Optional[aggregator.AggregatorTree] = None
+        fam = get_channel_family(chan.kind) if chan is not None else None
+        if fam is not None and not fam.multiple_access:
+            raise ValueError(
+                "StreamingPS takes chan= only for multiple-access families "
+                "(per-client noisy uplinks thread nu_chan/noise_keys instead); "
+                f"got {chan.kind!r}"
+            )
+        if fam is not None and mode != "ae":
+            raise ValueError(
+                "a multiple-access uplink superimposes the cohort before the "
+                "PS can decode, so only joint-estimation 'ae' streaming is "
+                f"defined; got mode {mode!r}"
+            )
 
         def fold_ae_ideal(words, alphas, w):
             return aggregator.ae_batch_stats(codec, words, alphas, w)
@@ -206,6 +226,26 @@ class StreamingPS:
             noise = jax.vmap(lambda k: jax.random.normal(k, (nb, m)))(keys)
             noise = noise * jnp.sqrt(nu_chan)[..., None]
             return aggregator.ae_batch_stats(codec, words, alphas, w, nu_chan, noise)
+
+        def fold_ae_mimo(words, alphas, w, h, h_hat, sigma2, key):
+            # One superimposed sub-cohort reception over the round's H,
+            # restricted to this batch's columns: the batch pre-scales by its
+            # Bussgang weights, transmits simultaneously, and the PS combines
+            # the single (n_rx, nb, M) signal into the tier's partial stats.
+            m = codec.cfg.m
+            deq = codec.codebook.decode_packed(words, m)  # (B, nb, M)
+            wq = bussgang.bussgang_weight(w[:, None], alphas, codec.codebook)
+            active = (w > 0).astype(jnp.float32)
+            eta = mimo_tx_gain(wq, active)  # this batch's power control
+            x = (eta * wq)[..., None] * deq
+            real = ChannelRealization(
+                jnp.zeros(alphas.shape, jnp.float32), active,
+                h=h, h_hat=h_hat, sigma2=sigma2,
+            )
+            y_rx = fam.transmit(chan, real, x, key)
+            y_eff, nu = fam.combine(chan, real, y_rx, wq, active,
+                                    psi=codec.codebook.psi, tx_gain=eta)
+            return aggregator.mimo_batch_stats(codec, y_eff, nu, alphas, w)
 
         def fold_ea(words, alphas, w):
             # Decode-overlapped-with-ingest: this batch's per-client GAMP
@@ -225,6 +265,8 @@ class StreamingPS:
 
         self._fold_ae_ideal = jax.jit(fold_ae_ideal)
         self._fold_ae_noisy = jax.jit(fold_ae_noisy)
+        self._fold_ae_mimo = jax.jit(fold_ae_mimo) if fam is not None else None
+        self.chan = chan
         self._fold_ea = jax.jit(fold_ea)
         self._final = jax.jit(
             lambda stats: decode_from_stats(codec, stats, self.gamp, use_pallas=use_pallas)
@@ -236,10 +278,21 @@ class StreamingPS:
             aggregator.zero_stats(self.mode, nb, width), fanout=self.stream.fanout
         )
 
-    def fold_batch(self, words, alphas, weights, nu_chan=None, noise_keys=None) -> None:
-        """Fold one gathered (padded) sub-cohort batch into the tree."""
+    def fold_batch(
+        self, words, alphas, weights, nu_chan=None, noise_keys=None, mimo=None
+    ) -> None:
+        """Fold one gathered (padded) sub-cohort batch into the tree.
+        ``mimo`` is ``(h, h_hat, sigma2, key)`` -- this batch's columns of the
+        round's fading matrix plus the batch's receiver noise key -- for
+        multiple-access streaming (requires construction with ``chan=``)."""
         if self.mode == "ea":
             stats = self._fold_ea(words, alphas, weights)
+        elif mimo is not None:
+            if self._fold_ae_mimo is None:
+                raise ValueError(
+                    "multiple-access fold needs a StreamingPS built with chan="
+                )
+            stats = self._fold_ae_mimo(words, alphas, weights, *mimo)
         elif nu_chan is None:
             stats = self._fold_ae_ideal(words, alphas, weights)
         else:
@@ -269,6 +322,9 @@ def stream_decode(
     gamp: Optional[GampConfig] = None,
     nu_chan: Optional[jnp.ndarray] = None,  # (C, nb) channel variance (noisy AE)
     noise_keys: Optional[jnp.ndarray] = None,  # (C,) per-client PRNG keys
+    chan: Optional[ChannelConfig] = None,  # multiple-access uplink config
+    chan_real: Optional[ChannelRealization] = None,  # its round realization
+    chan_key: Optional[jax.Array] = None,  # round receiver-noise key (MAC)
     use_pallas: bool = False,
     recon_chunk: int = 0,
     ps: Optional[StreamingPS] = None,
@@ -283,26 +339,45 @@ def stream_decode(
     duplicated, or partially dropped by the caller).  Returns
     ((nb, N) aggregated blocks, info dict).
     """
+    if chan_real is not None and (chan_real.h is None or chan_key is None):
+        raise ValueError(
+            "multiple-access streaming needs a realization with a fading "
+            "matrix and a round receiver-noise key (chan_real=, chan_key=)"
+        )
     if ps is None:
         ps = StreamingPS(
             codec, mode, gamp, stream or StreamConfig(),
-            use_pallas=use_pallas, recon_chunk=recon_chunk,
+            use_pallas=use_pallas, recon_chunk=recon_chunk, chan=chan,
         )
     cfg = ps.stream
     w_np = np.asarray(weights, np.float32)
     nb = alphas.shape[1]
     ps.begin_round(nb)
     buf = BoundedIngestBuffer(cfg.buffer_batches)
+    consumed = [0]  # admission counter: the MAC batch noise key index
 
     def consume_one():
         pos, valid = buf.pop()
         w_b = jnp.asarray(w_np[pos] * valid)
+        mimo = None
+        if chan_real is not None:
+            # This batch's columns of the round's H; one fresh receiver
+            # noise draw per admitted batch (deterministic in fold order).
+            jpos = jnp.asarray(pos)
+            mimo = (
+                chan_real.h[:, jpos],
+                chan_real.h_hat[:, jpos],
+                chan_real.sigma2,
+                jax.random.fold_in(chan_key, consumed[0]),
+            )
+        consumed[0] += 1
         ps.fold_batch(
             words[pos],
             alphas[pos],
             w_b,
             None if nu_chan is None else nu_chan[pos],
             None if noise_keys is None else noise_keys[pos],
+            mimo=mimo,
         )
 
     for pos in batches:

@@ -94,8 +94,10 @@ def run_federated(
     scheduler: str = "full",  # full | uniform | async
     sample_frac: float = 1.0,
     dropout: float = 0.0,
-    channel: str = "ideal",  # ideal | awgn | rayleigh
+    channel: str = "ideal",  # any registered family: ideal | awgn | rayleigh | mimo_mac
     snr_db: float = 20.0,
+    n_rx: int = 8,  # mimo_mac receive antennas
+    csi_error: float = 0.0,  # mimo_mac CSI estimate error variance
     server: str = "fedadam",  # fedadam | fedavg | fedavgm
     chunk: int = 0,
     impl: str = "vmap",  # vmap | loop (the per-client oracle)
@@ -129,7 +131,7 @@ def run_federated(
         sched=SchedulerConfig(
             kind=scheduler, sample_frac=sample_frac, dropout_prob=dropout, seed=seed
         ),
-        chan=ChannelConfig(kind=channel, snr_db=snr_db),
+        chan=ChannelConfig(kind=channel, snr_db=snr_db, n_rx=n_rx, csi_error=csi_error),
         server=ServerOptConfig(kind=server, lr=lr, b1=0.9, b2=0.999, eps=1e-8),
     )
 

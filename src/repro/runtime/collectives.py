@@ -42,6 +42,7 @@ import jax.numpy as jnp
 from repro.core import bussgang
 from repro.core.compression import BQCSCodec
 from repro.core.gamp import GampConfig, em_gamp
+from repro.core.recon_engine import ReconSpec
 from repro.core.reconstruction import estimate_and_aggregate_packed
 from repro.models.sharding import cs
 
@@ -54,10 +55,16 @@ def fedqcs_pod_allreduce(
     codec: BQCSCodec,
     axis_name: str = "pod",
     participating: jnp.ndarray | None = None,  # scalar bool/f32, this pod
+    recon: ReconSpec | None = None,  # overrides cfg.recon_mode / recon_chunk
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (reconstructed aggregated blocks, new residual)."""
+    """Returns (reconstructed aggregated blocks, new residual).  ``recon``
+    (core ReconSpec) overrides the codec config's recon_mode/recon_chunk for
+    this call; default derives the spec from the config."""
     cfg = codec.cfg
     n, m = cfg.block_size, cfg.m
+    if recon is None:
+        recon = ReconSpec(mode=cfg.recon_mode)
+    recon = recon.resolve(cfg)
     if participating is None:
         participating = jnp.float32(1.0)
     part = jnp.asarray(participating, jnp.float32)
@@ -67,7 +74,7 @@ def fedqcs_pod_allreduce(
     rhos = alive / total  # (K,) server-side weights
     rho_self = part / total
 
-    if cfg.recon_mode == "ea" and cfg.wire_mode != "gather_codes":
+    if recon.mode == "ea" and cfg.wire_mode != "gather_codes":
         raise ValueError(
             "recon_mode='ea' needs the per-worker codes on the PS side, i.e. "
             "wire_mode='gather_codes' (see DESIGN.md)"
@@ -84,13 +91,16 @@ def fedqcs_pod_allreduce(
         new_residual = cs(new_residual, "blocks", None)
         all_words = jax.lax.all_gather(words, axis_name)  # (K, nb, W)
         all_alpha = jax.lax.all_gather(alpha, axis_name)  # (K, nb)
-        if cfg.recon_mode == "ea":
+        if recon.mode == "ea":
             # Estimate-and-aggregate: per-worker Q-EM-GAMP (fused kernel when
             # cfg.use_kernels), then rho-weighted sum -- every pod solves the
             # full K-batch redundantly, exactly like the AE branch below.
             # The words pass STRAIGHT THROUGH to the packed reconstruction
-            # engine (chunked per cfg.recon_chunk); no uint8 view exists.
-            ghat = estimate_and_aggregate_packed(codec, all_words, all_alpha, rhos)
+            # engine (chunked per the resolved spec); no uint8 view exists.
+            ghat = estimate_and_aggregate_packed(
+                codec, all_words, all_alpha, rhos,
+                use_pallas=recon.use_pallas, chunk=recon.chunk,
+            )
             return cs(ghat, "blocks", None), new_residual
         # AE: Bussgang-aggregate via the packed level lookup -- the only
         # index-domain consumer left, and it reads the words directly too.

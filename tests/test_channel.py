@@ -1,0 +1,446 @@
+"""Channel-family registry tests (DESIGN.md #Channels): registry resolution,
+bit-identical ports of the pre-registry per-client models, the MIMO-MAC
+joint-estimation decode against the gather-decode oracle, imperfect-CSI
+degradation, config validation, and the ReconSpec API surface."""
+
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregator, api, bussgang
+from repro.core.compression import BQCSCodec, FedQCSConfig
+from repro.core.recon_engine import ReconSpec, decode_from_stats
+from repro.fed.channel import (
+    CHANNEL_FAMILIES,
+    ChannelConfig,
+    ChannelFamily,
+    ChannelRealization,
+    get_channel_family,
+    mimo_tx_gain,
+    realize_uplink,
+    register_channel_family,
+    snr_noise_var,
+)
+from repro.fed.engine import ArrayClientData, CohortConfig, CohortEngine
+from repro.fed.partition import PartitionConfig, partition_indices
+from repro.fed.scheduler import SchedulerConfig
+from repro.fed.server_opt import ServerOptConfig
+from repro.fed.stream import StreamConfig
+from repro.fed.toy import toy_classification, toy_loss, toy_params
+
+jax.config.update("jax_platform_name", "cpu")
+
+FED = FedQCSConfig(block_size=64, reduction_ratio=2, bits=3, s_ratio=0.2,
+                   gamp_iters=30, gamp_variance_mode="scalar")
+
+
+def _cohort_payloads(codec, k, nb=3, seed=0):
+    blocks = jax.random.normal(
+        jax.random.PRNGKey(seed), (k, nb, codec.cfg.block_size), jnp.float32)
+    words, alphas, _ = jax.vmap(codec.compress_blocks_packed)(
+        blocks, jnp.zeros_like(blocks))
+    return words, alphas
+
+
+def _mimo_decode(codec, chan, real, words, alphas, w, key):
+    """The barrier MAC round: power control, pre-scale, superimpose,
+    combine, GAMP."""
+    fam = get_channel_family(chan.kind)
+    deq = codec.codebook.decode_packed(words, codec.cfg.m)
+    wq = bussgang.bussgang_weight(w[:, None], alphas, codec.codebook)
+    active = (w > 0).astype(jnp.float32)
+    eta = mimo_tx_gain(wq, active)
+    y_rx = fam.transmit(chan, real, (eta * wq)[..., None] * deq, key)
+    y_eff, nu = fam.combine(chan, real, y_rx, wq, active,
+                            psi=codec.codebook.psi, tx_gain=eta)
+    ghat = decode_from_stats(
+        codec, aggregator.mimo_batch_stats(codec, y_eff, nu, alphas, w))
+    return ghat, y_eff, nu
+
+
+def _nmse(a, b):
+    return float(jnp.sum(jnp.square(a - b)) / (jnp.sum(jnp.square(b)) + 1e-30))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_resolves_all_builtin_families():
+    for kind in ("ideal", "awgn", "rayleigh", "mimo_mac"):
+        fam = get_channel_family(kind)
+        assert fam.name == kind
+    assert get_channel_family("ideal").exact_codes
+    assert not get_channel_family("awgn").exact_codes
+    assert get_channel_family("mimo_mac").multiple_access
+    assert get_channel_family("mimo_mac").combine is not None
+    assert not get_channel_family("rayleigh").multiple_access
+
+
+def test_registry_unknown_kind_error_lists_families():
+    with pytest.raises(ValueError, match="unknown channel kind"):
+        get_channel_family("carrier_pigeon")
+    with pytest.raises(ValueError, match="mimo_mac"):
+        realize_uplink(ChannelConfig(kind="nope"), jax.random.PRNGKey(0), 4, 2)
+
+
+def test_registry_is_the_plugin_point():
+    # A third-party family lands as ONE registration: realize_uplink and the
+    # engine's gating both route through the registry, no kind dispatch.
+    def _realize(cfg, key, clients, nblocks):
+        return ChannelRealization(
+            jnp.full((clients, nblocks), 0.125, jnp.float32),
+            jnp.ones((clients,), jnp.float32),
+        )
+
+    register_channel_family("test_custom", ChannelFamily(
+        name="test_custom", exact_codes=False, multiple_access=False,
+        realize=_realize,
+        transmit=lambda cfg, real, x, key: x,
+        effective_noise=lambda real: real.noise_var,
+    ))
+    try:
+        real = realize_uplink(
+            ChannelConfig(kind="test_custom"), jax.random.PRNGKey(0), 3, 2)
+        assert float(real.noise_var[0, 0]) == 0.125
+    finally:
+        del CHANNEL_FAMILIES["test_custom"]
+
+
+def test_no_channel_kind_dispatch_outside_registry():
+    # The acceptance guard: the ONLY `kind ==` dispatch on channel families
+    # lives in the registry lookup; engine/stream/drivers go through traits.
+    import pathlib
+    import re
+
+    src = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+    pat = re.compile(r"kind\s*==\s*[\"'](ideal|awgn|rayleigh|mimo_mac)[\"']")
+    offenders = [
+        str(p) for p in src.rglob("*.py")
+        if p.name != "channel.py" and pat.search(p.read_text())
+    ]
+    assert not offenders, offenders
+
+
+# ---------------------------------------------------------------------------
+# bit-identical ports of the pre-registry models
+# ---------------------------------------------------------------------------
+
+
+def test_ported_realizations_bit_identical():
+    key = jax.random.PRNGKey(7)
+    c, nb = 6, 4
+
+    ideal = realize_uplink(ChannelConfig(), key, c, nb)
+    assert np.array_equal(np.asarray(ideal.noise_var), np.zeros((c, nb)))
+    assert np.array_equal(np.asarray(ideal.mask), np.ones(c))
+
+    awgn = realize_uplink(ChannelConfig(kind="awgn", snr_db=13.0), key, c, nb)
+    assert np.array_equal(
+        np.asarray(awgn.noise_var),
+        np.full((c, nb), snr_noise_var(13.0), np.float32))
+
+    # the pre-registry rayleigh draw, inlined: exact op-for-op sequence
+    cfg = ChannelConfig(kind="rayleigh", snr_db=9.0, outage_gain=0.3)
+    gain = jax.random.exponential(key, (c,), jnp.float32)
+    alive = gain >= cfg.outage_gain
+    nu_ref = jnp.where(alive, snr_noise_var(9.0) / jnp.where(alive, gain, 1.0), 0.0)
+    ray = realize_uplink(cfg, key, c, nb)
+    assert np.array_equal(
+        np.asarray(ray.noise_var),
+        np.asarray(jnp.broadcast_to(nu_ref[:, None], (c, nb)).astype(jnp.float32)))
+    assert np.array_equal(np.asarray(ray.mask), np.asarray(alive, np.float32))
+
+
+def test_ported_transmit_bit_identical():
+    # The per-client reception reproduces the pre-registry noise op sequence
+    # exactly: x + normal(key, x.shape, x.dtype) * sqrt(noise_var)[..., None].
+    key, k_noise = jax.random.split(jax.random.PRNGKey(3))
+    c, nb, m = 5, 3, 8
+    x = jax.random.normal(key, (c, nb, m), jnp.float32)
+    cfg = ChannelConfig(kind="awgn", snr_db=6.0)
+    real = realize_uplink(cfg, key, c, nb)
+    fam = get_channel_family("awgn")
+    got = fam.transmit(cfg, real, x, k_noise)
+    ref = x + jax.random.normal(k_noise, x.shape, x.dtype) * jnp.sqrt(
+        real.noise_var)[..., None]
+    assert np.array_equal(np.asarray(got), np.asarray(ref))
+    # ideal is the identity
+    icfg = ChannelConfig()
+    ireal = realize_uplink(icfg, key, c, nb)
+    assert get_channel_family("ideal").transmit(icfg, ireal, x, k_noise) is x
+
+
+# ---------------------------------------------------------------------------
+# mimo_mac: joint estimation vs the gather-decode oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("combiner", ["lmmse", "zf"])
+def test_mimo_joint_estimation_matches_gather_oracle(combiner):
+    """With n_rx >> K at high SNR and perfect CSI the spatially-combined
+    observation is the Bussgang aggregate, so the joint-estimation decode
+    must land on the gather-decode oracle (calibrated: cross-NMSE ~3e-5)."""
+    codec = BQCSCodec(FED)
+    k, nb = 8, 3
+    words, alphas = _cohort_payloads(codec, k)
+    w = jnp.full((k,), 1.0 / k, jnp.float32)
+    chan = ChannelConfig(kind="mimo_mac", snr_db=60.0, n_rx=64,
+                         combiner=combiner)
+    real = realize_uplink(chan, jax.random.PRNGKey(11), k, nb)
+
+    oracle = decode_from_stats(
+        codec, aggregator.ae_batch_stats(codec, words, alphas, w))
+    ghat, y_eff, nu = _mimo_decode(
+        codec, chan, real, words, alphas, w, jax.random.PRNGKey(12))
+
+    assert bool(jnp.all(jnp.isfinite(ghat))) and bool(jnp.all(nu > 0))
+    # measurement domain: y_eff is the Bussgang aggregate
+    deq = codec.codebook.decode_packed(words, codec.cfg.m)
+    wq = bussgang.bussgang_weight(w[:, None], alphas, codec.codebook)
+    y_ref = jnp.sum(wq[..., None] * deq, axis=0)
+    assert _nmse(y_eff, y_ref) <= 1e-4
+    # gradient domain: pinned against the calibrated ~3e-5 cross-NMSE
+    assert _nmse(ghat, oracle) <= 1e-3
+
+
+def test_mimo_imperfect_csi_degrades_monotonically():
+    """Fixed key => the true H is IDENTICAL across csi_error values (the
+    realize hook splits the CSI-perturbation key off the H key), so the
+    measurement-domain combining error is strictly monotone in csi_error."""
+    codec = BQCSCodec(FED)
+    k, nb = 8, 3
+    words, alphas = _cohort_payloads(codec, k)
+    w = jnp.full((k,), 1.0 / k, jnp.float32)
+    deq = codec.codebook.decode_packed(words, codec.cfg.m)
+    wq = bussgang.bussgang_weight(w[:, None], alphas, codec.codebook)
+    y_ref = jnp.sum(wq[..., None] * deq, axis=0)
+
+    key = jax.random.PRNGKey(21)
+    errs, h_seen = [], []
+    for csi in (0.0, 0.05, 0.5):
+        chan = ChannelConfig(kind="mimo_mac", snr_db=60.0, n_rx=64,
+                             csi_error=csi)
+        real = realize_uplink(chan, key, k, nb)
+        h_seen.append(np.asarray(real.h))
+        _, y_eff, nu = _mimo_decode(
+            codec, chan, real, words, alphas, w, jax.random.PRNGKey(22))
+        errs.append(float(jnp.sum(jnp.square(y_eff - y_ref))))
+        assert bool(jnp.all(nu > 0))
+    assert np.array_equal(h_seen[0], h_seen[1])
+    assert np.array_equal(h_seen[0], h_seen[2])
+    assert errs[0] < errs[1] < errs[2], errs
+
+
+def test_mimo_all_silent_cohort_is_safe():
+    # Every client in outage/silent: the combiner must not blow up (f -> 0,
+    # y_eff -> 0, nu -> receiver noise only).
+    codec = BQCSCodec(FED)
+    k, nb = 4, 2
+    words, alphas = _cohort_payloads(codec, k)
+    w = jnp.zeros((k,), jnp.float32)
+    chan = ChannelConfig(kind="mimo_mac", snr_db=20.0, n_rx=8)
+    real = realize_uplink(chan, jax.random.PRNGKey(5), k, nb)
+    ghat, y_eff, nu = _mimo_decode(
+        codec, chan, real, words, alphas, w, jax.random.PRNGKey(6))
+    assert bool(jnp.all(jnp.isfinite(y_eff)))
+    assert bool(jnp.all(jnp.isfinite(nu)))
+    assert bool(jnp.all(jnp.isfinite(ghat)))
+
+
+def test_mimo_tx_gain_normalizes_air_power():
+    # eta^2 * mean(active w^2) == 1: unit average transmit power on the air
+    # (the per-client families' SNR reference), regardless of rho scale --
+    # WITHOUT it the rho pre-scaling pays a 1/K^2 SNR penalty and the
+    # engine's MAC rounds decode to ~zero (the regression this pins).
+    w = jnp.asarray([[0.1, 0.2], [0.05, 0.4], [0.3, 0.3], [9.0, 9.0]])
+    active = jnp.asarray([1.0, 1.0, 1.0, 0.0])  # silent client excluded
+    eta = mimo_tx_gain(w, active)
+    mean_w2 = float(jnp.sum(jnp.square(w) * active[:, None]) / 6.0)
+    assert float(eta) == pytest.approx(1.0 / np.sqrt(mean_w2), rel=1e-6)
+    # uniform rho = 1/K: the gain exactly cancels the 1/K^2 power penalty
+    k = 16
+    wu = jnp.full((k, 3), 1.0 / k, jnp.float32)
+    assert float(mimo_tx_gain(wu, jnp.ones((k,)))) == pytest.approx(k, rel=1e-6)
+    assert float(mimo_tx_gain(wu, jnp.zeros((k,)))) == 0.0
+
+
+def test_mimo_realize_validates_config():
+    with pytest.raises(ValueError, match="n_rx"):
+        realize_uplink(ChannelConfig(kind="mimo_mac", n_rx=0),
+                       jax.random.PRNGKey(0), 4, 2)
+    with pytest.raises(ValueError, match="combiner"):
+        realize_uplink(ChannelConfig(kind="mimo_mac", combiner="mrc"),
+                       jax.random.PRNGKey(0), 4, 2)
+
+
+# ---------------------------------------------------------------------------
+# engine + streaming rounds over the air
+# ---------------------------------------------------------------------------
+
+DIM, CLASSES = 24, 4
+
+
+def _engine(clients=8, **kw):
+    x, y = toy_classification(n_samples=600, dim=DIM, classes=CLASSES, seed=0)
+    parts = partition_indices(
+        y, clients, PartitionConfig(kind="dirichlet", alpha=0.2, min_size=4))
+    defaults = dict(
+        fed_cfg=FED,
+        cohort=CohortConfig(method="fedqcs-ae"),
+        sched=SchedulerConfig(),
+        chan=ChannelConfig(kind="mimo_mac", snr_db=30.0, n_rx=32),
+        server=ServerOptConfig(lr=0.01),
+    )
+    defaults.update(kw)
+    return CohortEngine(
+        toy_params(dim=DIM, classes=CLASSES, seed=0), jax.grad(toy_loss),
+        ArrayClientData(x, y, parts, batch_size=4), **defaults,
+    )
+
+
+def test_engine_mimo_round_runs_and_updates():
+    eng = _engine()
+    p0 = jax.tree.map(jnp.copy, eng.params)
+    for _ in range(2):
+        stats = eng.run_round()
+        assert all(np.isfinite(v) for v in stats.values()), stats
+        assert stats["nu_quant"] > 0 and stats["nu_channel"] > 0
+        # the power-control regression pin: without mimo_tx_gain the rho
+        # pre-scaling sinks the receive SNR and the decode collapses to ~0
+        # (nmse ~= 1.0); with it the MAC round reconstructs
+        assert stats["nmse"] < 0.9, stats
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), p0, eng.params)
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+def test_engine_mimo_rejects_code_domain_methods():
+    # the multiple-access wire never carries exact codes: trait-gated
+    with pytest.raises(ValueError, match="ideal"):
+        _engine(cohort=CohortConfig(method="fedqcs-ea"))
+
+
+def test_engine_streaming_mimo_round_matches_barrier_closely():
+    """The streamed MAC round superimposes each arrival batch over the SAME
+    round realization H (columns restricted to the batch); at high SNR the
+    only difference from the barrier round is the per-batch receiver-noise
+    draw, so the two stay close and both track the model update."""
+    kw = dict(chan=ChannelConfig(kind="mimo_mac", snr_db=50.0, n_rx=32),
+              sched=SchedulerConfig(seed=3))
+    barrier = _engine(**kw)
+    streamed = _engine(
+        stream=StreamConfig(batch_clients=3, buffer_batches=4, fanout=4,
+                            deadline=1e9, seed=0),
+        **kw)
+    sb = barrier.run_round()
+    ss = streamed.run_round()
+    assert all(np.isfinite(v) for v in sb.values()), sb
+    assert all(np.isfinite(v) for v in ss.values()), ss
+    gb = jnp.concatenate([x.ravel() for x in jax.tree.leaves(barrier.params)])
+    gs = jnp.concatenate([x.ravel() for x in jax.tree.leaves(streamed.params)])
+    assert _nmse(gs, gb) <= 5e-2
+
+
+# ---------------------------------------------------------------------------
+# FedQCSConfig.validate()
+# ---------------------------------------------------------------------------
+
+
+def test_validate_rejects_ea_over_psum_dequant():
+    cfg = FedQCSConfig(recon_mode="ea", wire_mode="psum_dequant")
+    with pytest.raises(ValueError, match="gather_codes"):
+        api.make_codec(cfg)
+
+
+def test_validate_rejects_vq_dim_not_dividing_m():
+    cfg = FedQCSConfig(block_size=64, reduction_ratio=2, bits=6,
+                       codebook="vq", vq_dim=3)  # M = 32, 3 does not divide
+    with pytest.raises(ValueError, match="vq_dim"):
+        api.make_codec(cfg)
+
+
+@pytest.mark.parametrize("bad", [
+    dict(bits=0),
+    dict(bits=9),
+    dict(s_ratio=0.0),
+    dict(s_ratio=1.5),
+    dict(wire_mode="carrier_pigeon"),
+    dict(recon_mode="magic"),
+    dict(reduction_ratio=0),
+    dict(recon_chunk=-1),
+    dict(gamp_variance_mode="vector"),
+])
+def test_validate_rejects_bad_knobs(bad):
+    with pytest.raises(ValueError):
+        api.make_codec(FedQCSConfig(**bad))
+
+
+def test_validate_accepts_paper_blocking():
+    # N=1591, R=3: M = 1591 // 3 = 530 -- R does NOT have to divide N (the
+    # paper's own Sec. VI blocking), validate() must not over-constrain.
+    cfg = FedQCSConfig(block_size=1591, reduction_ratio=3, bits=3, s_ratio=0.1)
+    codec = api.make_codec(cfg)
+    assert codec.cfg.m == 530
+
+
+# ---------------------------------------------------------------------------
+# ReconSpec API surface
+# ---------------------------------------------------------------------------
+
+
+def _one_payload_setup():
+    codec = api.make_codec(dataclasses.replace(FED, gamp_iters=15))
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(0), (96,), jnp.float32)}
+    state = api.init_state(codec, grads)
+    payload, spec, _ = api.compress(codec, grads, state)
+    return codec, payload, spec
+
+
+@pytest.mark.parametrize("mode", ["ea", "ae"])
+def test_reconstruct_recon_spec_equals_deprecated_kwargs(mode):
+    codec, payload, spec = _one_payload_setup()
+    new = api.reconstruct(codec, [payload], [1.0], spec,
+                          recon=ReconSpec(mode=mode))
+    with pytest.warns(DeprecationWarning, match="ReconSpec"):
+        old = api.reconstruct(codec, [payload], [1.0], spec, mode=mode)
+    assert np.array_equal(np.asarray(new["w"]), np.asarray(old["w"]))
+
+
+def test_reconstruct_rejects_mixing_spec_and_kwargs():
+    codec, payload, spec = _one_payload_setup()
+    with pytest.raises(TypeError, match="recon"):
+        api.reconstruct(codec, [payload], [1.0], spec,
+                        recon=ReconSpec(mode="ae"), mode="ae")
+
+
+def test_reconstruct_emits_no_warning_on_new_surface():
+    codec, payload, spec = _one_payload_setup()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        api.reconstruct(codec, [payload], [1.0], spec,
+                        recon=ReconSpec(mode="ae"))
+
+
+def test_recon_spec_validation():
+    with pytest.raises(ValueError, match="mode"):
+        ReconSpec(mode="magic")
+    with pytest.raises(ValueError, match="groups"):
+        ReconSpec(groups=0)
+    with pytest.raises(ValueError, match="ea"):
+        ReconSpec(mode="ea", channel=(jnp.zeros((1, 2)), jnp.zeros((1,))))
+    with pytest.raises(ValueError, match="groups"):
+        ReconSpec(groups=2, channel=(jnp.zeros((1, 2)), jnp.zeros((1,))))
+
+
+def test_recon_spec_resolve_fills_config_defaults():
+    cfg = FedQCSConfig(recon_chunk=7, use_kernels=False)
+    spec = ReconSpec(mode="ae").resolve(cfg)
+    assert spec.chunk == 7 and spec.use_pallas is False
+    explicit = ReconSpec(mode="ae", chunk=3, use_pallas=True).resolve(cfg)
+    assert explicit.chunk == 3 and explicit.use_pallas is True

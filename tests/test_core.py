@@ -178,7 +178,7 @@ def test_compress_tree_payload_is_packed():
     nb, w = payload.codes.shape
     assert w == -(-cfg.m // (32 // cfg.bits))
     assert payload.wire_bits() == payload.codes.size * 32 + payload.alpha.size * 32
-    out = api.reconstruct(codec, [payload], [1.0], spec, mode="ae")
+    out = api.reconstruct(codec, [payload], [1.0], spec, recon=api.ReconSpec(mode="ae"))
     assert out["w"].shape == tree["w"].shape
     assert np.isfinite(np.asarray(out["w"])).all()
 
