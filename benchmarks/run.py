@@ -21,29 +21,36 @@ import traceback
 
 _ROOT_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), os.pardir)
 _BENCH_DIR = os.path.join(_ROOT_DIR, "runs", "bench")
-BENCH_GAMP_JSON = os.path.join(_BENCH_DIR, "BENCH_gamp.json")
-BENCH_ENCODE_JSON = os.path.join(_BENCH_DIR, "BENCH_encode.json")
-BENCH_FED_JSON = os.path.join(_BENCH_DIR, "BENCH_fed.json")
-BENCH_RECON_JSON = os.path.join(_BENCH_DIR, "BENCH_recon.json")
-BENCH_QUANT_JSON = os.path.join(_BENCH_DIR, "BENCH_quant.json")
-BENCH_STREAM_JSON = os.path.join(_BENCH_DIR, "BENCH_stream.json")
-BENCH_CHANNEL_JSON = os.path.join(_BENCH_DIR, "BENCH_channel.json")
+BENCH_SCHEMA_VERSION = 1
 
 
-def _write_bench_json(path: str, bench: str, entries: list) -> None:
-    """Writes one BENCH_*.json; every entry must already carry the schema
-    keys (name / wall_ms / derived).  Every file is mirrored to the repo
-    root (same basename) so the per-PR perf trajectory lives where the
-    acceptance tooling and reviewers look first; runs/bench/ keeps the
-    canonical copy CI uploads."""
+def write_bench(name: str, bench: str, entries: list) -> str:
+    """Writes runs/bench/BENCH_<name>.json; every entry must already carry
+    the schema keys (name / wall_ms / derived).  The doc is stamped with the
+    bench-file schema version plus the backend and jax version it was
+    recorded on, so cross-machine comparisons of the checked-in trajectory
+    are interpretable.  Every file is mirrored to the repo root (same
+    basename) so the per-PR perf trajectory lives where the acceptance
+    tooling and reviewers look first; runs/bench/ keeps the canonical copy
+    CI uploads.  Returns the canonical path."""
+    import jax
+
     for e in entries:
         assert {"name", "wall_ms", "derived"} <= set(e), e
-    doc = {"bench": bench, "entries": entries}
+    doc = {
+        "bench": bench,
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "entries": entries,
+    }
+    path = os.path.join(_BENCH_DIR, f"BENCH_{name}.json")
     os.makedirs(os.path.dirname(path), exist_ok=True)
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
     with open(os.path.join(_ROOT_DIR, os.path.basename(path)), "w") as f:
         json.dump(doc, f, indent=2)
+    return path
 
 
 def kernel_micro(fast=True):
@@ -147,8 +154,8 @@ def gamp_ea_vs_ae(fast=True):
             "backend": jax.default_backend(),
             "interpret": jax.default_backend() != "tpu",
         })
-    _write_bench_json(BENCH_GAMP_JSON, "gamp_ea_vs_ae", entries)
-    rows.append(f"gamp[json],0,{os.path.relpath(BENCH_GAMP_JSON)}")
+    path = write_bench("gamp", "gamp_ea_vs_ae", entries)
+    rows.append(f"gamp[json],0,{os.path.relpath(path)}")
     return rows
 
 
@@ -226,8 +233,8 @@ def encode_fused_vs_unfused(fast=True):
             "backend": jax.default_backend(),
             "interpret": jax.default_backend() != "tpu",
         })
-    _write_bench_json(BENCH_ENCODE_JSON, "encode_fused_vs_unfused", entries)
-    rows.append(f"encode[json],0,{os.path.relpath(BENCH_ENCODE_JSON)}")
+    path = write_bench("encode", "encode_fused_vs_unfused", entries)
+    rows.append(f"encode[json],0,{os.path.relpath(path)}")
     return rows
 
 
@@ -306,8 +313,8 @@ def quant_codebooks(fast=True):
             "backend": jax.default_backend(),
             "interpret": jax.default_backend() != "tpu",
         })
-    _write_bench_json(BENCH_QUANT_JSON, "quant_codebooks", entries)
-    rows.append(f"quant[json],0,{os.path.relpath(BENCH_QUANT_JSON)}")
+    path = write_bench("quant", "quant_codebooks", entries)
+    rows.append(f"quant[json],0,{os.path.relpath(path)}")
     return rows
 
 
@@ -434,8 +441,8 @@ def recon_scaling(fast=True):
                 "n": n, "m": m, "q": q, "devices": len(devices),
                 "backend": jax.default_backend(),
             })
-    _write_bench_json(BENCH_RECON_JSON, "recon_scaling", entries)
-    rows_all.append(f"recon[json],0,{os.path.relpath(BENCH_RECON_JSON)}")
+    path = write_bench("recon", "recon_scaling", entries)
+    rows_all.append(f"recon[json],0,{os.path.relpath(path)}")
     return rows_all
 
 
@@ -549,8 +556,8 @@ def fed_cohort_scaling(fast=True):
                     "speedup_vs_loop": round(speedup, 2),
                     "backend": jax.default_backend(),
                 })
-    _write_bench_json(BENCH_FED_JSON, "fed_cohort_scaling", entries)
-    rows.append(f"fed[json],0,{os.path.relpath(BENCH_FED_JSON)}")
+    path = write_bench("fed", "fed_cohort_scaling", entries)
+    rows.append(f"fed[json],0,{os.path.relpath(path)}")
     return rows
 
 
@@ -662,8 +669,8 @@ def stream_scaling(fast=True):
                 "stream_vs_barrier_nmse": nmse,
                 "backend": jax.default_backend(),
             })
-    _write_bench_json(BENCH_STREAM_JSON, "stream_scaling", entries)
-    rows.append(f"stream[json],0,{os.path.relpath(BENCH_STREAM_JSON)}")
+    path = write_bench("stream", "stream_scaling", entries)
+    rows.append(f"stream[json],0,{os.path.relpath(path)}")
     return rows
 
 
@@ -790,8 +797,127 @@ def channel_uplink(fast=True):
                 "cross_nmse_vs_gather": nmse,
                 "backend": jax.default_backend(),
             })
-    _write_bench_json(BENCH_CHANNEL_JSON, "channel_uplink", entries)
-    rows.append(f"channel[json],0,{os.path.relpath(BENCH_CHANNEL_JSON)}")
+    path = write_bench("channel", "channel_uplink", entries)
+    rows.append(f"channel[json],0,{os.path.relpath(path)}")
+    return rows
+
+
+def obs_overhead(fast=True):
+    """Null-recorder overhead contract (EXPERIMENTS.md #Obs-bench): the
+    telemetry layer must be free when no recorder is attached.  Recorder
+    activity is STATIC at engine construction (``bool(obs.active)``), so the
+    null path builds the exact pre-telemetry jit graphs; the only residual
+    cost is a handful of host-side no-op ``span``/``record`` calls per
+    round.  Two measurements land in runs/bench/BENCH_obs.json:
+
+      * ``obs_record_call`` / ``obs_span_call`` — direct per-call cost of
+        ``NullRecorder.record`` and a collector-less ``span``; a
+        conservative 16-call-per-round budget over the measured null-engine
+        round wall gives ``overhead_pct``, the < 2% contract CI's
+        bench-smoke job validates (direct measurement, not a wall-clock
+        A/B, because sub-percent engine-wall deltas drown in jitter).
+      * ``fed_round_null`` / ``fed_round_jsonl`` — informational end-to-end
+        round walls of a small cohort engine with no recorder vs a live
+        JSONL recorder (the jsonl wall includes the spans' blocking
+        barriers, the decode-health host syncs, and the flushed line
+        write — the cost a user opts into with ``--record``).
+    """
+    import shutil
+    import tempfile
+
+    import jax
+
+    from repro.core.compression import FedQCSConfig
+    from repro.fed.channel import ChannelConfig
+    from repro.fed.engine import ArrayClientData, CohortConfig, CohortEngine
+    from repro.fed.partition import PartitionConfig, partition_indices
+    from repro.fed.scheduler import SchedulerConfig
+    from repro.fed.server_opt import ServerOptConfig
+    from repro.fed.toy import toy_classification, toy_loss, toy_params
+    from repro.obs import NULL_RECORDER, JsonlRecorder
+    from repro.obs.trace import span
+
+    # -- direct no-op call cost --------------------------------------------
+    calls = 20_000 if fast else 100_000
+    t0 = time.perf_counter()
+    for _ in range(calls):
+        NULL_RECORDER.record("round", {"round": 0, "nmse": 0.0})
+    record_ns = (time.perf_counter() - t0) / calls * 1e9
+    t0 = time.perf_counter()
+    for _ in range(calls):
+        with span("uplink", None):
+            pass
+    span_ns = (time.perf_counter() - t0) / calls * 1e9
+
+    # -- end-to-end round walls: null vs jsonl recorder --------------------
+    xs, ys = toy_classification(n_samples=2048)
+    fed = FedQCSConfig(block_size=64, reduction_ratio=2, bits=3,
+                       s_ratio=0.1, gamp_iters=10,
+                       gamp_variance_mode="scalar")
+    k = 32
+    parts = partition_indices(
+        ys, k, PartitionConfig(kind="dirichlet", alpha=0.1, min_size=2))
+
+    def build(obs):
+        return CohortEngine(
+            toy_params(), jax.grad(toy_loss),
+            ArrayClientData(xs, ys, parts, batch_size=2),
+            fed_cfg=fed,
+            cohort=CohortConfig(method="fedqcs-ae", record_nmse=False),
+            sched=SchedulerConfig(),
+            chan=ChannelConfig(kind="awgn", snr_db=10.0),
+            server=ServerOptConfig(lr=0.01),
+            obs=obs,
+        )
+
+    def timed_rounds(engine, reps):
+        engine.run_round()  # compile + warm caches
+        engine.run_round()
+        t0 = time.time()
+        for _ in range(reps):
+            engine.run_round()
+        return (time.time() - t0) / reps
+
+    reps = 10 if fast else 30
+    wall_null = timed_rounds(build(None), reps)
+    tmp = tempfile.mkdtemp(prefix="bench_obs_")
+    try:
+        rec = JsonlRecorder(os.path.join(tmp, "run"))
+        wall_jsonl = timed_rounds(build(rec), reps)
+        rec.close()
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    # A null-path round makes 4 collector-less spans + a few flag checks and
+    # at most one no-op record; budget 16 of the costlier call to be safe.
+    per_round_s = 16 * max(record_ns, span_ns) * 1e-9
+    overhead_pct = 100.0 * per_round_s / wall_null
+    jsonl_pct = 100.0 * (wall_jsonl - wall_null) / wall_null
+
+    rows, entries = [], []
+    for name, wall_ms, derived, extra in (
+        ("obs_record_call", record_ns * 1e-6,
+         f"per_call_ns={record_ns:.0f};overhead_pct={overhead_pct:.4f}",
+         {"per_call_ns": round(record_ns, 1),
+          "overhead_pct": round(overhead_pct, 4)}),
+        ("obs_span_call", span_ns * 1e-6,
+         f"per_call_ns={span_ns:.0f};overhead_pct={overhead_pct:.4f}",
+         {"per_call_ns": round(span_ns, 1),
+          "overhead_pct": round(overhead_pct, 4)}),
+        ("fed_round_null", wall_null * 1e3,
+         f"cohort={k};recorder=null;overhead_pct={overhead_pct:.4f}",
+         {"cohort": k, "recorder": "null",
+          "overhead_pct": round(overhead_pct, 4)}),
+        ("fed_round_jsonl", wall_jsonl * 1e3,
+         f"cohort={k};recorder=jsonl;jsonl_vs_null_pct={jsonl_pct:.1f}",
+         {"cohort": k, "recorder": "jsonl",
+          "jsonl_vs_null_pct": round(jsonl_pct, 1)}),
+    ):
+        rows.append(f"obs[{name}],{1e3 * wall_ms:.1f},{derived}")
+        entries.append({"name": name, "wall_ms": round(wall_ms, 6),
+                        "derived": derived, **extra})
+    path = write_bench("obs", "obs_overhead", entries)
+    rows.append(f"obs[json],0,{os.path.relpath(path)}")
     return rows
 
 
@@ -838,6 +964,7 @@ def main() -> None:
         "fed": fed_cohort_scaling,
         "stream": stream_scaling,
         "channel": channel_uplink,
+        "obs": obs_overhead,
     }
     selected = [s for s in args.only.split(",") if s] or list(benches)
     print("name,us_per_call,derived")

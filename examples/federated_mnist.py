@@ -60,6 +60,11 @@ def main():
                     help="per-round straggler probability")
     ap.add_argument("--chunk", type=int, default=0,
                     help="clients per scan chunk (0 = whole cohort in one pass)")
+    ap.add_argument("--record", default=None, metavar="RUN_DIR",
+                    help="record round/eval events to RUN_DIR (events.jsonl + "
+                         "meta.json; render with `python -m repro.obs "
+                         "summarize RUN_DIR`); --compare appends the method "
+                         "name per row")
     args = ap.parse_args()
 
     fed = FedQCSConfig(reduction_ratio=args.R, bits=args.Q, s_ratio=args.s_ratio,
@@ -120,12 +125,29 @@ def main():
             print(f"  ({m}: noisy uplink unsupported -> ideal channel)")
             kw["channel"] = "ideal"
         row_fed = _dc.replace(fed, codebook=cbk, bits=q, vq_dim=args.vq_dim)
+        recorder = None
+        if args.record:
+            from repro.obs import JsonlRecorder
+
+            label = m if cbk == "lloyd_max" else f"{m}+{cbk}"
+            run_dir = (
+                f"{args.record}/{label}" if len(rows) > 1 else args.record
+            )
+            recorder = JsonlRecorder(
+                run_dir,
+                config={"method": m, "codebook": cbk, "Q": q, **cohort_kw},
+            )
         r = run_federated(m, steps=args.steps, fed_cfg=row_fed,
-                          eval_every=max(args.steps // 10, 1), **kw)
+                          eval_every=max(args.steps // 10, 1), obs=recorder, **kw)
+        if recorder is not None:
+            recorder.close()
         nm = sum(r.nmses) / len(r.nmses) if r.nmses else float("nan")
         label = m if cbk == "lloyd_max" else f"{m}+{cbk}"
         print(f"{label:24s} {r.bits_per_entry:10.2f} {r.accs[-1]:9.3f} {nm:9.3f} {r.wall_s:5.0f}s")
         print(f"  acc trace: {[round(a, 3) for a in r.accs]}")
+    if args.record:
+        print(f"run log(s) in {args.record}: "
+              f"render with `python -m repro.obs summarize <run_dir>`")
 
 
 if __name__ == "__main__":

@@ -34,7 +34,7 @@ from repro.core.compression import (
     FedQCSConfig,
     blocks_to_tree,
 )
-from repro.core.gamp import em_gamp
+from repro.core.gamp import em_gamp, gamp_health
 from repro.core.recon_engine import ReconSpec
 from repro.core.reconstruction import (
     aggregate_and_estimate,
@@ -100,6 +100,14 @@ def reconstruct(
     Pallas kernels engage when resolved use_pallas is set AND
     ``codec.cfg.gamp_variance_mode == 'scalar'`` (see DESIGN.md).
 
+    A spec with ``return_info`` set returns ``(tree, info)`` instead of the
+    bare tree: ``info`` carries the solver's decode health -- the per-problem
+    ``converged`` flags and ``iters`` counts (a
+    :class:`~repro.core.gamp.GampInfo`, (K, nb) on EA, per group-block on
+    AE) plus their scalar summary (``gamp_iters_mean`` / ``gamp_iters_max``
+    / ``gamp_converged_frac``, live problems only) -- instead of computing
+    and discarding it (DESIGN.md #Observability).
+
     The pre-spec ``mode=``/``groups=`` keywords are a deprecated shim.
     """
     if recon is None:
@@ -122,6 +130,8 @@ def reconstruct(
     recon = recon.resolve(codec.cfg)
     alphas = jnp.stack([p.alpha for p in payloads])
     rhos = jnp.asarray(rhos, jnp.float32)
+    ginfo = None
+    live = None
     if recon.mode == "ea":
         # The payload words pass straight through to the packed
         # reconstruction engine (DESIGN.md #Recon-engine) -- the uint8 index
@@ -130,7 +140,11 @@ def reconstruct(
         blocks = estimate_and_aggregate_packed(
             codec, words, alphas, rhos,
             use_pallas=recon.use_pallas, chunk=recon.chunk,
+            with_info=recon.return_info,
         )
+        if recon.return_info:
+            blocks, ginfo = blocks
+            live = alphas > 0  # dead blocks freeze at iteration 0
     elif recon.channel is not None:
         # Joint-estimation decode of one superimposed reception: y_eff is
         # already the Bussgang aggregate estimate (eq. 23 over the air), so
@@ -143,7 +157,10 @@ def reconstruct(
         blocks = em_gamp(
             y_eff, nu, codec.a, gamp_config_from(codec),
             init_var=energy, use_pallas=recon.use_pallas,
+            with_info=recon.return_info,
         )
+        if recon.return_info:
+            blocks, ginfo = blocks
     else:
         # PS boundary: AE's Bussgang combine still consumes indices; unpack
         # here, once (codec.unpack knows the codebook's index width and
@@ -152,5 +169,13 @@ def reconstruct(
         blocks = aggregate_and_estimate(
             codec, codes, alphas, rhos,
             groups=recon.groups, use_pallas=recon.use_pallas,
+            with_info=recon.return_info,
         )
-    return blocks_to_tree(blocks, spec, payloads[0].nbar)
+        if recon.return_info:
+            blocks, ginfo = blocks
+    tree = blocks_to_tree(blocks, spec, payloads[0].nbar)
+    if not recon.return_info:
+        return tree
+    info = {"converged": ginfo.converged, "iters": ginfo.iters}
+    info.update(gamp_health(ginfo, live))
+    return tree, info

@@ -432,3 +432,21 @@ class BQCSCodec:
         the index view never materializes on the scalar families (see
         :func:`decode_packed`); vq unpacks indices then reads centroids."""
         return self.codebook.decode_packed(words, self.cfg.m)
+
+    # -- decode health -------------------------------------------------------
+    def clip_saturation(self, codes_or_words: jnp.ndarray, packed: bool = True):
+        """Fraction of code lanes pinned at an extreme codebook level --
+        the quantizer clip-saturation rate (repro.obs decode health).
+
+        Scalar families order their levels, so index 0 / L-1 means the input
+        overshot the quantizer's support: a rising rate flags an alpha
+        scaling (or Lloyd-Max fit) losing the gradient's tails.  Vector
+        codebooks have no level order, so vq reports a constant 0.  Jit-safe
+        scalar; padding lanes in packed words are excluded by the unpack
+        slice."""
+        q = self.codebook
+        if q.dim != 1:
+            return jnp.zeros(())
+        idx = self.unpack(codes_or_words) if packed else codes_or_words
+        extreme = (idx == 0) | (idx == q.n_levels - 1)
+        return jnp.mean(extreme.astype(jnp.float32))

@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +42,7 @@ from repro.core.codebook import as_codebook
 
 __all__ = [
     "GampConfig",
+    "GampInfo",
     "GampState",
     "qem_gamp",
     "qem_gamp_packed",
@@ -50,6 +51,7 @@ __all__ = [
     "tau_tables",
     "block_prior_energy",
     "norm_guard",
+    "gamp_health",
 ]
 
 _EPS = 1e-12
@@ -79,7 +81,31 @@ class GampConfig:
 
 
 class GampState(tuple):
-    """(ghat, nu_g, shat, theta, converged) -- opaque scan carry."""
+    """(ghat, nu_g, shat, theta, converged, iters) -- opaque scan carry."""
+
+
+class GampInfo(NamedTuple):
+    """Per-block decode-health counters of one GAMP solve (jit-safe aux).
+
+    converged: (nb,) bool -- early-freeze flag (True = the block hit the
+      tolerance before the trip cap; dead alpha == 0 rows count converged).
+    iters: (nb,) int32 -- iterations the block was live for (its
+      iterations-to-converge when the flag is set, else the trip cap).
+    Kernel-path solves have no freeze signal (fixed trip count), so their
+    info reports the static ``cfg.iters`` with every block converged --
+    callers that need true counts keep the XLA path.
+    """
+
+    converged: jnp.ndarray
+    iters: jnp.ndarray
+
+    @staticmethod
+    def static(nb: int, iters: int) -> "GampInfo":
+        """The fixed-trip-count placeholder the kernel routes report."""
+        return GampInfo(
+            converged=jnp.ones((nb,), bool),
+            iters=jnp.full((nb,), iters, jnp.int32),
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -335,8 +361,12 @@ def _gamp_run(
     scalar_var = cfg.variance_mode == "scalar"
 
     def body(carry):
-        ghat, nu_g, shat, theta, conv_prev = carry
+        ghat, nu_g, shat, theta, conv_prev, iters = carry
         ghat_old = ghat
+        # Count the iteration for every block still live at its start: the
+        # final count is iterations-to-converge for frozen blocks and the
+        # trip cap for the rest (one int32 add -- numerics untouched).
+        iters = iters + (~conv_prev).astype(jnp.int32)
         if scalar_var:
             nu_p = al2 / m * jnp.sum(nu_g, axis=-1, keepdims=True)  # (nb, 1)
             nu_p = jnp.broadcast_to(nu_p, (nblocks, m))
@@ -382,13 +412,13 @@ def _gamp_run(
             theta_new,
             theta,
         )
-        return (ghat_new, nu_g_new, shat_new, theta_new, converged)
+        return (ghat_new, nu_g_new, shat_new, theta_new, converged, iters)
 
     # Dead rows (alpha == 0: empty blocks, chunk padding) are frozen from
     # iteration 0: their final ghat is zeroed below either way, and they must
     # not gate the early-stop exit of a chunk they merely pad.
     conv0 = ~alive
-    state0 = (ghat0, nu_g0, shat0, theta0, conv0)
+    state0 = (ghat0, nu_g0, shat0, theta0, conv0, jnp.zeros((nblocks,), jnp.int32))
     if cfg.early_stop and cfg.tol > 0.0:
         # Data-dependent trip count: stop as soon as the whole batch froze.
         # Identical outputs to the static scan (frozen blocks are no-ops);
@@ -397,15 +427,35 @@ def _gamp_run(
             i, state = carry
             return (i < cfg.iters) & ~jnp.all(state[4])
 
-        _, (ghat, nu_g, _, theta, converged) = jax.lax.while_loop(
+        _, (ghat, nu_g, _, theta, converged, iters) = jax.lax.while_loop(
             cond, lambda c: (c[0] + 1, body(c[1])), (jnp.int32(0), state0)
         )
     else:
-        (ghat, nu_g, _, theta, converged), _ = jax.lax.scan(
+        (ghat, nu_g, _, theta, converged, iters), _ = jax.lax.scan(
             lambda c, _: (body(c), None), state0, None, length=cfg.iters
         )
     ghat = jnp.where(alive[:, None], ghat, 0.0)
-    return ghat, nu_g, theta, converged
+    return ghat, nu_g, theta, converged, iters
+
+
+def gamp_health(info: GampInfo, live: Optional[jnp.ndarray] = None):
+    """Jit-safe scalar summary of a GampInfo batch for the telemetry layer
+    (repro.obs): mean/max live iterations and the early-stop (converged-
+    before-cap) fraction, over the ``live`` problem mask (default: all).
+    Returns a dict of f32 scalars -- safe to merge into a stats pytree.
+    """
+    conv = info.converged.reshape(-1).astype(jnp.float32)
+    iters = info.iters.reshape(-1).astype(jnp.float32)
+    if live is None:
+        lf = jnp.ones_like(iters)
+    else:
+        lf = live.reshape(-1).astype(jnp.float32)
+    nlive = jnp.maximum(jnp.sum(lf), 1.0)
+    return {
+        "gamp_iters_mean": jnp.sum(iters * lf) / nlive,
+        "gamp_iters_max": jnp.max(iters * lf),
+        "gamp_converged_frac": jnp.sum(conv * lf) / nlive,
+    }
 
 
 def _kernel_dispatch_ok(cfg: GampConfig) -> bool:
@@ -416,8 +466,9 @@ def _kernel_dispatch_ok(cfg: GampConfig) -> bool:
 
 def _qem_gamp_xla(codes, alpha, a, quantizer, cfg):
     """Pure-XLA Q-EM-GAMP solve; returns (guarded ghat, per-block converged
-    flags) -- the flags feed the two-phase refinement sweep
-    (core/recon_engine.py).
+    flags, per-block live-iteration counts) -- the flags feed the two-phase
+    refinement sweep and the counters feed the decode-health telemetry
+    (core/recon_engine.py, repro.obs).
 
     Codebook dispatch: scalar families run the exact truncated-posterior
     channel on the codebook's cell edges (dither = per-lane edge shift); a
@@ -436,13 +487,13 @@ def _qem_gamp_xla(codes, alpha, a, quantizer, cfg):
         _quantized_channel, codes=codes, lo_tau=lo_tau, hi_tau=hi_tau,
         shift=cb.jnp_dither(),
     )
-    ghat, _, _, converged = _gamp_run(
+    ghat, _, _, converged, iters = _gamp_run(
         lambda p, v: out(p, v), a, alpha, init_var, cfg, nb, n, m
     )
     # The PS *knows* the true block norm (||g|| = sqrt(M)/alpha is
     # transmitted), so the guard clips against it exactly.
     true_norm = jnp.where(alive, jnp.sqrt(jnp.float32(m)) / jnp.where(alive, alpha, 1.0), 0.0)
-    return norm_guard(ghat, true_norm), converged | ~alive
+    return norm_guard(ghat, true_norm), converged | ~alive, iters
 
 
 def _vq_ea_xla(codes, alpha, a, cb, cfg: GampConfig):
@@ -450,7 +501,8 @@ def _vq_ea_xla(codes, alpha, a, cb, cfg: GampConfig):
     dequantized observation, Q(alpha A g) = gamma alpha A g + d with
     cov(d) = (psi - gamma^2) I, normalize by gamma*alpha, and run the AWGN
     channel -- structurally eq. 23-24 with a single worker.  Returns
-    (guarded ghat, converged flags), matching _qem_gamp_xla."""
+    (guarded ghat, converged flags, iteration counts), matching
+    _qem_gamp_xla."""
     m = a.shape[0]
     n = a.shape[1]
     nb = codes.shape[0]
@@ -463,11 +515,11 @@ def _vq_ea_xla(codes, alpha, a, cb, cfg: GampConfig):
     out = lambda p, v: _awgn_channel(p, v, y, nu)
     # alpha is absorbed into y, so the GAMP scaling is 1 for live rows; the
     # 0/1 mask keeps dead rows frozen from iteration 0 exactly as before.
-    ghat, _, _, converged = _gamp_run(
+    ghat, _, _, converged, iters = _gamp_run(
         out, a, alive.astype(jnp.float32), init_var, cfg, nb, n, m
     )
     true_norm = jnp.where(alive, jnp.sqrt(jnp.float32(m)) / safe, 0.0)
-    return norm_guard(ghat, true_norm), converged | ~alive
+    return norm_guard(ghat, true_norm), converged | ~alive, iters
 
 
 def _ea_kernel_ok(cb, cfg: GampConfig) -> bool:
@@ -508,10 +560,14 @@ def qem_gamp(
     quantizer,  # Codebook (or legacy LloydMaxQuantizer)
     cfg: GampConfig,
     use_pallas: bool = False,
+    with_info: bool = False,
 ) -> jnp.ndarray:
     """Q-EM-GAMP (Procedure 2): MMSE estimate of each block from its codes.
 
-    Returns (nb, N) reconstructed blocks (pre-concatenation).
+    Returns (nb, N) reconstructed blocks (pre-concatenation); with
+    ``with_info`` the return is ``(blocks, GampInfo)`` -- per-block converged
+    flags and live-iteration counts (static placeholders on kernel routes,
+    see :class:`GampInfo`).
 
     ``use_pallas`` routes the solve through the fused TPU kernels: the
     quantized-channel kernel (ops.qgamp_ea_run) for undithered scalar
@@ -528,18 +584,21 @@ def qem_gamp(
     (pinned by tests/test_kernels.py at the default tol).
     """
     cb = as_codebook(quantizer)
+    static_info = GampInfo.static(codes.shape[0], cfg.iters)
     if use_pallas and _kernel_dispatch_ok(cfg) and cb.dim > 1:
-        return _vq_ea_kernel(codes, alpha, a, cb, cfg)
+        ghat = _vq_ea_kernel(codes, alpha, a, cb, cfg)
+        return (ghat, static_info) if with_info else ghat
     if use_pallas and _ea_kernel_ok(cb, cfg):
         from repro.kernels import ops as kops  # deferred: kernels are optional
 
-        return kops.qgamp_ea_run(
+        ghat = kops.qgamp_ea_run(
             codes, alpha, a, cb.jnp_thresholds(),
             n_components=cfg.n_components, iters=cfg.iters, em=cfg.em,
             lam0=cfg.lam0_init,
         )
-    ghat, _ = _qem_gamp_xla(codes, alpha, a, cb, cfg)
-    return ghat
+        return (ghat, static_info) if with_info else ghat
+    ghat, converged, iters = _qem_gamp_xla(codes, alpha, a, cb, cfg)
+    return (ghat, GampInfo(converged, iters)) if with_info else ghat
 
 
 def qem_gamp_packed(
@@ -550,6 +609,7 @@ def qem_gamp_packed(
     cfg: GampConfig,
     m: int,  # true measurement count M (words carry >= M/dim index lanes)
     use_pallas: bool = False,
+    with_info: bool = False,
 ) -> jnp.ndarray:
     """Packed-domain Q-EM-GAMP: consumes the uint32 wire words directly.
 
@@ -562,22 +622,25 @@ def qem_gamp_packed(
     ``qem_gamp(unpack_codes(words, Q, n_codes), ...)`` in every mode.
     """
     cb = as_codebook(quantizer)
+    static_info = GampInfo.static(words.shape[0], cfg.iters)
     if use_pallas and _ea_kernel_ok(cb, cfg):
         from repro.kernels import ops as kops  # deferred: kernels are optional
 
-        return kops.qgamp_ea_run_packed(
+        ghat = kops.qgamp_ea_run_packed(
             words, alpha, a, cb.jnp_thresholds(),
             bits=cb.bits, m=m,
             n_components=cfg.n_components, iters=cfg.iters, em=cfg.em,
             lam0=cfg.lam0_init,
         )
+        return (ghat, static_info) if with_info else ghat
     from repro.core.compression import unpack_codes  # deferred: layering
 
     codes = unpack_codes(words, cb.bits, cb.n_codes(m))
     if use_pallas and _kernel_dispatch_ok(cfg) and cb.dim > 1:
-        return _vq_ea_kernel(codes, alpha, a, cb, cfg)
-    ghat, _ = _qem_gamp_xla(codes, alpha, a, cb, cfg)
-    return ghat
+        ghat = _vq_ea_kernel(codes, alpha, a, cb, cfg)
+        return (ghat, static_info) if with_info else ghat
+    ghat, converged, iters = _qem_gamp_xla(codes, alpha, a, cb, cfg)
+    return (ghat, GampInfo(converged, iters)) if with_info else ghat
 
 
 def em_gamp(
@@ -587,10 +650,13 @@ def em_gamp(
     cfg: GampConfig,
     init_var: Optional[jnp.ndarray] = None,  # (nb,) per-entry signal energy
     use_pallas: bool = False,
+    with_info: bool = False,
 ) -> jnp.ndarray:
     """EM-GAMP on a noisy *unquantized* observation (aggregate-and-estimate).
 
-    Returns (nb, N) reconstructed (already rho-weighted, aggregated) blocks.
+    Returns (nb, N) reconstructed (already rho-weighted, aggregated) blocks;
+    with ``with_info`` the return is ``(blocks, GampInfo)`` under the same
+    semantics as qem_gamp (static placeholder info on the kernel route).
     ``use_pallas`` dispatches to the fused kernel (ops.gamp_ae_run) under the
     same rules as qem_gamp: scalar-variance configs only, fixed trip count.
     """
@@ -604,14 +670,18 @@ def em_gamp(
     if use_pallas and _kernel_dispatch_ok(cfg):
         from repro.kernels import ops as kops  # deferred: kernels are optional
 
-        return kops.gamp_ae_run(
+        ghat = kops.gamp_ae_run(
             y, noise_var, a, jnp.asarray(init_var, jnp.float32),
             n_components=cfg.n_components, iters=cfg.iters, em=cfg.em,
             lam0=cfg.lam0_init,
         )
+        return (ghat, GampInfo.static(nb, cfg.iters)) if with_info else ghat
     alpha = jnp.ones((nb,), jnp.float32)
     nvar = jnp.asarray(noise_var, jnp.float32)[:, None]
     out = lambda p, v: _awgn_channel(p, v, y, nvar)
-    ghat, _, _, _ = _gamp_run(out, a, alpha, jnp.asarray(init_var, jnp.float32), cfg, nb, n, m)
+    ghat, _, _, converged, iters = _gamp_run(
+        out, a, alpha, jnp.asarray(init_var, jnp.float32), cfg, nb, n, m
+    )
     # Expected ||g_sum||^2 = init_var * N (see norm_guard).
-    return norm_guard(ghat, jnp.sqrt(jnp.maximum(init_var * n, 0.0)))
+    ghat = norm_guard(ghat, jnp.sqrt(jnp.maximum(init_var * n, 0.0)))
+    return (ghat, GampInfo(converged, iters)) if with_info else ghat

@@ -47,7 +47,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.compression import BQCSCodec
-from repro.core.gamp import GampConfig, _qem_gamp_xla, em_gamp, qem_gamp, qem_gamp_packed
+from repro.core.gamp import (
+    GampConfig,
+    GampInfo,
+    _qem_gamp_xla,
+    em_gamp,
+    qem_gamp,
+    qem_gamp_packed,
+)
 
 __all__ = [
     "ReconSpec",
@@ -79,6 +86,11 @@ class ReconSpec:
         produced by a channel family's ``combine`` hook (fed/channel.py --
         typed loosely here: core stays fed-agnostic).  AE only; the payloads
         then contribute alphas (quantization noise + GAMP init), not codes.
+      return_info: also return the solver's decode-health aux (per-block
+        converged flags + live-iteration counts, :class:`~repro.core.gamp.
+        GampInfo`) instead of discarding it -- ``api.reconstruct`` then
+        returns ``(tree, info)``.  Kernel routes report the static
+        placeholder info (fixed trip count, no freeze signal).
     """
 
     mode: str = "ae"
@@ -86,6 +98,7 @@ class ReconSpec:
     chunk: Optional[int] = None
     use_pallas: Optional[bool] = None
     channel: Any = None
+    return_info: bool = False
 
     def __post_init__(self):
         if self.mode not in ("ae", "ea"):
@@ -186,20 +199,47 @@ def ea_solve_flat(
     chunk: int = 0,
     mesh=None,
     axis_name: str = "recon",
+    with_info: bool = False,
 ) -> jnp.ndarray:
     """Solves a flat batch of per-(worker, block) Q-EM-GAMP problems ->
     (rows, N) block estimates.  The chunk solver is `qem_gamp_packed` when
-    ``packed`` (wire words in, in-VMEM/in-chunk unpack) else `qem_gamp`."""
+    ``packed`` (wire words in, in-VMEM/in-chunk unpack) else `qem_gamp`.
+
+    ``with_info`` returns ``(estimates, GampInfo)`` instead: the per-row
+    converged flags and live-iteration counts ride the chunk scan as two
+    extra output columns (the same trick as `ea_decode_two_phase`'s flag
+    column), so the info costs nothing beyond the columns themselves.
+    """
     n = codec.cfg.block_size
     if packed:
-        solve = lambda o, al: qem_gamp_packed(
-            o, al, codec.a, codec.codebook, gamp, codec.cfg.m, use_pallas=use_pallas
+        base = lambda o, al: qem_gamp_packed(
+            o, al, codec.a, codec.codebook, gamp, codec.cfg.m,
+            use_pallas=use_pallas, with_info=with_info,
         )
     else:
-        solve = lambda o, al: qem_gamp(
-            o, al, codec.a, codec.codebook, gamp, use_pallas=use_pallas
+        base = lambda o, al: qem_gamp(
+            o, al, codec.a, codec.codebook, gamp,
+            use_pallas=use_pallas, with_info=with_info,
         )
-    return chunked_rows(solve, (obs, alpha), chunk, n, mesh=mesh, axis_name=axis_name)
+    if not with_info:
+        return chunked_rows(base, (obs, alpha), chunk, n, mesh=mesh, axis_name=axis_name)
+
+    def solve(o, al):
+        gh, info = base(o, al)
+        return jnp.concatenate(
+            [
+                gh,
+                info.converged.astype(jnp.float32)[:, None],
+                info.iters.astype(jnp.float32)[:, None],
+            ],
+            axis=1,
+        )
+
+    stacked = chunked_rows(
+        solve, (obs, alpha), chunk, n + 2, mesh=mesh, axis_name=axis_name
+    )
+    info = GampInfo(stacked[:, n] > 0.5, stacked[:, n + 1].astype(jnp.int32))
+    return stacked[:, :n], info
 
 
 def ea_decode(
@@ -215,19 +255,23 @@ def ea_decode(
     mesh=None,
     axis_name: str = "recon",
     spec: Optional[ReconSpec] = None,
+    with_info: bool = False,
 ) -> jnp.ndarray:
     """FedQCS-EA decode through the engine: flatten the (K, nb) problem grid,
     chunk/shard-solve, rho-weight and sum -> (nb, N) aggregated blocks.
 
     Jit-safe (the chunk stream is a ``lax.scan``); this is what
     `reconstruction.estimate_and_aggregate` / ``_packed`` delegate to.
-    A ``spec`` (ReconSpec) overrides the chunk/use_pallas knobs in one value.
+    A ``spec`` (ReconSpec) overrides the chunk/use_pallas knobs in one value
+    (its ``return_info`` implies ``with_info``); with info requested the
+    return is ``(blocks, GampInfo)`` whose aux arrays are (K, nb)-shaped.
     """
     from repro.core.reconstruction import gamp_config_from  # deferred: layering
 
     if spec is not None:
         spec = spec.resolve(codec.cfg)
         chunk, use_pallas = spec.chunk, spec.use_pallas
+        with_info = with_info or spec.return_info
     gamp = gamp or gamp_config_from(codec)
     k, nb = obs.shape[:2]
     flat = ea_solve_flat(
@@ -240,7 +284,14 @@ def ea_decode(
         chunk=chunk,
         mesh=mesh,
         axis_name=axis_name,
+        with_info=with_info,
     )
+    if with_info:
+        flat, info = flat
+        agg = jnp.einsum("k,kbn->bn", rhos, flat.reshape(k, nb, -1))
+        return agg, GampInfo(
+            info.converged.reshape(k, nb), info.iters.reshape(k, nb)
+        )
     return jnp.einsum("k,kbn->bn", rhos, flat.reshape(k, nb, -1))
 
 
@@ -283,16 +334,20 @@ def ea_decode_two_phase(
         (lambda o: codec.unpack(o)) if packed else (lambda o: o)
     )
     def solve_flags(o, al):
-        gh, fl = _qem_gamp_xla(codes_of(o), al, codec.a, codec.codebook, p1)
-        # converged flag rides as one extra output column through the scan
-        return jnp.concatenate([gh, fl.astype(jnp.float32)[:, None]], axis=1)
+        gh, fl, it = _qem_gamp_xla(codes_of(o), al, codec.a, codec.codebook, p1)
+        # converged flag + live-iteration count ride as extra output columns
+        return jnp.concatenate(
+            [gh, fl.astype(jnp.float32)[:, None], it.astype(jnp.float32)[:, None]],
+            axis=1,
+        )
 
     stacked = chunked_rows(
-        solve_flags, (flat_obs, flat_alpha), chunk, n + 1,
+        solve_flags, (flat_obs, flat_alpha), chunk, n + 2,
         mesh=mesh, axis_name=axis_name,
     )
     ghat = stacked[:, :n]
     converged = np.asarray(stacked[:, n]) > 0.5
+    iters1 = np.asarray(stacked[:, n + 1])
 
     # Phase 2: exact-variance refinement of the survivors only.
     survivors = np.flatnonzero(~converged)
@@ -304,7 +359,7 @@ def ea_decode_two_phase(
             early_stop=False,
         )
         idx = jnp.asarray(survivors)
-        refined, _ = jax.jit(
+        refined, _, _ = jax.jit(
             lambda o, al: _qem_gamp_xla(codes_of(o), al, codec.a, codec.codebook, p2)
         )(flat_obs[idx], flat_alpha[idx])
         ghat = ghat.at[idx].set(refined)
@@ -312,6 +367,11 @@ def ea_decode_two_phase(
         "rows": rows,
         "phase2_rows": int(survivors.size),
         "phase2_frac": float(survivors.size) / max(rows, 1),
+        # decode-health counters (repro.obs): phase-1 effort + the
+        # unconverged-survivor count IS phase2_rows, recorded explicitly
+        # under the counter's name so run logs stay self-describing.
+        "phase1_iters_mean": float(iters1.mean()) if rows else 0.0,
+        "unconverged_survivors": int(survivors.size),
     }
     agg = jnp.einsum("k,kbn->bn", rhos, ghat.reshape(k, nb, n))
     return agg, stats
@@ -323,10 +383,13 @@ def decode_from_stats(
     gamp: Optional[GampConfig] = None,
     *,
     use_pallas: bool = False,
+    with_info: bool = False,
 ) -> jnp.ndarray:
     """Finalizes a streamed round straight from folded partial sufficient
     statistics (core/aggregator.py; DESIGN.md #Streaming-PS) -> (nb, N)
-    aggregated blocks.
+    aggregated blocks.  ``with_info`` returns ``(blocks, GampInfo | None)``:
+    the finalize EM-GAMP's decode health on the "ae" path, None on "ea"
+    (whose GAMP ran per ingest batch -- StreamingPS accumulates that).
 
     "ea" stats already hold the raw-weighted sum of per-client GAMP
     estimates, so finalization is just the 1/W renormalization.  "ae" stats
@@ -341,6 +404,9 @@ def decode_from_stats(
 
     y, nu, energy = normalized_stats(stats)
     if stats.mode == "ea":
-        return y
+        return (y, None) if with_info else y
     gamp = gamp or gamp_config_from(codec)
-    return em_gamp(y, nu, codec.a, gamp, init_var=energy, use_pallas=use_pallas)
+    return em_gamp(
+        y, nu, codec.a, gamp, init_var=energy,
+        use_pallas=use_pallas, with_info=with_info,
+    )

@@ -55,8 +55,12 @@ def estimate_and_aggregate(
     gamp: Optional[GampConfig] = None,
     use_pallas: Optional[bool] = None,
     chunk: Optional[int] = None,
+    with_info: bool = False,
 ) -> jnp.ndarray:
-    """FedQCS-EA: returns the reconstructed global blocks (nb, N).
+    """FedQCS-EA: returns the reconstructed global blocks (nb, N); with
+    ``with_info`` returns ``(blocks, GampInfo)`` whose per-(worker, block)
+    converged flags / iteration counts are (K, nb)-shaped (decode health,
+    repro.obs).
 
     ``use_pallas`` (default: ``codec.cfg.use_kernels``) routes the batched
     Q-EM-GAMP solve through the fused TPU kernel -- scalar-variance, fixed
@@ -76,7 +80,7 @@ def estimate_and_aggregate(
         chunk = codec.cfg.recon_chunk
     return recon_engine.ea_decode(
         codec, codes, alphas, rhos, gamp,
-        packed=False, use_pallas=use_pallas, chunk=chunk,
+        packed=False, use_pallas=use_pallas, chunk=chunk, with_info=with_info,
     )
 
 
@@ -88,6 +92,7 @@ def estimate_and_aggregate_packed(
     gamp: Optional[GampConfig] = None,
     use_pallas: Optional[bool] = None,
     chunk: Optional[int] = None,
+    with_info: bool = False,
 ) -> jnp.ndarray:
     """Packed-domain FedQCS-EA: consumes the uint32 wire words straight from
     the collective.  The (K, nb, M) uint8 code tensor never materializes:
@@ -105,7 +110,7 @@ def estimate_and_aggregate_packed(
         chunk = codec.cfg.recon_chunk
     return recon_engine.ea_decode(
         codec, words, alphas, rhos, gamp,
-        packed=True, use_pallas=use_pallas, chunk=chunk,
+        packed=True, use_pallas=use_pallas, chunk=chunk, with_info=with_info,
     )
 
 
@@ -117,11 +122,14 @@ def aggregate_and_estimate(
     groups: int = 1,  # G
     gamp: Optional[GampConfig] = None,
     use_pallas: Optional[bool] = None,
+    with_info: bool = False,
 ) -> jnp.ndarray:
     """FedQCS-AE: Bussgang-aggregate within groups, EM-GAMP per group, sum.
 
     ``use_pallas`` (default: ``codec.cfg.use_kernels``) routes the group GAMP
     solves through the fused kernel under the same rules as em_gamp.
+    ``with_info`` returns ``(blocks, GampInfo)``; the info arrays are
+    (G*nb,)-shaped (one GAMP problem per group-block).
     """
     gamp = gamp or gamp_config_from(codec)
     if use_pallas is None:
@@ -145,5 +153,11 @@ def aggregate_and_estimate(
     y = jnp.concatenate(ys, axis=0)  # (G*nb, M)
     nu = jnp.concatenate(nus, axis=0)
     energy = jnp.concatenate(energies, axis=0)
-    ghat = em_gamp(y, nu, codec.a, gamp, init_var=energy, use_pallas=use_pallas)
+    ghat = em_gamp(
+        y, nu, codec.a, gamp, init_var=energy,
+        use_pallas=use_pallas, with_info=with_info,
+    )
+    if with_info:
+        ghat, info = ghat
+        return jnp.sum(ghat.reshape(groups, nb, n), axis=0), info
     return jnp.sum(ghat.reshape(groups, nb, n), axis=0)

@@ -22,9 +22,10 @@ Family hooks (all jit-safe; ``cfg`` is the frozen :class:`ChannelConfig`):
   * ``effective_noise(realization) -> (C, nblocks)`` -- the per-client
     post-equalization variance threaded into ``em_gamp``'s ``noise_var``
     (per-client families; MAC families estimate noise in ``combine``).
-  * ``combine(cfg, realization, y, w, active) -> (y_eff, nu_eff)`` --
-    multiple-access only: joint-estimation decode of the superimposed
-    reception (see below).
+  * ``combine(cfg, realization, y, w, active, ..., with_aux=False) ->
+    (y_eff, nu_eff)`` -- multiple-access only: joint-estimation decode of
+    the superimposed reception (see below); ``with_aux=True`` appends a
+    scalar combiner-health dict (repro.obs decode counters).
 
 Traits drive the engine's method gating (no string dispatch):
 
@@ -301,7 +302,8 @@ def mimo_combine(
     active: jnp.ndarray,  # (C,) 1.0 = transmitted this round, 0.0 = silent
     psi: float = 1.0,  # codebook per-entry second moment (transmit power)
     tx_gain: Optional[jnp.ndarray] = None,  # mimo_tx_gain eta (None = 1)
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    with_aux: bool = False,
+) -> Tuple[jnp.ndarray, ...]:
     """Joint-estimation decode: spatial combining of ``Y = H X + sigma N``
     into an estimate of the rho-weighted aggregate measurement vector plus
     its effective post-combining noise variance.
@@ -331,6 +333,14 @@ def mimo_combine(
     Returns ``(y_eff (nb, M), nu_eff (nb,))`` -- a linear AWGN observation of
     the aggregated gradient, exactly what ``em_gamp``'s ``noise_var`` hook
     consumes next to the eq. 24 quantization term.
+
+    ``with_aux`` appends a jit-safe scalar dict of combiner health --
+    ``csi_target_mismatch`` (mean squared combining-response error
+    ``(f^T h_hat_k - 1)^2`` over active columns: how far imperfect CSI pulls
+    the combiner off its unit-gain target) and ``combiner_norm2``
+    (``||f||^2``, the receiver-noise amplification) -- for repro.obs.  Every
+    multiple-access family's ``combine`` hook accepts this kwarg (part of
+    the protocol), so the engine stays free of kind dispatch.
     """
     h_hat = real.h_hat
     if tx_gain is not None:
@@ -362,6 +372,13 @@ def mimo_combine(
         inv = jnp.where(tx_gain > 0, 1.0 / jnp.maximum(tx_gain, 1e-30), 0.0)
         y_eff = y_eff * inv
         nu = nu * jnp.square(inv)
+    if with_aux:
+        n_active = jnp.maximum(jnp.sum(active), 1.0)
+        aux = {
+            "csi_target_mismatch": jnp.sum(jnp.square(e) * active) / n_active,
+            "combiner_norm2": f2,
+        }
+        return y_eff, nu, aux
     return y_eff, nu
 
 

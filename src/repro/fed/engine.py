@@ -49,13 +49,16 @@ from repro.core.compression import (
     FedQCSConfig,
     blocks_to_tree,
     flatten_to_blocks,
+    packed_width,
 )
-from repro.core.gamp import em_gamp
+from repro.core.gamp import em_gamp, gamp_health
 from repro.core.reconstruction import (
     aggregate_and_estimate,
     estimate_and_aggregate_packed,
     gamp_config_from,
 )
+from repro.obs import NULL_RECORDER
+from repro.obs.trace import SpanCollector, span
 from repro.fed.channel import (
     CHANNEL_FAMILIES,
     ChannelConfig,
@@ -183,7 +186,16 @@ class TokenClientData:
 
 class CohortEngine:
     """Stateful driver: owns params, per-client residuals, server-opt and
-    scheduler state; each :meth:`run_round` is one federated round."""
+    scheduler state; each :meth:`run_round` is one federated round.
+
+    ``obs`` is a :class:`repro.obs.MetricsRecorder` (default: the null
+    recorder).  Its ``active`` flag is read ONCE here and treated as static:
+    an active recorder makes the jitted PS pass return the decode-health
+    auxiliaries (GAMP iters/convergence, clip saturation, combiner health)
+    and wraps each round phase in a blocking span; the null recorder builds
+    the exact pre-telemetry graphs, so it costs nothing (pinned by the
+    ``obs`` bench).  Recording itself happens on the host, once per round.
+    """
 
     def __init__(
         self,
@@ -196,6 +208,7 @@ class CohortEngine:
         chan: ChannelConfig = ChannelConfig(),
         server: ServerOptConfig = ServerOptConfig(),
         stream: Optional[StreamConfig] = None,
+        obs: Any = None,
     ):
         if cohort.method not in METHODS:
             raise ValueError(f"unknown method {cohort.method!r} (choose from {METHODS})")
@@ -221,6 +234,9 @@ class CohortEngine:
         self._chan_family = fam
         self.cohort, self.sched, self.chan, self.server = cohort, sched, chan, server
         self.stream = stream
+        self.obs = obs if obs is not None else NULL_RECORDER
+        self._collect = bool(self.obs.active)  # static: fixes the jitted graphs
+        self._spans = SpanCollector() if self._collect else None
         self.fed_cfg = fed_cfg or FedQCSConfig()
         self.grad_fn = grad_fn
         self.data = data
@@ -266,6 +282,7 @@ class CohortEngine:
                 use_pallas=self.fed_cfg.use_kernels,
                 recon_chunk=self.fed_cfg.recon_chunk,
                 chan=self.chan if fam.multiple_access else None,
+                collect_health=self._collect,
             )
             self._noise_keys_jit = jax.jit(
                 lambda jids, k: jax.vmap(lambda i: jax.random.fold_in(k, i))(jids)
@@ -288,6 +305,22 @@ class CohortEngine:
                 step,
             )
         )
+        if self._collect:
+            # one fused reduction per round: update + param global l2 norms
+            self._norms_jit = jax.jit(
+                lambda blocks, params: (
+                    jnp.sqrt(jnp.sum(jnp.square(blocks))),
+                    jnp.sqrt(
+                        sum(
+                            jnp.sum(jnp.square(x))
+                            for x in jax.tree_util.tree_leaves(params)
+                        )
+                    ),
+                )
+            )
+            self._sat_jit = (
+                jax.jit(self.codec.clip_saturation) if self.codec is not None else None
+            )
 
     def _prep_fn(self, rho0, mask, jids, kr):
         r = rho0 * mask
@@ -397,6 +430,15 @@ class CohortEngine:
         aggregate through ``fam.combine``."""
         method = self.cohort.method
         stats: Dict[str, jnp.ndarray] = {}
+        if self._collect and self.codec is not None:
+            # quantizer clip-saturation rate off the wire payload (scalar
+            # families; vq reports 0 -- see BQCSCodec.clip_saturation)
+            if "words" in payloads:
+                stats["clip_saturation"] = self.codec.clip_saturation(payloads["words"])
+            elif "codes" in payloads:
+                stats["clip_saturation"] = self.codec.clip_saturation(
+                    payloads["codes"], packed=False
+                )
         true_sum = None
         if "blocks" in payloads:
             true_sum = jnp.einsum("k,kbn->bn", rhos_eff, payloads["blocks"])
@@ -422,8 +464,12 @@ class CohortEngine:
             # Packed-domain chunked EA decode (words straight from the client
             # pass; chunking per FedQCSConfig.recon_chunk).
             ghat = estimate_and_aggregate_packed(
-                self.codec, payloads["words"], payloads["alpha"], rhos_eff, self.gamp
+                self.codec, payloads["words"], payloads["alpha"], rhos_eff,
+                self.gamp, with_info=self._collect,
             )
+            if self._collect:
+                ghat, ginfo = ghat
+                stats.update(gamp_health(ginfo, live=payloads["alpha"] > 0))
         else:  # fedqcs-ae
             codes, alphas = payloads["codes"], payloads["alpha"]
             q = self.codec.codebook
@@ -435,7 +481,11 @@ class CohortEngine:
                 ghat = aggregate_and_estimate(
                     self.codec, codes, alphas, rhos_eff,
                     groups=self.cohort.groups, gamp=self.gamp,
+                    with_info=self._collect,
                 )
+                if self._collect:
+                    ghat, ginfo = ghat
+                    stats.update(gamp_health(ginfo))
             else:
                 m = self.fed_cfg.m
                 deq = self.codec.dequantize(codes)  # (C, nb, M)
@@ -454,8 +504,17 @@ class CohortEngine:
                     eta = mimo_tx_gain(w, active)
                     x = (eta * w)[..., None] * deq  # (C, nb, M) transmit rows
                     y_rx = fam.transmit(self.chan, chan, x, key)
-                    y, nu_ch = fam.combine(self.chan, chan, y_rx, w, active,
-                                           psi=q.psi, tx_gain=eta)
+                    if self._collect:
+                        # combiner-health aux (CSI mismatch, ||f||^2) is part
+                        # of the combine hook protocol -- no kind dispatch
+                        y, nu_ch, ch_aux = fam.combine(
+                            self.chan, chan, y_rx, w, active,
+                            psi=q.psi, tx_gain=eta, with_aux=True,
+                        )
+                        stats.update(ch_aux)
+                    else:
+                        y, nu_ch = fam.combine(self.chan, chan, y_rx, w, active,
+                                               psi=q.psi, tx_gain=eta)
                 else:
                     # Per-client reception: equalized rows + their effective
                     # variance, Bussgang-combined at the PS (eq. 23/24 +
@@ -469,7 +528,11 @@ class CohortEngine:
                 ghat = em_gamp(
                     y, nu_q + nu_ch, self.codec.a, self.gamp,
                     init_var=energy, use_pallas=self.fed_cfg.use_kernels,
+                    with_info=self._collect,
                 )
+                if self._collect:
+                    ghat, ginfo = ghat
+                    stats.update(gamp_health(ginfo))
         if self.cohort.record_nmse and true_sum is not None and method != "none":
             num = jnp.sum(jnp.square(ghat - true_sum))
             den = jnp.sum(jnp.square(true_sum)) + 1e-30
@@ -477,6 +540,46 @@ class CohortEngine:
         return ghat, stats
 
     # -- round loop ---------------------------------------------------------
+
+    def _staleness(self, prev_sched, ids, t) -> np.ndarray:
+        """Cohort staleness at selection time: rounds since each member's
+        last successful participation (0 for never-participated), mirroring
+        the async scheduler's discount input."""
+        last = prev_sched.last_round[ids]
+        return np.where(last < 0, 0, t - 1 - last)
+
+    def _wire_up_bytes(self, participating: float):
+        """Uplink wire cost this round: what the participants' payloads cost
+        on the canonical wire (packed words + one f32 alpha per block for the
+        fedqcs/qiht families, 1 bit/entry for signsgd; None where the method
+        has no defined wire format)."""
+        method = self.cohort.method
+        if self.codec is not None and method in EF_METHODS:
+            q = self.codec.codebook
+            w = packed_width(q.n_codes(self.fed_cfg.m), q.bits)
+            return participating * self.nb * (w * 32 + 32) / 8.0
+        if method == "signsgd":
+            return participating * self.nb * self.n / 8.0
+        return None
+
+    def _record_round(self, t, out, staleness, ghat_blocks) -> None:
+        """Assembles and records the round event (host side, once per round).
+        The event is a superset of the returned stats dict: envelope fields
+        come from the recorder, wire/norm/staleness/phase timings here."""
+        event: Dict[str, Any] = dict(out)
+        event["round"] = t
+        event["staleness_mean"] = float(np.mean(staleness)) if len(staleness) else 0.0
+        wire = self._wire_up_bytes(out["participating"])
+        if wire is not None:
+            event["wire_up_bytes"] = wire
+        # model broadcast: every cohort member pulls the nbar f32 params
+        event["wire_down_bytes"] = float(out["cohort"]) * self.nbar * 4.0
+        un, pn = self._norms_jit(ghat_blocks, self.params)
+        event["update_norm"], event["param_norm"] = float(un), float(pn)
+        phase = self._spans.drain()
+        event["phase_ms"] = phase
+        event["round_ms"] = sum(phase.values())
+        self.obs.record("round", event)
 
     def run_round(self) -> Dict[str, float]:
         """One federated round; advances params/residuals/server state and
@@ -488,9 +591,13 @@ class CohortEngine:
         ids, rho0, new_sched = select_cohort(
             self.sched, prev_sched, t, self.data.counts
         )
+        stale = self._staleness(prev_sched, ids, t) if self._collect else ()
         kr = jax.random.fold_in(self.key, t)
         k_chan, k_noise = jax.random.split(kr)
-        chan = self._uplink_jit(k_chan, len(ids), self.nb)
+        with span("uplink", self._spans):
+            chan = self._uplink_jit(k_chan, len(ids), self.nb)
+            if self._collect:
+                jax.block_until_ready(chan)
         # Channel outage is a failed participation: un-stamp those clients so
         # the async staleness discount sees their true last *successful*
         # round (their residual carries the full gradient meanwhile).
@@ -501,20 +608,32 @@ class CohortEngine:
         jids = jnp.asarray(ids)
         rhos_eff, keys = self._prep_jit(jnp.asarray(rho0), chan.mask, jids, kr)
 
-        batch = self.data.cohort_batch(t, ids)
-        res_c = self.residuals[jids]
+        with span("client_pass", self._spans):
+            batch = self.data.cohort_batch(t, ids)
+            res_c = self.residuals[jids]
+            payloads, new_res = self._client_pass(
+                self.params, batch, res_c, rhos_eff, keys
+            )
+            if self._collect:
+                jax.block_until_ready(payloads)
+        with span("decode", self._spans):
+            ghat_blocks, stats = self._ps_jit(payloads, rhos_eff, chan, k_noise)
+            if self._collect:
+                jax.block_until_ready(ghat_blocks)
 
-        payloads, new_res = self._client_pass(self.params, batch, res_c, rhos_eff, keys)
-        ghat_blocks, stats = self._ps_jit(payloads, rhos_eff, chan, k_noise)
-
-        self.residuals = self.residuals.at[jids].set(new_res)
-        self.params, self.server_state = self._apply_jit(
-            ghat_blocks, self.params, self.server_state, t
-        )
+        with span("apply", self._spans):
+            self.residuals = self.residuals.at[jids].set(new_res)
+            self.params, self.server_state = self._apply_jit(
+                ghat_blocks, self.params, self.server_state, t
+            )
+            if self._collect:
+                jax.block_until_ready(self.params)
         self.round = t + 1
         out = {k: float(v) for k, v in stats.items()}
         out["cohort"] = len(ids)
         out["participating"] = float(jnp.sum(rhos_eff > 0))
+        if self._collect:
+            self._record_round(t, out, stale, ghat_blocks)
         return out
 
     def _run_round_streaming(self) -> Dict[str, float]:
@@ -529,9 +648,13 @@ class CohortEngine:
         ids, rho0, new_sched = select_cohort(
             self.sched, prev_sched, t, self.data.counts
         )
+        stale = self._staleness(prev_sched, ids, t) if self._collect else ()
         kr = jax.random.fold_in(self.key, t)
         k_chan, k_noise = jax.random.split(kr)
-        chan = self._uplink_jit(k_chan, len(ids), self.nb)
+        with span("uplink", self._spans):
+            chan = self._uplink_jit(k_chan, len(ids), self.nb)
+            if self._collect:
+                jax.block_until_ready(chan)
         mask = np.asarray(chan.mask)
         alive = (np.asarray(rho0) > 0) & (mask > 0)
         times = simulate_arrivals(self.stream, t, len(ids), alive)
@@ -552,9 +675,12 @@ class CohortEngine:
         # reference weighting; the mask is already folded into w_raw.
         rhos_eff, keys = self._prep_jit(jw, jnp.ones_like(jw), jids, kr)
 
-        batch = self.data.cohort_batch(t, ids)
-        res_c = self.residuals[jids]
-        payloads, new_res = self._client_pass(self.params, batch, res_c, jw, keys)
+        with span("client_pass", self._spans):
+            batch = self.data.cohort_batch(t, ids)
+            res_c = self.residuals[jids]
+            payloads, new_res = self._client_pass(self.params, batch, res_c, jw, keys)
+            if self._collect:
+                jax.block_until_ready(payloads)
 
         fam = self._chan_family
         nu_chan = noise_keys = chan_real = chan_key = None
@@ -567,16 +693,22 @@ class CohortEngine:
             nu_chan = fam.effective_noise(chan)
             noise_keys = self._noise_keys_jit(jids, k_noise)
         batches = batch_arrivals(times, self.stream.deadline, self.stream.batch_clients)
-        ghat_blocks, sinfo = stream_decode(
-            self.codec, payloads["words"], payloads["alpha"], w_raw, batches,
-            nu_chan=nu_chan, noise_keys=noise_keys,
-            chan_real=chan_real, chan_key=chan_key, ps=self._stream_ps,
-        )
+        with span("fold", self._spans):
+            ghat_blocks, sinfo = stream_decode(
+                self.codec, payloads["words"], payloads["alpha"], w_raw, batches,
+                nu_chan=nu_chan, noise_keys=noise_keys,
+                chan_real=chan_real, chan_key=chan_key, ps=self._stream_ps,
+            )
+            if self._collect:
+                jax.block_until_ready(ghat_blocks)
 
-        self.residuals = self.residuals.at[jids].set(new_res)
-        self.params, self.server_state = self._apply_jit(
-            ghat_blocks, self.params, self.server_state, t
-        )
+        with span("apply", self._spans):
+            self.residuals = self.residuals.at[jids].set(new_res)
+            self.params, self.server_state = self._apply_jit(
+                ghat_blocks, self.params, self.server_state, t
+            )
+            if self._collect:
+                jax.block_until_ready(self.params)
         self.round = t + 1
         out = {
             k: float(v)
@@ -588,6 +720,10 @@ class CohortEngine:
         out["cohort"] = len(ids)
         out["participating"] = float(np.sum(w_raw > 0))
         out["arrived"] = float(np.sum(arrived))
+        if self._collect:
+            if self._sat_jit is not None:
+                out["clip_saturation"] = float(self._sat_jit(payloads["words"]))
+            self._record_round(t, out, stale, ghat_blocks)
         return out
 
     def run(self, rounds: int) -> List[Dict[str, float]]:
@@ -626,7 +762,17 @@ def _smoke_main(argv=None):
         help="streaming PS mode: sub-cohort ingest batch size (0 = barrier round)",
     )
     ap.add_argument("--deadline", type=float, default=8.0)
+    ap.add_argument(
+        "--record", default=None, metavar="RUN_DIR",
+        help="write events.jsonl + meta.json to this run dir (repro.obs)",
+    )
     args = ap.parse_args(argv)
+
+    recorder = None
+    if args.record:
+        from repro.obs import JsonlRecorder
+
+        recorder = JsonlRecorder(args.record, config=vars(args))
 
     x, y = toy_classification()
     parts = partition_indices(
@@ -653,10 +799,14 @@ def _smoke_main(argv=None):
         stream=StreamConfig(batch_clients=args.stream, deadline=args.deadline)
         if args.stream > 0
         else None,
+        obs=recorder,
     )
     for i, stats in enumerate(engine.run(args.rounds)):
         print("round", i, stats)
         assert all(np.isfinite(v) for v in stats.values()), stats
+    if recorder is not None:
+        recorder.close()
+        print("recorded:", recorder.run_dir)
     print("smoke ok:", args.clients, "clients,", args.rounds, "rounds")
 
 

@@ -48,7 +48,7 @@ import numpy as np
 
 from repro.core import aggregator, bussgang
 from repro.core.compression import BQCSCodec
-from repro.core.gamp import GampConfig
+from repro.core.gamp import GampConfig, gamp_health
 from repro.core.recon_engine import decode_from_stats, ea_solve_flat
 from repro.fed.channel import (
     ChannelConfig,
@@ -180,6 +180,12 @@ class StreamingPS:
     tree.  Batches must be padded to a fixed ``batch_clients`` width by the
     caller (zero-weight pad slots contribute exactly nothing) so every fold
     hits the same compiled shape.
+
+    ``collect_health`` is STATIC (decided at construction, like the engine's
+    recorder activity): when set, the jitted EA folds also return per-batch
+    GAMP health sums (iters / converged over live problems) accumulated
+    lazily on device -- no extra host sync per batch -- and the AE finalize
+    decodes with ``with_info``; :meth:`health` summarizes after finalize.
     """
 
     def __init__(
@@ -191,6 +197,7 @@ class StreamingPS:
         use_pallas: bool = False,
         recon_chunk: int = 0,
         chan: Optional[ChannelConfig] = None,
+        collect_health: bool = False,
     ):
         if mode not in ("ae", "ea"):
             raise ValueError(f"unknown streaming mode {mode!r} (choose 'ae' or 'ea')")
@@ -260,16 +267,33 @@ class StreamingPS:
                 packed=True,
                 use_pallas=use_pallas,
                 chunk=recon_chunk,
+                with_info=collect_health,
             )
+            if collect_health:
+                ghat, ginfo = ghat
+                live = (alphas.reshape(b * nb) > 0).astype(jnp.float32)
+                aux = {
+                    "iters_sum": jnp.sum(ginfo.iters.astype(jnp.float32) * live),
+                    "conv_sum": jnp.sum(ginfo.converged.astype(jnp.float32) * live),
+                    "iters_max": jnp.max(ginfo.iters.astype(jnp.float32) * live),
+                    "live": jnp.sum(live),
+                }
+                return aggregator.ea_batch_stats(ghat.reshape(b, nb, -1), w), aux
             return aggregator.ea_batch_stats(ghat.reshape(b, nb, -1), w)
 
+        self.collect_health = collect_health
+        self._health_acc: Optional[Dict[str, jnp.ndarray]] = None
+        self._final_info = None
         self._fold_ae_ideal = jax.jit(fold_ae_ideal)
         self._fold_ae_noisy = jax.jit(fold_ae_noisy)
         self._fold_ae_mimo = jax.jit(fold_ae_mimo) if fam is not None else None
         self.chan = chan
         self._fold_ea = jax.jit(fold_ea)
         self._final = jax.jit(
-            lambda stats: decode_from_stats(codec, stats, self.gamp, use_pallas=use_pallas)
+            lambda stats: decode_from_stats(
+                codec, stats, self.gamp,
+                use_pallas=use_pallas, with_info=collect_health,
+            )
         )
 
     def begin_round(self, nb: int) -> None:
@@ -277,6 +301,8 @@ class StreamingPS:
         self.tree = aggregator.AggregatorTree(
             aggregator.zero_stats(self.mode, nb, width), fanout=self.stream.fanout
         )
+        self._health_acc = None
+        self._final_info = None
 
     def fold_batch(
         self, words, alphas, weights, nu_chan=None, noise_keys=None, mimo=None
@@ -287,6 +313,16 @@ class StreamingPS:
         multiple-access streaming (requires construction with ``chan=``)."""
         if self.mode == "ea":
             stats = self._fold_ea(words, alphas, weights)
+            if self.collect_health:
+                stats, aux = stats
+                # lazy device-side accumulation: no host sync until health()
+                if self._health_acc is None:
+                    self._health_acc = dict(aux)
+                else:
+                    acc = self._health_acc
+                    for k in ("iters_sum", "conv_sum", "live"):
+                        acc[k] = acc[k] + aux[k]
+                    acc["iters_max"] = jnp.maximum(acc["iters_max"], aux["iters_max"])
         elif mimo is not None:
             if self._fold_ae_mimo is None:
                 raise ValueError(
@@ -307,7 +343,28 @@ class StreamingPS:
         if float(root.count) == 0:
             nb = root.y.shape[0]
             return jnp.zeros((nb, self.codec.cfg.block_size), jnp.float32), root
-        return self._final(root), root
+        out = self._final(root)
+        if self.collect_health:
+            out, self._final_info = out  # info is None on the EA path
+        return out, root
+
+    def health(self) -> Dict[str, float]:
+        """Round decode-health scalars (one host sync; call after finalize).
+        EA: GAMP iters/convergence summed over the round's fold batches.
+        AE: the finalize decode's GAMP info (the round's single solve)."""
+        if not self.collect_health:
+            return {}
+        if self._final_info is not None:  # ae finalize decode
+            return {k: float(v) for k, v in gamp_health(self._final_info).items()}
+        if self._health_acc is None:  # ea round with no folds
+            return {}
+        acc = self._health_acc
+        live = max(float(acc["live"]), 1.0)
+        return {
+            "gamp_iters_mean": float(acc["iters_sum"]) / live,
+            "gamp_iters_max": float(acc["iters_max"]),
+            "gamp_converged_frac": float(acc["conv_sum"]) / live,
+        }
 
 
 def stream_decode(
@@ -355,6 +412,7 @@ def stream_decode(
     ps.begin_round(nb)
     buf = BoundedIngestBuffer(cfg.buffer_batches)
     consumed = [0]  # admission counter: the MAC batch noise key index
+    backpressure = [0]  # forced drains: pushes that found the buffer full
 
     def consume_one():
         pos, valid = buf.pop()
@@ -391,6 +449,7 @@ def stream_decode(
         valid = np.concatenate([np.ones(len(pos), np.float32), np.zeros(pad, np.float32)])
         padded = np.concatenate([pos, np.full(pad, pos[0] if len(pos) else 0, np.int64)])
         if buf.full:
+            backpressure[0] += 1
             consume_one()  # backpressure: bounded ingest memory
         buf.push(key, (padded, valid))
     while len(buf):
@@ -400,10 +459,12 @@ def stream_decode(
     info = {
         "batches_admitted": buf.admitted,
         "batches_rejected_dup": buf.rejected_dup,
+        "batches_backpressure": backpressure[0],
         "buffer_peak_occupancy": buf.peak_occupancy,
         "tree_tiers": len(ps.tree.tiers),
         "peak_live_stats_bytes": ps.tree.peak_live_bytes,
         "participating": float(root.count),
         "weight_sum": float(root.wsum),
     }
+    info.update(ps.health())
     return ghat, info

@@ -74,6 +74,9 @@ def main():
                     help="default: uniform when --sample-frac < 1, else full")
     ap.add_argument("--server-opt", default="fedadam",
                     choices=["fedadam", "fedavg", "fedavgm"])
+    ap.add_argument("--record", default=None, metavar="RUN_DIR",
+                    help="cohort mode: record round/eval events to RUN_DIR "
+                         "(render with `python -m repro.obs summarize`)")
     ap.add_argument("--client-batch", type=int, default=2)
     ap.add_argument("--chunk", type=int, default=16,
                     help="clients per scan chunk in the vmapped cohort pass")
@@ -152,6 +155,13 @@ def run_fed_cohort(args, cfg):
     data = TokenClientData(cfg.vocab_size, batch=args.client_batch, seq=args.seq,
                            clients=args.clients, alpha=args.alpha)
     sched_kind = args.scheduler or ("uniform" if args.sample_frac < 1.0 else "full")
+    recorder = None
+    if args.record:
+        from repro.obs import JsonlRecorder
+
+        recorder = JsonlRecorder(
+            args.record, config=vars(args), extra={"arch": cfg.name}
+        )
     engine = CohortEngine(
         params,
         jax.grad(lambda p, b: model.train_loss(p, b, cfg)),
@@ -165,6 +175,7 @@ def run_fed_cohort(args, cfg):
         server=ServerOptConfig(kind=args.server_opt, lr=args.lr),
         stream=(StreamConfig(batch_clients=args.stream, deadline=args.deadline)
                 if args.stream > 0 else None),
+        obs=recorder,
     )
     probe = TokenDataset(cfg.vocab_size, batch=16, seq=args.seq, seed=123).get_batch(0)
     eval_loss = jax.jit(lambda p: model.train_loss(p, probe, cfg))
@@ -177,11 +188,16 @@ def run_fed_cohort(args, cfg):
     for t in range(args.steps):
         stats = engine.run_round()
         if t % args.log_every == 0 or t == args.steps - 1:
-            print(f"round {t:5d}  eval-loss {float(eval_loss(engine.params)):.4f}  "
+            loss = float(eval_loss(engine.params))
+            engine.obs.record("eval", {"round": t, "loss": loss})
+            print(f"round {t:5d}  eval-loss {loss:.4f}  "
                   f"cohort {stats['cohort']:4.0f} "
                   f"(part {stats['participating']:4.0f})  "
                   f"nmse {stats.get('nmse', float('nan')):.3f}  "
                   f"({time.time() - t0:.0f}s)")
+    if recorder is not None:
+        recorder.close()
+        print(f"[fed-cohort] run log: {recorder.run_dir}")
     print("[fed-cohort] done")
 
 

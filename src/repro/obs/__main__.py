@@ -1,0 +1,10 @@
+"""``python -m repro.obs`` -- run-log toolchain entry point."""
+
+import sys
+
+from repro.obs.reader import main
+
+try:
+    sys.exit(main())
+except BrokenPipeError:  # `... | head` closing the pipe is not an error
+    sys.exit(0)

@@ -1,0 +1,92 @@
+"""Monotonic-clock spans with one naming scheme for JSONL and profiler.
+
+The federated engines wrap each round phase in a span::
+
+    spans = SpanCollector()
+    with span("client_pass", spans):
+        ...
+    spans.ms  # {"client_pass": 12.3, ...}
+
+Span names are the phase vocabulary shared by the ``phase_ms`` field of
+round events, the ``span`` event kind, and (when enabled) the
+``jax.profiler.TraceAnnotation`` labels -- a profile and a run log line up
+by construction.  Canonical engine phase names: ``client_pass``,
+``encode``, ``uplink``, ``fold``, ``decode``, ``apply``.
+
+Overhead: with ``collector=None`` and annotations off, ``span`` is two
+``time.monotonic()`` calls -- cheap enough to leave in place permanently.
+jax.profiler annotations engage only when REPRO_TRACE_ANNOTATIONS=1 is set
+in the environment (checked once at import), so the default path never
+touches the profiler.
+
+Timing caveat: spans measure host wall-clock.  JAX dispatch is async, so a
+span around a jitted call measures dispatch unless the caller blocks;
+engines block once per round when pulling metrics anyway, which lands the
+full device time in the phase that materializes results.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import time
+from contextlib import contextmanager
+from typing import Dict, Optional
+
+__all__ = ["SpanCollector", "span", "traced", "ANNOTATE"]
+
+# Checked once at import: profiler annotations are opt-in by environment.
+ANNOTATE = os.environ.get("REPRO_TRACE_ANNOTATIONS", "") == "1"
+
+
+class SpanCollector:
+    """Accumulates span durations by name (ms, summed over re-entries)."""
+
+    def __init__(self) -> None:
+        self.ms: Dict[str, float] = {}
+
+    def add(self, name: str, ms: float) -> None:
+        self.ms[name] = self.ms.get(name, 0.0) + ms
+
+    def drain(self) -> Dict[str, float]:
+        """Returns the accumulated timings and resets the collector."""
+        out, self.ms = self.ms, {}
+        return out
+
+
+@contextmanager
+def span(name: str, collector: Optional[SpanCollector] = None):
+    """Times a block; records into ``collector`` (None = annotation only)."""
+    if ANNOTATE:
+        from jax.profiler import TraceAnnotation
+
+        with TraceAnnotation(name):
+            t0 = time.monotonic()
+            try:
+                yield
+            finally:
+                if collector is not None:
+                    collector.add(name, (time.monotonic() - t0) * 1e3)
+        return
+    t0 = time.monotonic()
+    try:
+        yield
+    finally:
+        if collector is not None:
+            collector.add(name, (time.monotonic() - t0) * 1e3)
+
+
+def traced(name: Optional[str] = None, collector: Optional[SpanCollector] = None):
+    """Decorator form of :func:`span`; name defaults to the function name."""
+
+    def wrap(fn):
+        label = name or fn.__name__
+
+        @functools.wraps(fn)
+        def inner(*args, **kwargs):
+            with span(label, collector):
+                return fn(*args, **kwargs)
+
+        return inner
+
+    return wrap

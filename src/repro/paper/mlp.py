@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -101,12 +101,18 @@ def run_federated(
     server: str = "fedadam",  # fedadam | fedavg | fedavgm
     chunk: int = 0,
     impl: str = "vmap",  # vmap | loop (the per-client oracle)
+    obs: Any = None,  # repro.obs MetricsRecorder (None = null recorder)
 ) -> RunResult:
     """Runs the federated loop on the cohort engine; returns accuracy/NMSE
     traces.  The default arguments reproduce the paper's experiment exactly;
     the scenario axes open the FedVQCS-style wireless cohort settings.  The
     quantizer codebook is a ``fed_cfg`` axis (``FedQCSConfig.codebook`` /
-    ``vq_dim``, DESIGN.md #Codebooks), passed through untouched."""
+    ``vq_dim``, DESIGN.md #Codebooks), passed through untouched.
+
+    ``obs`` (a recorder from ``repro.obs``) threads into the engine: round
+    events flow to its sink, and eval checkpoints are recorded as ``eval``
+    events, so ``python -m repro.obs summarize <run_dir>`` renders the run.
+    """
     (xtr, ytr, xte, yte), _ = mnist.load(seed)
     parts = partition_indices(
         ytr, k_devices, PartitionConfig(kind=partition, alpha=alpha, seed=seed)
@@ -133,6 +139,7 @@ def run_federated(
         ),
         chan=ChannelConfig(kind=channel, snr_db=snr_db, n_rx=n_rx, csi_error=csi_error),
         server=ServerOptConfig(kind=server, lr=lr, b1=0.9, b2=0.999, eps=1e-8),
+        obs=obs,
     )
 
     accs, nmses, losses = [], [], []
@@ -143,8 +150,11 @@ def run_federated(
         if record_nmse and "nmse" in stats:
             nmses.append(stats["nmse"])
         if t % eval_every == 0 or t == steps - 1:
-            accs.append(float(accuracy(engine.params, xte_j, yte_j)))
-            losses.append(float(mlp_loss(engine.params, xte_j, yte_j)))
+            acc = float(accuracy(engine.params, xte_j, yte_j))
+            loss = float(mlp_loss(engine.params, xte_j, yte_j))
+            accs.append(acc)
+            losses.append(loss)
+            engine.obs.record("eval", {"round": t, "accuracy": acc, "loss": loss})
 
     bits = (
         32.0

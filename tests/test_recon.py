@@ -350,12 +350,12 @@ def test_two_phase_refines_unconverged_blocks():
     # reproduce the expected composition: scalar pass + exact re-solve
     flat_c = codes.reshape(k * nb, m)
     flat_a = alphas.reshape(k * nb)
-    ghat, conv = _qem_gamp_xla(flat_c, flat_a, codec.a, codec.quantizer, gamp)
+    ghat, conv, _ = _qem_gamp_xla(flat_c, flat_a, codec.a, codec.quantizer, gamp)
     surv = np.flatnonzero(~np.asarray(conv))
     assert len(surv) == stats["phase2_rows"]
     if len(surv):
         exact = dataclasses.replace(gamp, variance_mode="exact", early_stop=False)
-        refined, _ = _qem_gamp_xla(
+        refined, _, _ = _qem_gamp_xla(
             flat_c[jnp.asarray(surv)], flat_a[jnp.asarray(surv)],
             codec.a, codec.quantizer, exact,
         )
@@ -372,6 +372,6 @@ def test_dead_rows_converged_immediately():
     flat_c = codes.reshape(k * nb, m)
     flat_a = alphas.reshape(k * nb).at[1].set(0.0)
     gamp = GampConfig(iters=5, variance_mode="scalar")
-    ghat, conv = _qem_gamp_xla(flat_c, flat_a, codec.a, codec.quantizer, gamp)
+    ghat, conv, _ = _qem_gamp_xla(flat_c, flat_a, codec.a, codec.quantizer, gamp)
     assert bool(conv[1])
     assert not np.asarray(ghat[1]).any()
