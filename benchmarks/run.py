@@ -233,6 +233,70 @@ def encode_fused_vs_unfused(fast=True):
             "backend": jax.default_backend(),
             "interpret": jax.default_backend() != "tpu",
         })
+    # -- streamed (per-tensor layout) vs monolithic whole-model encode -------
+    # Peak live encoder memory (blocks + EF residual in/out, f32) is the
+    # whole block grid for the monolithic one-pass encode but only the
+    # LARGEST segment for the per-tensor streamed encode
+    # (core/layout.py GradientLayout.encoder_live_bytes; DESIGN.md #Layout).
+    # bench-smoke (ci.yml) pins two invariants off these entries: the
+    # streamed bound is strictly below the monolithic one, and the streamed
+    # wire is bit-identical to the one-pass encode of the same layout.
+    from repro.core.compression import BQCSCodec, FedQCSConfig
+    from repro.core.layout import GradientLayout
+
+    sizes = ([4096 * 8, 4096, 512, 4096 * 8, 64] if fast
+             else [4096 * 64, 4096 * 8, 4096, 4096 * 64, 512])
+    tree = {
+        f"layer{i}": jnp.asarray(rng.normal(0, 1, (sz,)), jnp.float32)
+        for i, sz in enumerate(sizes)
+    }
+    codec = BQCSCodec(FedQCSConfig(block_size=n, reduction_ratio=r, bits=q))
+    mono = GradientLayout.monolithic(tree, n)
+    pt = GradientLayout.per_tensor(tree, n)
+    res_mono = codec.zero_residual(tree, mono)
+    res_pt = codec.zero_residual(tree, pt)
+    one_pass = codec.compress_blocks_packed(pt.to_blocks(tree), res_pt)
+    stream_cases = {
+        "encode_stream[monolithic_one_pass]": (
+            mono, lambda: codec.compress_tree(tree, res_mono, mono), False,
+        ),
+        "encode_stream[per_tensor_streamed]": (
+            pt, lambda: codec.compress_tree_streamed(tree, res_pt, pt), True,
+        ),
+    }
+    for name, (layout, fn, streamed) in stream_cases.items():
+        payload, _, _ = jax.block_until_ready(fn())  # compile
+        t0 = time.time()
+        reps = 3
+        for _ in range(reps):
+            jax.block_until_ready(fn())
+        us = 1e6 * (time.time() - t0) / reps
+        live = layout.encoder_live_bytes(streamed=streamed)
+        derived = (
+            f"rows={layout.rows};max_segment_rows={layout.max_segment_rows};"
+            f"segments={len(layout.segments)};peak_live_encoder_bytes={live}"
+        )
+        entry = {
+            "name": name, "wall_ms": round(us / 1e3, 3), "us_per_call": round(us, 1),
+            "derived": derived, "n": n, "q": q,
+            "rows": layout.rows, "max_segment_rows": layout.max_segment_rows,
+            "segments": len(layout.segments), "streamed": streamed,
+            "peak_live_encoder_bytes": live,
+            "backend": jax.default_backend(),
+            "interpret": jax.default_backend() != "tpu",
+        }
+        if streamed:
+            # streamed wire must be bit-identical to the one-pass encode of
+            # the same layout (every codec stage is per-block)
+            wire_identical = bool(
+                jnp.array_equal(payload.codes, one_pass[0])
+                and jnp.array_equal(payload.alpha, one_pass[1])
+            )
+            entry["wire_identical"] = wire_identical
+            entry["derived"] = derived + f";wire_identical={wire_identical}"
+        rows.append(f"encode[{name}],{us:.1f},{entry['derived']}")
+        entries.append(entry)
+
     path = write_bench("encode", "encode_fused_vs_unfused", entries)
     rows.append(f"encode[json],0,{os.path.relpath(path)}")
     return rows

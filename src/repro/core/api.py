@@ -35,7 +35,8 @@ from repro.core.compression import (
     blocks_to_tree,
 )
 from repro.core.gamp import em_gamp, gamp_health
-from repro.core.recon_engine import ReconSpec
+from repro.core.layout import GradientLayout
+from repro.core.recon_engine import ReconSpec, ea_decode_segments
 from repro.core.reconstruction import (
     aggregate_and_estimate,
     estimate_and_aggregate_packed,
@@ -45,6 +46,7 @@ from repro.core.reconstruction import (
 __all__ = [
     "FedQCSConfig",
     "BQCSCodec",
+    "GradientLayout",
     "ReconSpec",
     "make_codec",
     "init_state",
@@ -65,16 +67,27 @@ def make_codec(cfg: FedQCSConfig) -> BQCSCodec:
     return BQCSCodec(cfg)
 
 
-def init_state(codec: BQCSCodec, grads_template: Any) -> CompressorState:
-    return CompressorState(residual=codec.zero_residual(grads_template))
+def init_state(
+    codec: BQCSCodec, grads_template: Any, layout: Optional[GradientLayout] = None
+) -> CompressorState:
+    return CompressorState(residual=codec.zero_residual(grads_template, layout))
 
 
-def compress(codec: BQCSCodec, grads: Any, state: CompressorState):
-    """Worker side: returns (CompressedGradient, tree-spec, new state).
+def compress(
+    codec: BQCSCodec,
+    grads: Any,
+    state: CompressorState,
+    layout: Optional[GradientLayout] = None,
+):
+    """Worker side: returns (CompressedGradient, layout-spec, new state).
 
     The payload's ``codes`` are bit-packed uint32 words -- the actual wire
-    format; :func:`reconstruct` unpacks them at the PS boundary."""
-    payload, spec, new_res = codec.compress_tree(grads, state.residual)
+    format; :func:`reconstruct` unpacks them at the PS boundary.  ``layout``
+    selects the block geometry (core/layout.py; default monolithic -- the
+    pre-layout wire, bit-identical); per-tensor layouts with per-segment
+    sparsity budgets stream segment-by-segment (``compress_tree_streamed``).
+    The returned spec IS the layout -- pass it to :func:`reconstruct`."""
+    payload, spec, new_res = codec.compress_tree(grads, state.residual, layout)
     return payload, spec, CompressorState(residual=new_res)
 
 
@@ -86,6 +99,7 @@ def reconstruct(
     recon: Optional[ReconSpec] = None,
     mode: Optional[str] = None,
     groups: Optional[int] = None,
+    emit=None,  # EA + GradientLayout spec: callback(segment, {leaf id: array})
 ) -> Any:
     """PS side: fuses K payloads into the reconstructed gradient pytree.
 
@@ -107,6 +121,16 @@ def reconstruct(
     AE) plus their scalar summary (``gamp_iters_mean`` / ``gamp_iters_max``
     / ``gamp_converged_frac``, live problems only) -- instead of computing
     and discarding it (DESIGN.md #Observability).
+
+    ``spec`` is the layout returned by :func:`compress` (a
+    :class:`~repro.core.layout.GradientLayout`; the legacy ``(treedef,
+    shapes)`` tuple still works).  With an EA spec and a layout, ``emit``
+    turns the decode segment-local (``recon_engine.ea_decode_segments``):
+    the callback fires with each segment's decoded leaves as soon as its
+    rows solve -- per-tensor decode without waiting for the whole model --
+    and the returned tree matches the barrier decode up to float
+    reassociation (~1e-4 relative; GAMP iterates on batch-shape-dependent
+    reduction orders).
 
     The pre-spec ``mode=``/``groups=`` keywords are a deprecated shim.
     """
@@ -132,6 +156,21 @@ def reconstruct(
     rhos = jnp.asarray(rhos, jnp.float32)
     ginfo = None
     live = None
+    if emit is not None:
+        if recon.mode != "ea" or not isinstance(spec, GradientLayout):
+            raise ValueError(
+                "segment-local decode (emit=...) needs recon mode 'ea' and a "
+                "GradientLayout spec"
+            )
+        if recon.return_info:
+            raise ValueError("emit=... does not carry decode-health info")
+        words = jnp.stack([p.codes for p in payloads])
+        blocks = ea_decode_segments(
+            codec, words, alphas, rhos, spec,
+            packed=True, use_pallas=recon.use_pallas, chunk=recon.chunk,
+            emit=emit,
+        )
+        return blocks_to_tree(blocks, spec, payloads[0].nbar)
     if recon.mode == "ea":
         # The payload words pass straight through to the packed
         # reconstruction engine (DESIGN.md #Recon-engine) -- the uint8 index

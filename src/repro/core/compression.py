@@ -33,11 +33,13 @@ import numpy as np
 
 from repro.core import sensing, sparsify
 from repro.core.codebook import Codebook, index_bits, make_codebook
+from repro.core.layout import GradientLayout
 
 __all__ = [
     "FedQCSConfig",
     "BQCSCodec",
     "CompressedGradient",
+    "GradientLayout",
     "flatten_to_blocks",
     "blocks_to_tree",
     "pack_codes",
@@ -189,18 +191,12 @@ def flatten_to_blocks(tree: Any, n: int, row_multiple: int = 1) -> Tuple[jnp.nda
     """Concatenates all leaves into one vector, zero-pads to a multiple of N,
     reshapes to (nblocks, N).  ``row_multiple`` additionally pads nblocks up
     to a multiple (so the (data, model) sharding of the block view is even).
-    Returns (blocks, treedef-like spec, nbar)."""
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    flat = jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves])
-    nbar = flat.shape[0]
-    rows = -(-nbar // n)
-    rows = -(-rows // row_multiple) * row_multiple
-    pad = rows * n - nbar
-    if pad:
-        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
-    blocks = flat.reshape(rows, n)
-    shapes = [(l.shape, l.dtype) for l in leaves]
-    return blocks, (treedef, shapes), nbar
+    Returns (blocks, spec, nbar) where the spec is now a monolithic
+    :class:`~repro.core.layout.GradientLayout` (bit-identical block output;
+    geometry -- sizes, offsets, nbar -- computed in Python ints, see
+    core/layout.py for the int32 guard)."""
+    layout = GradientLayout.monolithic(tree, n, row_multiple=row_multiple)
+    return layout.to_blocks(tree), layout, layout.nbar
 
 
 def flatten_to_blocks_batched(tree: Any, n: int, row_multiple: int = 1):
@@ -208,27 +204,24 @@ def flatten_to_blocks_batched(tree: Any, n: int, row_multiple: int = 1):
     (pods, nblocks, N) blocks plus the UNBATCHED spec (for blocks_to_tree on
     the aggregated result)."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
-    pods = leaves[0].shape[0]
-    flat = jnp.concatenate([l.reshape(pods, -1).astype(jnp.float32) for l in leaves], axis=1)
-    nbar = flat.shape[1]
-    rows = -(-nbar // n)
-    rows = -(-rows // row_multiple) * row_multiple
-    pad = rows * n - nbar
-    if pad:
-        flat = jnp.concatenate([flat, jnp.zeros((pods, pad), flat.dtype)], axis=1)
-    blocks = flat.reshape(pods, rows, n)
-    shapes = [(l.shape[1:], l.dtype) for l in leaves]
-    return blocks, (treedef, shapes), nbar
+    shapes = tuple((tuple(l.shape[1:]), l.dtype) for l in leaves)
+    layout = GradientLayout.from_shapes(treedef, shapes, n, row_multiple=row_multiple)
+    return layout.to_blocks_batched(tree), layout, layout.nbar
 
 
-def blocks_to_tree(blocks: jnp.ndarray, spec: Any, nbar: int) -> Any:
-    """Inverse of :func:`flatten_to_blocks`."""
+def blocks_to_tree(blocks: jnp.ndarray, spec: Any, nbar: int | None = None) -> Any:
+    """Inverse of :func:`flatten_to_blocks`.  ``spec`` is a
+    :class:`~repro.core.layout.GradientLayout` (the ``nbar`` argument is then
+    redundant and ignored -- the layout knows its own unpadding) or the
+    legacy ``(treedef, shapes)`` tuple."""
+    if isinstance(spec, GradientLayout):
+        return spec.tree_from_blocks(blocks)
     treedef, shapes = spec
     flat = blocks.reshape(-1)[:nbar]
     leaves = []
     off = 0
     for shape, dtype in shapes:
-        size = int(np.prod(shape)) if shape else 1
+        size = int(np.prod([int(d) for d in shape], dtype=object)) if shape else 1
         leaves.append(flat[off : off + size].reshape(shape).astype(dtype))
         off += size
     return jax.tree_util.tree_unflatten(treedef, leaves)
@@ -363,26 +356,33 @@ class BQCSCodec:
         return self.codebook.n_codes(self.cfg.m)
 
     # -- encode ------------------------------------------------------------
-    def compress_blocks_packed(self, blocks: jnp.ndarray, residual: jnp.ndarray):
+    def compress_blocks_packed(
+        self, blocks: jnp.ndarray, residual: jnp.ndarray, s: int | None = None
+    ):
         """(blocks + residual) -> (words, alpha, new_residual).  Eqs. 7-10
         plus the wire packing: ``words`` is the (nb, W) uint32 payload in the
         canonical :func:`pack_codes` layout -- this is what crosses the wire.
 
         With ``use_kernels`` the whole pipeline (error-feedback add, top-S,
         projection, quantization, packing) is ONE fused Pallas pass; the XLA
-        path composes the stage functions and packs last.
+        path composes the stage functions and packs last.  ``s`` overrides
+        the config's global top-S budget (per-segment sparsity budgets of a
+        :class:`GradientLayout`); every stage is per-block, so any row
+        partition of ``blocks`` encodes bit-identically to the whole.
         """
         cfg = self.cfg
         if cfg.use_kernels:
             from repro.kernels import ops as kops
 
             return kops.bqcs_encode_fused(
-                blocks, residual, self._a, self.codebook, cfg.s
+                blocks, residual, self._a, self.codebook, cfg.s if s is None else s
             )
-        codes, alpha, new_residual = self._compress_blocks_xla(blocks, residual)
+        codes, alpha, new_residual = self._compress_blocks_xla(blocks, residual, s)
         return pack_codes(codes, self.codebook.bits), alpha, new_residual
 
-    def compress_blocks(self, blocks: jnp.ndarray, residual: jnp.ndarray):
+    def compress_blocks(
+        self, blocks: jnp.ndarray, residual: jnp.ndarray, s: int | None = None
+    ):
         """(blocks + residual) -> (codes, alpha, new_residual).  Eqs. 7-10.
 
         Unpacked uint8-index view of :meth:`compress_blocks_packed` for
@@ -391,29 +391,94 @@ class BQCSCodec:
         """
         cfg = self.cfg
         if cfg.use_kernels:
-            words, alpha, new_residual = self.compress_blocks_packed(blocks, residual)
+            words, alpha, new_residual = self.compress_blocks_packed(blocks, residual, s)
             return self.unpack(words), alpha, new_residual
-        return self._compress_blocks_xla(blocks, residual)
+        return self._compress_blocks_xla(blocks, residual, s)
 
-    def _compress_blocks_xla(self, blocks: jnp.ndarray, residual: jnp.ndarray):
+    def _compress_blocks_xla(
+        self, blocks: jnp.ndarray, residual: jnp.ndarray, s: int | None = None
+    ):
         cfg = self.cfg
+        s = cfg.s if s is None else s
         carry = blocks + residual
         if cfg.sparsifier == "bisect":
-            sparse, new_residual = sparsify.block_sparsify_threshold(carry, cfg.s)
+            sparse, new_residual = sparsify.block_sparsify_threshold(carry, s)
         else:
-            sparse, new_residual = sparsify.block_sparsify(carry, cfg.s)
+            sparse, new_residual = sparsify.block_sparsify(carry, s)
         x, alpha = sensing.project_blocks(sparse, self._a.T)
         return self.codebook.encode(x), alpha, new_residual
 
-    def compress_tree(self, grads: Any, residual_blocks: jnp.ndarray):
-        blocks, spec, nbar = flatten_to_blocks(grads, self.cfg.block_size)
-        words, alpha, new_res = self.compress_blocks_packed(blocks, residual_blocks)
-        payload = CompressedGradient(words, alpha, nbar, self.cfg.m, self.codebook.bits)
-        return payload, spec, new_res
+    def layout_for(self, grads_like: Any, per_tensor: bool = False, **kwargs) -> GradientLayout:
+        """Builds this codec's block layout for a gradient tree: monolithic
+        (the default wire geometry, bit-identical to the pre-layout flatten)
+        or per-tensor (independently padded leaf segments -- the streaming
+        geometry; ``kwargs`` forward to :meth:`GradientLayout.per_tensor`)."""
+        n = self.cfg.block_size
+        if per_tensor:
+            return GradientLayout.per_tensor(grads_like, n, **kwargs)
+        return GradientLayout.monolithic(grads_like, n, **kwargs)
 
-    def zero_residual(self, grads_like: Any) -> jnp.ndarray:
-        blocks, _, _ = flatten_to_blocks(grads_like, self.cfg.block_size)
-        return jnp.zeros_like(blocks)
+    def compress_tree(
+        self, grads: Any, residual_blocks: jnp.ndarray,
+        layout: GradientLayout | None = None,
+    ):
+        """Whole-tree encode: blocks per ``layout`` (default: monolithic --
+        the pre-layout wire, bit-identical), one encoder pass over the full
+        grid.  Per-tensor layouts with uniform sparsity also take this path;
+        per-segment ``s`` budgets force the segment loop (same wire bits,
+        see :meth:`compress_tree_streamed`)."""
+        cfg = self.cfg
+        if layout is None:
+            layout = GradientLayout.monolithic(grads, cfg.block_size)
+        seg_s = layout.segment_s(cfg.s)
+        if any(s != cfg.s for s in seg_s):
+            return self.compress_tree_streamed(grads, residual_blocks, layout)
+        words, alpha, new_res = self.compress_blocks_packed(
+            layout.to_blocks(grads), residual_blocks
+        )
+        payload = CompressedGradient(
+            words, alpha, layout.nbar, cfg.m, self.codebook.bits
+        )
+        return payload, layout, new_res
+
+    def compress_tree_streamed(
+        self, grads: Any, residual_blocks: jnp.ndarray, layout: GradientLayout
+    ):
+        """Segment-streamed encode: drives the (fused) encoder one layout
+        segment at a time -- build segment i's blocks from its own leaves,
+        encode (with its own top-S budget), carry its error-feedback residual
+        rows, discard -- so peak live encoder memory is bounded by the
+        LARGEST segment's blocks, not the whole model
+        (``layout.encoder_live_bytes``).  Every encoder stage is per-block,
+        so the concatenated wire output is BIT-IDENTICAL to the one-pass
+        :meth:`compress_tree` over the same layout.
+
+        Returns the same ``(CompressedGradient, layout, new_residual)``
+        triple; ``residual_blocks`` is the full ``(rows, N)`` grid and comes
+        back the same shape."""
+        cfg = self.cfg
+        words_parts, alpha_parts, res_parts = [], [], []
+        for seg, seg_blocks in layout.iter_segment_blocks(grads):
+            w, al, res = self.compress_blocks_packed(
+                seg_blocks,
+                residual_blocks[seg.row_slice],
+                s=seg.s if seg.s is not None else cfg.s,
+            )
+            words_parts.append(w)
+            alpha_parts.append(al)
+            res_parts.append(res)
+        words = jnp.concatenate(words_parts, axis=0)
+        alpha = jnp.concatenate(alpha_parts, axis=0)
+        new_res = jnp.concatenate(res_parts, axis=0)
+        payload = CompressedGradient(
+            words, alpha, layout.nbar, cfg.m, self.codebook.bits
+        )
+        return payload, layout, new_res
+
+    def zero_residual(self, grads_like: Any, layout: GradientLayout | None = None) -> jnp.ndarray:
+        if layout is None:
+            layout = GradientLayout.monolithic(grads_like, self.cfg.block_size)
+        return jnp.zeros((layout.rows, layout.n), jnp.float32)
 
     # -- wire --------------------------------------------------------------
     def pack(self, codes: jnp.ndarray) -> jnp.ndarray:

@@ -1,0 +1,418 @@
+"""Per-tensor gradient block geometry (DESIGN.md #Layout).
+
+Everything upstream of the codec used to assume the gradient is resident as
+ONE ``(nblocks, N)`` array: ``flatten_to_blocks`` concatenated every leaf
+into a single flat vector before the first block ever reached the encoder.
+Nothing in the QCS math requires that -- the paper's sparsify / project /
+quantize stages are all defined *per block* -- and FedVQCS (Oh et al., 2022)
+as well as Tang et al.'s compressed-sensing distributed SGD both partition
+the parameter vector into independently compressed segments.  This module
+makes that partition first-class:
+
+  * :class:`GradientLayout` owns the pytree <-> block-grid geometry that was
+    previously implicit in the ``(treedef, shapes, nbar)`` spec tuple: which
+    leaves feed which block rows (the ownership map), per-segment zero
+    padding, and optional per-segment sparsity budgets replacing the single
+    global ``s_ratio``.
+  * The **monolithic** layout (one segment = every leaf concatenated, padded
+    once at the end) reproduces the pre-layout flatten BIT-FOR-BIT -- it is
+    the default everywhere, so existing wire output is unchanged.
+  * The **per-tensor** layout gives each leaf (or leaf-group -- small leaves
+    coalesce up to ``group_scalars``) its own independently padded run of
+    block rows.  Because every codec stage is per-block and block rows never
+    straddle segments, a per-tensor layout can be *streamed*: encode segment
+    i, discard its blocks, move on -- peak encoder live memory is bounded by
+    the LARGEST segment's blocks instead of the whole model (the
+    ``benchmarks/run.py --only encode`` streamed-vs-monolithic rows measure
+    exactly this bound).  Decode is equally segment-local: a segment's rows
+    invert to its leaves without waiting for the other segments
+    (``recon_engine.ea_decode_segments``).
+
+All geometry -- sizes, offsets, row counts -- is computed in PYTHON INTS at
+layout construction, so a 7B+ parameter model cannot silently wrap int32
+(the old ``flatten_to_blocks`` risk).  Flat index math that must run on
+device is guarded: a segment whose padded scalar span exceeds int32 range
+raises at construction unless jax x64 is enabled, with the per-tensor layout
+named as the fix (each tensor of a 7B model is individually well inside
+int32 even though the model is not).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "LayoutSegment",
+    "GradientLayout",
+    "as_layout",
+    "INT32_MAX",
+]
+
+INT32_MAX = 2**31 - 1
+
+
+def _leaf_size(shape) -> int:
+    """Python-int scalar count of one leaf (math.prod, never numpy int32)."""
+    return math.prod(int(d) for d in shape) if shape else 1
+
+
+def _check_int32(span: int, what: str) -> None:
+    """Flat device-side index math (reshape/slice iotas) wraps past int32
+    unless jax x64 is on.  Raise with the fix named rather than corrupting
+    silently."""
+    if span <= INT32_MAX:
+        return
+    if jax.config.read("jax_enable_x64"):
+        return
+    raise ValueError(
+        f"{what} spans {span} scalars > int32 max {INT32_MAX}: flat index "
+        "math would overflow.  Use a per-tensor GradientLayout (each "
+        "segment then only needs its own tensor's span) or enable "
+        "jax_enable_x64."
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutSegment:
+    """One independently padded run of block rows.
+
+    ``leaf_ids`` index the layout's flat leaf list; the segment's scalars are
+    those leaves raveled and concatenated in leaf order, zero-padded by
+    ``pad`` to exactly ``rows * n``.  ``s`` is the per-block top-S budget the
+    encoder applies to this segment's rows (None = the codec config's global
+    ``s``).  All fields are Python ints -- no device math at geometry time.
+    """
+
+    index: int
+    name: str
+    leaf_ids: Tuple[int, ...]
+    sizes: Tuple[int, ...]  # per-leaf scalar counts
+    size: int  # sum(sizes)
+    rows: int  # block rows owned
+    row_start: int  # first row in the layout's global block grid
+    pad: int  # zero scalars appended (rows * n - size)
+    s: Optional[int] = None  # per-segment top-S override (None = global)
+
+    @property
+    def row_slice(self) -> slice:
+        return slice(self.row_start, self.row_start + self.rows)
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientLayout:
+    """The pytree <-> block-grid spec: treedef + leaf shapes + segments.
+
+    This object *is* the "spec" the codec / engine / API pass around
+    (``blocks_to_tree`` accepts it directly); the legacy ``(treedef,
+    shapes)`` tuple is still accepted everywhere for back compat.
+    Hashable/immutable, safe to close over in jitted functions: all array
+    work happens in :meth:`to_blocks` / :meth:`tree_from_blocks`, driven by
+    static Python geometry.
+    """
+
+    n: int  # block size N
+    row_multiple: int
+    treedef: Any
+    shapes: Tuple[Tuple[Tuple[int, ...], Any], ...]  # per-leaf (shape, dtype)
+    segments: Tuple[LayoutSegment, ...]
+    nbar: int  # total scalars across all leaves (pre-padding, Python int)
+    kind: str = "monolithic"  # or "per_tensor"
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def monolithic(cls, tree: Any, n: int, row_multiple: int = 1) -> "GradientLayout":
+        """One segment covering every leaf, padded once at the end -- the
+        pre-layout ``flatten_to_blocks`` geometry, bit-identical."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        shapes = tuple((tuple(l.shape), l.dtype) for l in leaves)
+        return cls.from_shapes(treedef, shapes, n, row_multiple=row_multiple)
+
+    @classmethod
+    def from_shapes(
+        cls,
+        treedef: Any,
+        shapes: Sequence[Tuple[Tuple[int, ...], Any]],
+        n: int,
+        row_multiple: int = 1,
+    ) -> "GradientLayout":
+        """Monolithic layout from abstract (shape, dtype) specs -- no arrays
+        needed, so geometry (and the int32 guard) is testable at any scale."""
+        shapes = tuple((tuple(s), d) for s, d in shapes)
+        sizes = tuple(_leaf_size(s) for s, _ in shapes)
+        nbar = sum(sizes)
+        rows = -(-nbar // n)
+        rows = -(-rows // row_multiple) * row_multiple
+        _check_int32(rows * n, "monolithic layout")
+        seg = LayoutSegment(
+            index=0,
+            name="all",
+            leaf_ids=tuple(range(len(shapes))),
+            sizes=sizes,
+            size=nbar,
+            rows=rows,
+            row_start=0,
+            pad=rows * n - nbar,
+        )
+        return cls(
+            n=n, row_multiple=row_multiple, treedef=treedef, shapes=shapes,
+            segments=(seg,), nbar=nbar, kind="monolithic",
+        )
+
+    @classmethod
+    def per_tensor(
+        cls,
+        tree: Any,
+        n: int,
+        row_multiple: int = 1,
+        s_ratio: Optional[Callable[[str, Tuple[int, ...]], Optional[float]]] = None,
+        group_scalars: int = 0,
+    ) -> "GradientLayout":
+        """One segment per leaf, each independently padded to the block grid.
+
+        ``group_scalars`` > 0 coalesces consecutive small leaves into one
+        segment until the group reaches that many scalars (padding overhead
+        for a model full of tiny biases would otherwise be one part-empty
+        block per leaf).  ``s_ratio(name, shape) -> float | None`` assigns a
+        per-segment sparsity budget (None = the codec config's global
+        ``s_ratio``); for a grouped segment the first leaf's ratio wins.
+        """
+        leaves_with_path = jax.tree_util.tree_flatten_with_path(tree)[0]
+        treedef = jax.tree_util.tree_structure(tree)
+        shapes = tuple((tuple(l.shape), l.dtype) for _, l in leaves_with_path)
+        names = [jax.tree_util.keystr(p) or f"leaf{i}"
+                 for i, (p, _) in enumerate(leaves_with_path)]
+        return cls.from_shapes_per_tensor(
+            treedef, shapes, n, row_multiple=row_multiple,
+            names=names, s_ratio=s_ratio, group_scalars=group_scalars,
+        )
+
+    @classmethod
+    def from_shapes_per_tensor(
+        cls,
+        treedef: Any,
+        shapes: Sequence[Tuple[Tuple[int, ...], Any]],
+        n: int,
+        row_multiple: int = 1,
+        names: Optional[Sequence[str]] = None,
+        s_ratio: Optional[Callable[[str, Tuple[int, ...]], Optional[float]]] = None,
+        group_scalars: int = 0,
+    ) -> "GradientLayout":
+        """Abstract-spec variant of :meth:`per_tensor` (see there)."""
+        shapes = tuple((tuple(s), d) for s, d in shapes)
+        sizes = [_leaf_size(s) for s, _ in shapes]
+        names = list(names) if names is not None else [f"leaf{i}" for i in range(len(shapes))]
+        # coalesce consecutive leaves into groups of >= group_scalars scalars
+        groups: List[List[int]] = []
+        cur: List[int] = []
+        cur_size = 0
+        for i, size in enumerate(sizes):
+            cur.append(i)
+            cur_size += size
+            if cur_size >= max(group_scalars, 1):
+                groups.append(cur)
+                cur, cur_size = [], 0
+        if cur:
+            if groups and group_scalars > 0:
+                groups[-1].extend(cur)  # trailing stub rides the last group
+            else:
+                groups.append(cur)
+        segments: List[LayoutSegment] = []
+        row_start = 0
+        for gi, ids in enumerate(groups):
+            gsize = sum(sizes[i] for i in ids)
+            rows = -(-gsize // n)
+            rows = -(-rows // row_multiple) * row_multiple
+            _check_int32(rows * n, f"layout segment {names[ids[0]]!r}")
+            s = None
+            if s_ratio is not None:
+                ratio = s_ratio(names[ids[0]], shapes[ids[0]][0])
+                if ratio is not None:
+                    if not (0.0 < ratio <= 1.0):
+                        raise ValueError(
+                            f"per-segment s_ratio for {names[ids[0]]!r} must be "
+                            f"in (0, 1], got {ratio}"
+                        )
+                    s = max(1, int(ratio * n))
+            segments.append(
+                LayoutSegment(
+                    index=gi,
+                    name=names[ids[0]] if len(ids) == 1
+                    else f"{names[ids[0]]}+{len(ids) - 1}",
+                    leaf_ids=tuple(ids),
+                    sizes=tuple(sizes[i] for i in ids),
+                    size=gsize,
+                    rows=rows,
+                    row_start=row_start,
+                    pad=rows * n - gsize,
+                    s=s,
+                )
+            )
+            row_start += rows
+        return cls(
+            n=n, row_multiple=row_multiple, treedef=treedef, shapes=shapes,
+            segments=tuple(segments), nbar=sum(sizes), kind="per_tensor",
+        )
+
+    # -- geometry ------------------------------------------------------------
+
+    @property
+    def rows(self) -> int:
+        """Total block rows across all segments (the global nb)."""
+        return sum(seg.rows for seg in self.segments)
+
+    @property
+    def max_segment_rows(self) -> int:
+        """Largest segment's rows -- the streamed encoder's live-memory bound."""
+        return max((seg.rows for seg in self.segments), default=0)
+
+    @property
+    def spec(self) -> Tuple[Any, list]:
+        """The legacy ``(treedef, shapes)`` tuple this layout subsumes."""
+        return (self.treedef, list(self.shapes))
+
+    def segment_s(self, default_s: int) -> List[int]:
+        """Per-segment top-S budgets with the global default filled in."""
+        return [seg.s if seg.s is not None else default_s for seg in self.segments]
+
+    def owner_map(self) -> Dict[int, Tuple[int, int, int]]:
+        """leaf id -> (segment index, first row touched, last row touched + 1)
+        in the GLOBAL block grid.  Exact ownership for per-tensor layouts; for
+        the monolithic layout leaves share rows at their boundaries (a block
+        straddles leaves), so ranges may overlap."""
+        out: Dict[int, Tuple[int, int, int]] = {}
+        for seg in self.segments:
+            off = 0
+            for lid, size in zip(seg.leaf_ids, seg.sizes):
+                r0 = seg.row_start + off // self.n
+                r1 = seg.row_start + (max(off + size - 1, off)) // self.n + 1
+                out[lid] = (seg.index, r0, r1)
+                off += size
+        return out
+
+    def encoder_live_bytes(self, streamed: bool) -> int:
+        """f32 block-domain bytes the encoder holds live at once: blocks +
+        error-feedback residual in + residual out, for the whole grid
+        (monolithic encode) or the largest segment (streamed encode).  This
+        is the bound ``benchmarks/run.py --only encode`` records and CI pins."""
+        rows = self.max_segment_rows if streamed else self.rows
+        return 3 * rows * self.n * 4
+
+    # -- array ops (tree -> blocks) -------------------------------------------
+
+    def _segment_flat(self, leaves: Sequence[jnp.ndarray], seg: LayoutSegment,
+                      batch: int = 0) -> jnp.ndarray:
+        """Ravels + concatenates + zero-pads one segment's leaves (leading
+        ``batch`` axes pass through)."""
+        lead = leaves[seg.leaf_ids[0]].shape[:batch] if seg.leaf_ids else ()
+        parts = [
+            leaves[i].reshape(lead + (-1,)).astype(jnp.float32)
+            for i in seg.leaf_ids
+        ]
+        flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=-1)
+        if seg.pad:
+            flat = jnp.concatenate(
+                [flat, jnp.zeros(lead + (seg.pad,), flat.dtype)], axis=-1
+            )
+        return flat
+
+    def segment_blocks(self, tree: Any, index: int) -> jnp.ndarray:
+        """One segment's ``(rows, N)`` block view, built from ITS leaves only
+        -- the whole-model flat vector never materializes.  This is the
+        streamed encoder's unit of work."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        seg = self.segments[index]
+        return self._segment_flat(leaves, seg).reshape(seg.rows, self.n)
+
+    def segment_blocks_batched(self, tree: Any, index: int) -> jnp.ndarray:
+        """Batched :meth:`segment_blocks`: every leaf carries a leading
+        clients/pods axis; returns ``(batch, rows, N)`` for one segment."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        seg = self.segments[index]
+        batch = leaves[seg.leaf_ids[0]].shape[0]
+        return self._segment_flat(leaves, seg, batch=1).reshape(batch, seg.rows, self.n)
+
+    def iter_segment_blocks(self, tree: Any) -> Iterator[Tuple[LayoutSegment, jnp.ndarray]]:
+        """Yields (segment, (rows, N) blocks) in row order -- the per-tensor
+        streaming iterator the encoder consumes one leaf-group at a time."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        for seg in self.segments:
+            yield seg, self._segment_flat(leaves, seg).reshape(seg.rows, self.n)
+
+    def to_blocks(self, tree: Any) -> jnp.ndarray:
+        """Full ``(rows, N)`` block grid.  Monolithic layouts reproduce the
+        pre-layout ``flatten_to_blocks`` output bit-for-bit (single concat,
+        single trailing pad); per-tensor layouts concatenate their
+        independently padded segments in row order."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        flats = [self._segment_flat(leaves, seg) for seg in self.segments]
+        flat = flats[0] if len(flats) == 1 else jnp.concatenate(flats, axis=-1)
+        return flat.reshape(self.rows, self.n)
+
+    def to_blocks_batched(self, tree: Any) -> jnp.ndarray:
+        """Batched variant: every leaf carries a leading pods/clients axis;
+        returns ``(pods, rows, N)``."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        pods = leaves[0].shape[0]
+        flats = [self._segment_flat(leaves, seg, batch=1) for seg in self.segments]
+        flat = flats[0] if len(flats) == 1 else jnp.concatenate(flats, axis=-1)
+        return flat.reshape(pods, self.rows, self.n)
+
+    # -- array ops (blocks -> tree) -------------------------------------------
+
+    def _leaves_from_flat(self, flat: jnp.ndarray, seg: LayoutSegment) -> List[jnp.ndarray]:
+        leaves = []
+        off = 0
+        for lid, size in zip(seg.leaf_ids, seg.sizes):
+            shape, dtype = self.shapes[lid]
+            leaves.append(flat[off : off + size].reshape(shape).astype(dtype))
+            off += size
+        return leaves
+
+    def tree_from_blocks(self, blocks: jnp.ndarray) -> Any:
+        """Inverse of :meth:`to_blocks` (unpad per segment, reshape leaves)."""
+        out: List[Optional[jnp.ndarray]] = [None] * len(self.shapes)
+        for seg in self.segments:
+            flat = blocks[seg.row_slice].reshape(-1)
+            for lid, leaf in zip(seg.leaf_ids, self._leaves_from_flat(flat, seg)):
+                out[lid] = leaf
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    def segment_leaves(self, index: int, seg_blocks: jnp.ndarray) -> Dict[int, jnp.ndarray]:
+        """Decodes ONE segment's ``(rows, N)`` blocks into its leaves
+        (leaf id -> array) without the other segments -- per-tensor decode
+        can start before the rest of the model arrives."""
+        seg = self.segments[index]
+        flat = seg_blocks.reshape(-1)
+        return dict(zip(seg.leaf_ids, self._leaves_from_flat(flat, seg)))
+
+    def tree_from_segments(self, seg_blocks: Dict[int, jnp.ndarray]) -> Any:
+        """Assembles the full tree from per-segment block arrays (every
+        segment must be present; use :meth:`segment_leaves` for partial
+        decode)."""
+        out: List[Optional[jnp.ndarray]] = [None] * len(self.shapes)
+        for index, blocks in seg_blocks.items():
+            for lid, leaf in self.segment_leaves(index, blocks).items():
+                out[lid] = leaf
+        missing = [i for i, leaf in enumerate(out) if leaf is None]
+        if missing:
+            raise ValueError(f"tree_from_segments missing leaves {missing}")
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+
+def as_layout(spec: Any, n: Optional[int] = None, row_multiple: int = 1):
+    """Normalizes a spec to a GradientLayout: layouts pass through; the
+    legacy ``(treedef, shapes)`` tuple builds a monolithic layout (``n``
+    required then)."""
+    if isinstance(spec, GradientLayout):
+        return spec
+    treedef, shapes = spec
+    if n is None:
+        raise ValueError("legacy (treedef, shapes) spec needs the block size n")
+    shapes = tuple((tuple(s), d) for s, d in shapes)
+    return GradientLayout.from_shapes(treedef, shapes, n, row_multiple=row_multiple)

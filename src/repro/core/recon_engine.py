@@ -61,6 +61,7 @@ __all__ = [
     "chunked_rows",
     "ea_solve_flat",
     "ea_decode",
+    "ea_decode_segments",
     "ea_decode_two_phase",
     "decode_from_stats",
 ]
@@ -293,6 +294,59 @@ def ea_decode(
             info.converged.reshape(k, nb), info.iters.reshape(k, nb)
         )
     return jnp.einsum("k,kbn->bn", rhos, flat.reshape(k, nb, -1))
+
+
+def ea_decode_segments(
+    codec: BQCSCodec,
+    obs: jnp.ndarray,  # (K, nb, M) uint8 codes or (K, nb, W) uint32 words
+    alphas: jnp.ndarray,  # (K, nb)
+    rhos: jnp.ndarray,  # (K,)
+    layout,  # core.layout.GradientLayout (the round's block geometry)
+    gamp: Optional[GampConfig] = None,
+    *,
+    packed: bool,
+    use_pallas: bool = False,
+    chunk: int = 0,
+    emit=None,  # callback(segment, {leaf id: array}) per decoded segment
+) -> jnp.ndarray:
+    """Segment-local FedQCS-EA decode: each layout segment's ``(K, rows)``
+    block problems solve and aggregate independently, so per-tensor decode
+    starts -- and ``emit(segment, leaves)`` fires with that segment's decoded
+    leaves -- as soon as its rows arrive, without waiting for the rest of the
+    model (a streaming PS receiving segments in backward order updates the
+    last layers first).
+
+    Chunk boundaries align to layout segments by construction here: every
+    segment is its own chunked solve, so no ``lax.scan`` chunk ever straddles
+    two tensors (build per-tensor layouts with ``row_multiple=chunk`` to keep
+    those per-segment chunks full).  Each GAMP problem is per-(worker, block)
+    row, so the concatenated output matches :func:`ea_decode` over the whole
+    grid up to float reassociation (XLA compiles different reduction orders
+    for different batch shapes, and GAMP iterates on them -- expect ~1e-4
+    relative, not bit-identity).  Host loop over segments around jitted solves --
+    call from drivers/PS ingest, not inside jit.  Returns the aggregated
+    ``(nb, N)`` block grid.
+    """
+    if layout.rows != obs.shape[1]:
+        raise ValueError(
+            f"layout has {layout.rows} block rows, payloads have {obs.shape[1]}"
+        )
+    parts = []
+    for seg in layout.segments:
+        agg = ea_decode(
+            codec,
+            obs[:, seg.row_slice],
+            alphas[:, seg.row_slice],
+            rhos,
+            gamp,
+            packed=packed,
+            use_pallas=use_pallas,
+            chunk=chunk,
+        )
+        if emit is not None:
+            emit(seg, layout.segment_leaves(seg.index, agg))
+        parts.append(agg)
+    return jnp.concatenate(parts, axis=0)
 
 
 def ea_decode_two_phase(

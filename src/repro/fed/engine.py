@@ -48,9 +48,9 @@ from repro.core.compression import (
     BQCSCodec,
     FedQCSConfig,
     blocks_to_tree,
-    flatten_to_blocks,
     packed_width,
 )
+from repro.core.layout import GradientLayout
 from repro.core.gamp import em_gamp, gamp_health
 from repro.core.reconstruction import (
     aggregate_and_estimate,
@@ -94,6 +94,22 @@ class CohortConfig:
     dither_n: int = 2048  # qcs-dither re-blocking size (power of 2)
     record_nmse: bool = True
     seed: int = 0
+    # Block layout of the gradient wire (core/layout.py): "monolithic" (the
+    # paper's whole-model flatten, bit-identical to the pre-layout engine) or
+    # "per_tensor" (independently padded leaf segments -- the streaming
+    # geometry).  An explicit GradientLayout passed to CohortEngine(layout=)
+    # wins over this string.
+    layout: str = "monolithic"
+    # Segment-streamed client encode (per_tensor layouts only): the encode
+    # pass consumes the gradient one layout segment at a time, so peak live
+    # encoder memory is bounded by the largest segment's blocks instead of
+    # the whole model (DESIGN.md #Layout).
+    encode_stream: bool = False
+    # Microbatch count for the default gradient hook under encode_stream
+    # (client batch split into grad_accum equal microbatches, gradients
+    # averaged) -- bounds per-client activation memory next to the encoder's
+    # segment bound.
+    grad_accum: int = 1
 
 
 # ---------------------------------------------------------------------------
@@ -209,9 +225,34 @@ class CohortEngine:
         server: ServerOptConfig = ServerOptConfig(),
         stream: Optional[StreamConfig] = None,
         obs: Any = None,
+        layout: Optional[GradientLayout] = None,
+        grad_segments_fn: Optional[Callable[[Any, Any, GradientLayout], Any]] = None,
     ):
         if cohort.method not in METHODS:
             raise ValueError(f"unknown method {cohort.method!r} (choose from {METHODS})")
+        if cohort.layout not in ("monolithic", "per_tensor"):
+            raise ValueError(
+                f"unknown layout {cohort.layout!r} (choose 'monolithic' or "
+                "'per_tensor', or pass an explicit GradientLayout)"
+            )
+        if cohort.encode_stream and cohort.method not in EF_METHODS:
+            raise ValueError(
+                "encode_stream drives the BQCS encoder one layout segment at a "
+                f"time, which only the error-feedback codec methods {EF_METHODS} "
+                f"use; got {cohort.method!r}"
+            )
+        if cohort.encode_stream and cohort.impl == "loop":
+            raise ValueError(
+                "encode_stream is a vmapped-encode path; the per-client loop "
+                "oracle encodes whole block grids (impl='vmap')"
+            )
+        if cohort.grad_accum < 1:
+            raise ValueError(f"grad_accum must be >= 1, got {cohort.grad_accum}")
+        if cohort.grad_accum > 1 and not cohort.encode_stream:
+            raise ValueError(
+                "grad_accum microbatching is the encode_stream gradient hook's "
+                "knob (DESIGN.md #Layout); set encode_stream=True"
+            )
         if stream is not None and cohort.method not in ("fedqcs-ae", "fedqcs-ea"):
             raise ValueError(
                 f"streaming rounds fold Bussgang/EA sufficient statistics, which "
@@ -242,9 +283,39 @@ class CohortEngine:
         self.data = data
         self.params = params
 
+        # The block layout is hoisted ONCE here and shared by every pass (the
+        # constructor used to flatten params for the spec and the vmapped
+        # client pass re-derived and discarded it each call).  The layout IS
+        # the spec: blocks_to_tree takes it directly.
         n = self.fed_cfg.block_size
-        blocks0, self.spec, self.nbar = flatten_to_blocks(params, n)
-        self.nb, self.n = blocks0.shape
+        if layout is not None:
+            if layout.n != n:
+                raise ValueError(
+                    f"explicit layout has block size {layout.n}, "
+                    f"FedQCSConfig.block_size is {n}"
+                )
+            self.layout = layout
+        elif cohort.layout == "per_tensor":
+            self.layout = GradientLayout.per_tensor(params, n)
+        else:
+            self.layout = GradientLayout.monolithic(params, n)
+        if self.layout.kind == "per_tensor" and cohort.method == "qcs-dither":
+            raise ValueError(
+                "qcs-dither re-blocks the monolithic flat vector; a per-tensor "
+                "layout interleaves per-segment padding into that vector, so "
+                "its geometry does not apply (use the monolithic layout)"
+            )
+        if not cohort.encode_stream and any(
+            seg.s is not None for seg in self.layout.segments
+        ):
+            raise ValueError(
+                "per-segment sparsity budgets only take effect on the "
+                "segment-streamed encode; set encode_stream=True"
+            )
+        self.spec = self.layout
+        self.nbar = self.layout.nbar
+        self.nb, self.n = self.layout.rows, n
+        self._grad_segments_fn = grad_segments_fn
         self.clients = len(data.counts)
         self.codec = BQCSCodec(self.fed_cfg) if cohort.method in EF_METHODS else None
         self.gamp = gamp_config_from(self.codec) if self.codec else None
@@ -265,6 +336,23 @@ class CohortEngine:
         self._grads_jit = jax.jit(self._grad_blocks_fn)
         self._encode_jit = jax.jit(self._encode_fn)  # loop-oracle unit
         self._encode_vmap_jit = jax.jit(jax.vmap(self._encode_fn))
+        if cohort.encode_stream:
+            # Per-segment units of the streamed client pass: the batched
+            # gradient tree (hook default), one segment's (C, rows, N) block
+            # view, the vmapped per-segment encode (top-S budget static so a
+            # layout's per-segment s values each get their own graph), and
+            # the running true-sum fold for nmse bookkeeping.
+            self._grads_tree_jit = jax.jit(self._grads_tree_fn)
+            self._seg_blocks_jit = jax.jit(
+                self.layout.segment_blocks_batched, static_argnums=(1,)
+            )
+            self._encode_seg_jit = jax.jit(
+                jax.vmap(self._encode_segment_fn, in_axes=(0, 0, 0, None)),
+                static_argnums=(3,),
+            )
+            self._seg_true_sum_jit = jax.jit(
+                lambda rhos, blocks: jnp.einsum("k,kbn->bn", rhos, blocks)
+            )
         self._ps_jit = jax.jit(self._ps_fn)
         self._uplink_jit = jax.jit(
             lambda key, c, nb: realize_uplink(self.chan, key, c, nb),
@@ -292,6 +380,12 @@ class CohortEngine:
                     jnp.sum(jnp.square(ghat - jnp.einsum("k,kbn->bn", rhos, blocks)))
                     / (jnp.sum(jnp.square(jnp.einsum("k,kbn->bn", rhos, blocks))) + 1e-30)
                 )
+            )
+            # encode_stream folds the reference sum during the client pass
+            # (payloads carry (nb, N) true_sum, not (C, nb, N) blocks)
+            self._nmse_true_jit = jax.jit(
+                lambda ghat, ts: jnp.sum(jnp.square(ghat - ts))
+                / (jnp.sum(jnp.square(ts)) + 1e-30)
             )
         # blocks -> tree -> server update in one jitted apply (the per-round
         # fixed cost would otherwise be tens of eager dispatches and dominate
@@ -338,7 +432,7 @@ class CohortEngine:
         this pass — the gradient is the *model's* work; the engine's claim
         (and the loop oracle) is about the per-client codec path."""
         vm = jax.vmap(
-            lambda b: flatten_to_blocks(self.grad_fn(params, b), self.n)[0]
+            lambda b: self.layout.to_blocks(self.grad_fn(params, b))
         )
         leaves = jax.tree_util.tree_leaves(batch)
         c = leaves[0].shape[0]
@@ -356,6 +450,107 @@ class CohortEngine:
             lambda _, b: (None, vm(b)), None, jax.tree_util.tree_map(chunked, batch)
         )
         return blocks.reshape((nch * chunk, self.nb, self.n))[:c]
+
+    def _grads_tree_fn(self, params, batch):
+        """(C, ...) cohort batch -> batched gradient TREE (leaves keep their
+        model shapes under a leading client axis) -- the streamed pass slices
+        layout segments out of this instead of one monolithic block grid.
+        ``cohort.grad_accum`` > 1 splits each client's samples into that many
+        microbatches and averages the gradients through a ``lax.scan``, so
+        per-client activation memory is bounded alongside the encoder's
+        segment bound."""
+        vg = jax.vmap(lambda b: self.grad_fn(params, b))
+        acc = self.cohort.grad_accum
+        if acc <= 1:
+            return vg(batch)
+        leaves = jax.tree_util.tree_leaves(batch)
+        c, bsz = leaves[0].shape[0], leaves[0].shape[1]
+        if bsz % acc:
+            raise ValueError(
+                f"grad_accum={acc} must divide the per-client batch size {bsz}"
+            )
+        mb = bsz // acc
+
+        def split(x):  # (C, b, ...) -> (acc, C, b/acc, ...)
+            return x.reshape((c, acc, mb) + x.shape[2:]).swapaxes(0, 1)
+
+        mbatches = jax.tree_util.tree_map(split, batch)
+        first = jax.tree_util.tree_map(lambda x: x[0], mbatches)
+        rest = jax.tree_util.tree_map(lambda x: x[1:], mbatches)
+        gsum, _ = jax.lax.scan(
+            lambda carry, b: (
+                jax.tree_util.tree_map(jnp.add, carry, vg(b)),
+                None,
+            ),
+            vg(first),
+            rest,
+        )
+        return jax.tree_util.tree_map(lambda g: g / acc, gsum)
+
+    def _grad_segments(self, params, batch):
+        """Segment source for the streamed client pass: yields
+        ``(segment index, (C, rows, N) blocks)`` in any order.  The default
+        runs one batched gradient pass (grad_accum-microbatched) and slices
+        each layout segment out of the gradient tree; a custom
+        ``grad_segments_fn(params, batch, layout)`` can instead yield
+        segments as the backward pass produces them -- encode of layer L
+        overlapping backprop of layer L-1 -- which is the interleave hook the
+        LLM-scale pipeline plugs into."""
+        if self._grad_segments_fn is not None:
+            yield from self._grad_segments_fn(params, batch, self.layout)
+            return
+        grads = self._grads_tree_jit(params, batch)
+        for seg in self.layout.segments:
+            yield seg.index, self._seg_blocks_jit(grads, seg.index)
+
+    def _encode_segment_fn(self, blocks, residual, rho, s):
+        """One client's codec path for ONE layout segment: (rows, N) blocks
+        + matching residual rows -> wire payload rows.  Every codec stage is
+        per-block, so the segment outputs concatenate bit-identically to the
+        whole-grid encode; ``s`` is the segment's static top-S budget."""
+        if self.cohort.method == "fedqcs-ea" or (
+            self.cohort.method == "fedqcs-ae" and self.stream is not None
+        ):
+            words, alpha, enc_res = self.codec.compress_blocks_packed(
+                blocks, residual, s=s
+            )
+            payload = {"words": words, "alpha": alpha}
+        else:  # fedqcs-ae / qcs-qiht barrier rounds consume the index view
+            codes, alpha, enc_res = self.codec.compress_blocks(blocks, residual, s=s)
+            payload = {"codes": codes, "alpha": alpha}
+        new_res = jnp.where(rho > 0, enc_res, blocks + residual)
+        return payload, new_res
+
+    def _client_pass_streamed(self, params, batch, residuals, rhos, rhos_nmse):
+        """Segment-streamed client pass (``cohort.encode_stream``): consumes
+        the gradient one layout segment at a time, so the encoder's live
+        block state is one segment's ``(C, rows, N)`` -- bounded by the
+        largest segment -- never the whole ``(C, nb, N)`` grid.  Wire output
+        is bit-identical to the one-pass encode (pinned by test).  nmse
+        bookkeeping folds into a running ``(nb, N)`` true_sum instead of
+        carrying every client's full blocks to the PS."""
+        nseg = len(self.layout.segments)
+        pay: List[Any] = [None] * nseg
+        res: List[Any] = [None] * nseg
+        tsum: List[Any] = [None] * nseg
+        seg_s = self.layout.segment_s(self.fed_cfg.s)
+        for idx, seg_blocks in self._grad_segments(params, batch):
+            seg = self.layout.segments[idx]
+            pay[idx], res[idx] = self._encode_seg_jit(
+                seg_blocks, residuals[:, seg.row_slice], rhos, seg_s[idx]
+            )
+            if self.cohort.record_nmse:
+                tsum[idx] = self._seg_true_sum_jit(rhos_nmse, seg_blocks)
+        missing = [i for i, p in enumerate(pay) if p is None]
+        if missing:
+            raise ValueError(f"grad_segments_fn never yielded segments {missing}")
+        payloads = jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=1), *pay
+        )
+        new_res = jnp.concatenate(res, axis=1)
+        if self.cohort.record_nmse:
+            payloads = dict(payloads, true_sum=jnp.concatenate(tsum, axis=0))
+        return payloads, new_res
 
     def _encode_fn(self, blocks, residual, rho, key):
         """One client's codec path: (nb, N) blocks -> method payload.
@@ -396,10 +591,17 @@ class CohortEngine:
             new_res = residual
         return payload, new_res
 
-    def _client_pass(self, params, batch, residuals, rhos, keys):
+    def _client_pass(self, params, batch, residuals, rhos, keys, rhos_nmse=None):
         """Gradients (always batched) + encode (vmapped, or the per-client
         Python-loop oracle).  The two impls are bit-identical: they share the
-        gradient pass, and the per-client encode touches only its own row."""
+        gradient pass, and the per-client encode touches only its own row.
+        ``rhos_nmse`` is the normalized weighting the nmse reference uses
+        when it differs from ``rhos`` (streaming rounds pass raw weights)."""
+        if self.cohort.encode_stream:
+            return self._client_pass_streamed(
+                params, batch, residuals, rhos,
+                rhos_nmse if rhos_nmse is not None else rhos,
+            )
         blocks = self._grads_jit(params, batch)
         if self.cohort.impl == "loop":
             outs = [
@@ -440,7 +642,9 @@ class CohortEngine:
                     payloads["codes"], packed=False
                 )
         true_sum = None
-        if "blocks" in payloads:
+        if "true_sum" in payloads:  # encode_stream folded it per segment
+            true_sum = payloads["true_sum"]
+        elif "blocks" in payloads:
             true_sum = jnp.einsum("k,kbn->bn", rhos_eff, payloads["blocks"])
         if method == "none":
             ghat = true_sum
@@ -572,6 +776,22 @@ class CohortEngine:
         wire = self._wire_up_bytes(out["participating"])
         if wire is not None:
             event["wire_up_bytes"] = wire
+            if self.codec is not None and len(self.layout.segments) > 1:
+                # per-tensor wire accounting: each layout segment's share of
+                # the uplink (rows scale the same packed-words-per-row cost;
+                # pad rows are wire overhead the monolithic layout wouldn't
+                # pay, so they're itemized per segment)
+                q = self.codec.codebook
+                w = packed_width(q.n_codes(self.fed_cfg.m), q.bits)
+                event["wire_segments"] = [
+                    {
+                        "name": seg.name,
+                        "rows": seg.rows,
+                        "pad": seg.pad,
+                        "bytes": out["participating"] * seg.rows * (w * 32 + 32) / 8.0,
+                    }
+                    for seg in self.layout.segments
+                ]
         # model broadcast: every cohort member pulls the nbar f32 params
         event["wire_down_bytes"] = float(out["cohort"]) * self.nbar * 4.0
         un, pn = self._norms_jit(ghat_blocks, self.params)
@@ -678,7 +898,9 @@ class CohortEngine:
         with span("client_pass", self._spans):
             batch = self.data.cohort_batch(t, ids)
             res_c = self.residuals[jids]
-            payloads, new_res = self._client_pass(self.params, batch, res_c, jw, keys)
+            payloads, new_res = self._client_pass(
+                self.params, batch, res_c, jw, keys, rhos_nmse=rhos_eff
+            )
             if self._collect:
                 jax.block_until_ready(payloads)
 
@@ -716,7 +938,14 @@ class CohortEngine:
             if k not in ("participating",)  # recomputed below for parity
         }
         if self.cohort.record_nmse:
-            out["nmse"] = float(self._nmse_jit(ghat_blocks, payloads["blocks"], rhos_eff))
+            if "true_sum" in payloads:
+                out["nmse"] = float(
+                    self._nmse_true_jit(ghat_blocks, payloads["true_sum"])
+                )
+            else:
+                out["nmse"] = float(
+                    self._nmse_jit(ghat_blocks, payloads["blocks"], rhos_eff)
+                )
         out["cohort"] = len(ids)
         out["participating"] = float(np.sum(w_raw > 0))
         out["arrived"] = float(np.sum(arrived))
@@ -758,6 +987,18 @@ def _smoke_main(argv=None):
     ap.add_argument("--method", default="fedqcs-ae", choices=METHODS)
     ap.add_argument("--chunk", type=int, default=0)
     ap.add_argument(
+        "--layout", default="monolithic", choices=("monolithic", "per_tensor"),
+        help="gradient block layout (per_tensor = independently padded leaf segments)",
+    )
+    ap.add_argument(
+        "--encode-stream", action="store_true",
+        help="stream the client encode one layout segment at a time",
+    )
+    ap.add_argument(
+        "--grad-accum", type=int, default=1,
+        help="microbatches for the encode-stream gradient hook",
+    )
+    ap.add_argument(
         "--stream", type=int, default=0, metavar="BATCH",
         help="streaming PS mode: sub-cohort ingest batch size (0 = barrier round)",
     )
@@ -783,7 +1024,10 @@ def _smoke_main(argv=None):
         jax.grad(toy_loss),
         ArrayClientData(x, y, parts, batch_size=4),
         fed_cfg=FedQCSConfig(block_size=64, reduction_ratio=2, bits=3, gamp_iters=10),
-        cohort=CohortConfig(method=args.method, chunk=args.chunk),
+        cohort=CohortConfig(
+            method=args.method, chunk=args.chunk, layout=args.layout,
+            encode_stream=args.encode_stream, grad_accum=args.grad_accum,
+        ),
         sched=SchedulerConfig(
             kind="uniform" if args.sample_frac < 1.0 else "full",
             sample_frac=args.sample_frac,

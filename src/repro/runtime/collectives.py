@@ -42,6 +42,7 @@ import jax.numpy as jnp
 from repro.core import bussgang
 from repro.core.compression import BQCSCodec
 from repro.core.gamp import GampConfig, em_gamp
+from repro.core.layout import GradientLayout
 from repro.core.recon_engine import ReconSpec
 from repro.core.reconstruction import estimate_and_aggregate_packed
 from repro.models.sharding import cs
@@ -226,17 +227,23 @@ def make_sharded_allreduce(codec: BQCSCodec, mesh, local_shapes, nbar_local: int
             "with wire_mode='gather_codes' (see DESIGN.md)"
         )
     n = cfg.block_size
+    # The per-shard block geometry as an explicit GradientLayout over the
+    # LOCAL leaf shards (abstract specs, no arrays needed) -- this replaces
+    # the manual flatten/pad/unflatten index math that used to live in the
+    # body, and gets the int32 span guard + Python-int offsets for free.
+    layout = GradientLayout.from_shapes(
+        jax.tree_util.tree_structure([0] * len(local_shapes)),
+        [(tuple(s), jnp.float32) for s in local_shapes],
+        n,
+    )
+    if layout.nbar != nbar_local:
+        raise ValueError(
+            f"local_shapes sum to {layout.nbar} scalars, caller says {nbar_local}"
+        )
 
     def body(residual, rhos, *grad_leaves):
         with use_rules(None):  # no auto-axis constraints inside manual body
-            pods = grad_leaves[0].shape[0]
-            flats = [g.reshape(pods, -1).astype(jnp.float32) for g in grad_leaves]
-            sizes = [f.shape[1] for f in flats]
-            flat = jnp.concatenate(flats, axis=1)
-            pad = residual.shape[1] * n - nbar_local
-            if pad:
-                flat = jnp.concatenate([flat, jnp.zeros((pods, pad), flat.dtype)], 1)
-            blocks = flat.reshape(pods, -1, n)
+            blocks = layout.to_blocks_batched(list(grad_leaves))
             codes, alpha, new_res = jax.vmap(codec.compress_blocks)(blocks, residual)
             # rho == 0 pods are dead: full carry stays in the residual.
             new_res = jnp.where(rhos[:, None, None] > 0, new_res, blocks + residual)
@@ -246,12 +253,7 @@ def make_sharded_allreduce(codec: BQCSCodec, mesh, local_shapes, nbar_local: int
             nu = bussgang.effective_noise_var(alpha, rhos, codec.codebook)
             energy = bussgang.signal_energy(alpha, rhos, cfg.m, n)
             ghat = _reconstruct(y, nu, energy, codec)
-            flat_hat = ghat.reshape(-1)[:nbar_local]
-            outs, off = [], 0
-            for shape, size in zip(local_shapes, sizes):
-                outs.append(flat_hat[off : off + size].reshape(shape))
-                off += size
-            return (new_res, *outs)
+            return (new_res, *layout.tree_from_blocks(ghat))
 
     return body  # steps.py wraps this with jax.shard_map (needs param specs)
 

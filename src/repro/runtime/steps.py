@@ -362,13 +362,15 @@ def make_train_step(
                 losses, grads_pp = jax.vmap(
                     jax.value_and_grad(loss_fn), in_axes=(None, 0)
                 )(state["params"], pb)
-                blocks_pp, spec, nbar = flatten_to_blocks_batched(
+                # the spec IS a GradientLayout now (core/layout.py); it owns
+                # its own unpadding, so no separate nbar threads through
+                blocks_pp, layout, _ = flatten_to_blocks_batched(
                     grads_pp, n, row_multiple=_ROW_MULTIPLE
                 )
                 ghat, new_residual = fedqcs_vmapped_allreduce(
                     blocks_pp, state["residual"], codec, state["participating"]
                 )
-                grads = blocks_to_tree(ghat, spec, nbar)
+                grads = blocks_to_tree(ghat, layout)
                 new_params, new_opt = adam.update(
                     opt_cfg, grads, state["opt"], state["params"], state["step"]
                 )
@@ -388,12 +390,12 @@ def make_train_step(
         participating = participating[0]
         with use_rules(rules):
             loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-            blocks, spec, nbar = flatten_to_blocks(grads, n, row_multiple=_ROW_MULTIPLE)
+            blocks, layout, _ = flatten_to_blocks(grads, n, row_multiple=_ROW_MULTIPLE)
             blocks = cs(blocks, "blocks", None)
             ghat, new_residual = fedqcs_pod_allreduce(
                 blocks, residual, codec, axis_name="pod", participating=participating
             )
-            grads = blocks_to_tree(ghat, spec, nbar)
+            grads = blocks_to_tree(ghat, layout)
             new_params, new_opt = adam.update(opt_cfg, grads, opt, params, step)
         loss_mean = jax.lax.pmean(loss, "pod")
         return new_params, new_opt, new_residual[None], loss_mean

@@ -1,0 +1,499 @@
+"""GradientLayout: per-tensor block geometry + streamed encode (core/layout.py).
+
+Pins the tentpole invariants of the layout refactor:
+
+  * the default monolithic layout produces BIT-IDENTICAL packed wire words to
+    the pre-refactor flatten (inline golden reimplementation below);
+  * the segment-streamed encode of a per-tensor layout is bit-identical to
+    the one-pass encode of the same layout (every codec stage is per-block);
+  * layout <-> tree roundtrips are exact across the registry models, uneven
+    leaf sizes, and row_multiple padding (hypothesis properties + eager
+    sweeps -- hypothesis is an optional dev dependency, see hypothesis_stub);
+  * flat index math that would overflow int32 raises at construction with
+    the per-tensor layout named as the fix;
+  * the streamed encoder's live-memory bound is the LARGEST segment, and the
+    engine's encode_stream path reproduces the monolithic-pass residuals.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compression import (
+    BQCSCodec,
+    FedQCSConfig,
+    blocks_to_tree,
+    flatten_to_blocks,
+    flatten_to_blocks_batched,
+)
+from repro.core.layout import INT32_MAX, GradientLayout, as_layout
+
+try:  # optional dev dependency (pyproject [dev] extra)
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:  # property tests skip via importorskip
+    from hypothesis_stub import hypothesis, st
+
+KEY = jax.random.PRNGKey(0)
+CFG = FedQCSConfig(block_size=64, reduction_ratio=2, bits=3, gamp_iters=8)
+
+
+def _tree(sizes, seed=0):
+    """Uneven-leaf pytree: dict of 1D/2D float32 leaves of the given sizes."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for i, s in enumerate(sizes):
+        shape = (s,) if (i % 2 == 0 or s < 4) else (s // 2, 2) if s % 2 == 0 else (s,)
+        out[f"w{i}"] = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    return out
+
+
+def _golden_flatten(tree, n, row_multiple=1):
+    """The PRE-REFACTOR flatten_to_blocks, verbatim: one concat of raveled
+    f32 leaves, one trailing zero-pad, reshape.  The monolithic layout must
+    reproduce this bit-for-bit."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+    nbar = flat.shape[0]
+    nblocks = -(-nbar // n)
+    nblocks = -(-nblocks // row_multiple) * row_multiple
+    pad = nblocks * n - nbar
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros(pad, flat.dtype)])
+    return flat.reshape(nblocks, n), nbar
+
+
+# ---------------------------------------------------------------------------
+# monolithic bit-identity: blocks AND packed wire words
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("row_multiple", [1, 4])
+def test_monolithic_blocks_bit_identical_to_golden(row_multiple):
+    tree = _tree([3, 130, 64, 7, 1000])
+    golden, nbar = _golden_flatten(tree, 64, row_multiple)
+    blocks, layout, got_nbar = flatten_to_blocks(tree, 64, row_multiple=row_multiple)
+    assert got_nbar == nbar and layout.nbar == nbar
+    assert isinstance(layout, GradientLayout) and layout.kind == "monolithic"
+    np.testing.assert_array_equal(np.asarray(blocks), np.asarray(golden))
+
+
+def test_monolithic_wire_words_bit_identical_to_golden():
+    """The acceptance-criteria pin: packed uint32 wire words off the default
+    layout match the pre-refactor encode exactly, bit for bit."""
+    codec = BQCSCodec(CFG)
+    tree = _tree([67, 512, 9, 300], seed=3)
+    golden_blocks, _ = _golden_flatten(tree, CFG.block_size)
+    residual = jnp.zeros_like(golden_blocks)
+    gw, ga, gres = codec.compress_blocks_packed(golden_blocks, residual)
+
+    payload, layout, new_res = codec.compress_tree(tree, residual)
+    assert layout.kind == "monolithic"
+    np.testing.assert_array_equal(np.asarray(payload.codes), np.asarray(gw))
+    np.testing.assert_array_equal(np.asarray(payload.alpha), np.asarray(ga))
+    np.testing.assert_array_equal(np.asarray(new_res), np.asarray(gres))
+
+
+def test_streamed_wire_bit_identical_to_one_pass():
+    """Segment-streamed encode == one-pass encode of the SAME per-tensor
+    layout: words, alphas, and error-feedback residuals all bit-identical
+    (every codec stage is per-block; rows never straddle segments)."""
+    codec = BQCSCodec(CFG)
+    tree = _tree([67, 512, 9, 300], seed=4)
+    layout = codec.layout_for(tree, per_tensor=True)
+    assert len(layout.segments) == 4
+    residual = jnp.asarray(
+        np.random.default_rng(7).normal(size=(layout.rows, layout.n)), jnp.float32
+    )
+    one_pass = codec.compress_blocks_packed(layout.to_blocks(tree), residual)
+    payload, _, new_res = codec.compress_tree_streamed(tree, residual, layout)
+    np.testing.assert_array_equal(np.asarray(payload.codes), np.asarray(one_pass[0]))
+    np.testing.assert_array_equal(np.asarray(payload.alpha), np.asarray(one_pass[1]))
+    np.testing.assert_array_equal(np.asarray(new_res), np.asarray(one_pass[2]))
+
+
+# ---------------------------------------------------------------------------
+# roundtrips: eager sweep + hypothesis properties + registry models
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["monolithic", "per_tensor"])
+@pytest.mark.parametrize("row_multiple", [1, 3])
+@pytest.mark.parametrize(
+    "sizes", [[1], [5], [64], [3, 130, 64, 7], [1, 1, 1], [200, 1, 33]]
+)
+def test_roundtrip_sweep(kind, row_multiple, sizes):
+    tree = _tree(sizes, seed=sum(sizes))
+    if kind == "monolithic":
+        layout = GradientLayout.monolithic(tree, 16, row_multiple=row_multiple)
+    else:
+        layout = GradientLayout.per_tensor(tree, 16, row_multiple=row_multiple)
+    blocks = layout.to_blocks(tree)
+    assert blocks.shape == (layout.rows, 16)
+    assert layout.rows % row_multiple == 0
+    back = layout.tree_from_blocks(blocks)
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(back)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@hypothesis.given(
+    sizes=st.lists(st.integers(1, 400), min_size=1, max_size=8),
+    n=st.sampled_from([8, 16, 64, 255]),
+    row_multiple=st.integers(1, 4),
+    per_tensor=st.booleans(),
+    group_scalars=st.sampled_from([0, 32]),
+)
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_roundtrip_property(sizes, n, row_multiple, per_tensor, group_scalars):
+    """layout.to_blocks -> tree_from_blocks is the identity for any leaf-size
+    mix x block size x row_multiple, both layout kinds, with and without
+    small-leaf coalescing; and the geometry invariants hold (contiguous
+    row ownership, per-segment pad < a row-multiple stripe, exact nbar)."""
+    tree = _tree(sizes, seed=sum(sizes) + n)
+    if per_tensor:
+        layout = GradientLayout.per_tensor(
+            tree, n, row_multiple=row_multiple, group_scalars=group_scalars
+        )
+    else:
+        layout = GradientLayout.monolithic(tree, n, row_multiple=row_multiple)
+    # geometry invariants
+    assert layout.nbar == sum(sizes)
+    row = 0
+    for seg in layout.segments:
+        assert seg.row_start == row and seg.rows % row_multiple == 0
+        assert seg.pad == seg.rows * n - seg.size and seg.pad < n * row_multiple
+        row += seg.rows
+    assert row == layout.rows
+    assert sorted(
+        lid for seg in layout.segments for lid in seg.leaf_ids
+    ) == list(range(len(sizes)))
+    # roundtrip
+    back = layout.tree_from_blocks(layout.to_blocks(tree))
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+FED_COHORT_ARCHS = ["qwen3-0.6b", "mamba2-1.3b", "qwen3-moe-235b-a22b"]
+
+
+@pytest.mark.parametrize("arch", FED_COHORT_ARCHS)
+def test_registry_model_per_tensor_roundtrip(arch):
+    """Per-tensor layouts survive real registry-model param trees (nested
+    dicts, mixed 1D/2D/3D leaves), with segment decode matching the full
+    inverse leaf-for-leaf."""
+    from repro.configs.registry import smoke_config
+    from repro.models import model as M
+
+    cfg = smoke_config(arch)
+    params = M.init_params(cfg, KEY)
+    layout = GradientLayout.per_tensor(params, 255, row_multiple=2)
+    blocks = layout.to_blocks(params)
+    back = layout.tree_from_blocks(blocks)
+    assert jax.tree_util.tree_structure(back) == jax.tree_util.tree_structure(params)
+    for a, b in zip(jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(back)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # per-segment partial decode reassembles the same tree
+    segs = {
+        seg.index: blocks[seg.row_slice] for seg in layout.segments
+    }
+    back2 = layout.tree_from_segments(segs)
+    for a, b in zip(jax.tree_util.tree_leaves(back), jax.tree_util.tree_leaves(back2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_batched_blocks_match_unbatched():
+    tree = _tree([37, 256, 5], seed=9)
+    stacked = jax.tree_util.tree_map(lambda x: jnp.stack([x, 2 * x, -x]), tree)
+    _, layout, _ = flatten_to_blocks(tree, 32)
+    batched, blayout, _ = flatten_to_blocks_batched(stacked, 32)
+    assert blayout.rows == layout.rows
+    for k in range(3):
+        one = jax.tree_util.tree_map(lambda x: x[k], stacked)
+        np.testing.assert_array_equal(
+            np.asarray(batched[k]), np.asarray(layout.to_blocks(one))
+        )
+    # per-segment batched view agrees with the full batched grid
+    pt = GradientLayout.per_tensor(tree, 32)
+    for seg in pt.segments:
+        np.testing.assert_array_equal(
+            np.asarray(pt.segment_blocks_batched(stacked, seg.index)),
+            np.asarray(pt.to_blocks_batched(stacked)[:, seg.row_slice]),
+        )
+
+
+# ---------------------------------------------------------------------------
+# int32 guard (mocked large specs -- no arrays allocated)
+# ---------------------------------------------------------------------------
+
+
+def test_int32_guard_monolithic_raises():
+    """A 7B-scale model overflows flat int32 index math under the monolithic
+    layout: construction must raise, naming the per-tensor fix."""
+    if jax.config.read("jax_enable_x64"):
+        pytest.skip("x64 enabled: large spans are legal")
+    treedef = jax.tree_util.tree_structure([0, 0])
+    shapes = [((INT32_MAX // 2, 3), jnp.float32), ((1024,), jnp.float32)]
+    with pytest.raises(ValueError, match="per-tensor"):
+        GradientLayout.from_shapes(treedef, shapes, 1024)
+
+
+def test_int32_guard_per_tensor_passes_where_monolithic_fails():
+    """Each tensor of a 7B model is individually inside int32 even though the
+    model is not -- the per-tensor layout is the documented fix."""
+    if jax.config.read("jax_enable_x64"):
+        pytest.skip("x64 enabled: large spans are legal")
+    treedef = jax.tree_util.tree_structure([0, 0, 0])
+    big = INT32_MAX // 2 + 1  # each leaf ~1.07e9 scalars; total ~3.2e9 > 2^31
+    shapes = [((big,), jnp.float32)] * 3
+    with pytest.raises(ValueError, match="int32"):
+        GradientLayout.from_shapes(treedef, shapes, 1024)
+    layout = GradientLayout.from_shapes_per_tensor(treedef, shapes, 1024)
+    assert layout.nbar == 3 * big > INT32_MAX  # Python ints: no wrap
+    assert all(seg.rows * layout.n <= INT32_MAX for seg in layout.segments)
+    # a SINGLE over-int32 tensor still raises, segment-locally
+    with pytest.raises(ValueError, match="segment"):
+        GradientLayout.from_shapes_per_tensor(
+            treedef, [((INT32_MAX + 2,), jnp.float32)] * 3, 1024
+        )
+
+
+# ---------------------------------------------------------------------------
+# per-segment sparsity budgets + ownership map + live-memory accounting
+# ---------------------------------------------------------------------------
+
+
+def test_per_segment_sparsity_budgets():
+    tree = _tree([640, 64, 320], seed=11)
+    ratios = {"w0": 0.5, "w1": None, "w2": 0.25}
+    layout = GradientLayout.per_tensor(
+        tree, 64, s_ratio=lambda name, shape: next(
+            v for k, v in ratios.items() if k in name
+        )
+    )
+    assert [seg.s for seg in layout.segments] == [32, None, 16]
+    assert layout.segment_s(default_s=6) == [32, 6, 16]
+    with pytest.raises(ValueError, match="s_ratio"):
+        GradientLayout.per_tensor(tree, 64, s_ratio=lambda n, s: 1.5)
+    # budgets force the streamed path through compress_tree, same wire shape
+    codec = BQCSCodec(CFG)
+    residual = codec.zero_residual(tree, layout)
+    payload, _, new_res = codec.compress_tree(tree, residual, layout)
+    assert payload.codes.shape[0] == layout.rows
+    assert new_res.shape == (layout.rows, 64)
+
+
+def test_owner_map_per_tensor_exact():
+    tree = _tree([100, 64, 3], seed=13)
+    layout = GradientLayout.per_tensor(tree, 64)
+    owners = layout.owner_map()
+    assert set(owners) == {0, 1, 2}
+    for lid, (seg_idx, r0, r1) in owners.items():
+        seg = layout.segments[seg_idx]
+        assert lid in seg.leaf_ids
+        assert seg.row_start <= r0 < r1 <= seg.row_start + seg.rows
+    # per-tensor: no two leaves share a row
+    spans = sorted((r0, r1) for _, r0, r1 in owners.values())
+    for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+        assert a1 <= b0
+
+
+def test_encoder_live_bytes_bound():
+    """Streamed live bytes are bounded by the LARGEST segment; monolithic
+    pays the whole grid.  This is the invariant BENCH_encode.json records
+    and CI validates."""
+    tree = _tree([4096, 64, 512, 8], seed=17)
+    mono = GradientLayout.monolithic(tree, 64)
+    pt = GradientLayout.per_tensor(tree, 64)
+    assert pt.rows >= mono.rows  # per-segment padding never shrinks the grid
+    assert pt.encoder_live_bytes(streamed=True) == 3 * pt.max_segment_rows * 64 * 4
+    assert pt.encoder_live_bytes(streamed=True) < pt.encoder_live_bytes(streamed=False)
+    assert pt.max_segment_rows == max(seg.rows for seg in pt.segments)
+
+
+def test_as_layout_legacy_tuple():
+    tree = _tree([33, 20], seed=19)
+    _, layout, nbar = flatten_to_blocks(tree, 16)
+    legacy = layout.spec  # the old (treedef, shapes) tuple
+    rebuilt = as_layout(legacy, n=16)
+    assert rebuilt.nbar == nbar and rebuilt.rows == layout.rows
+    blocks = layout.to_blocks(tree)
+    for a, b in zip(
+        jax.tree_util.tree_leaves(blocks_to_tree(blocks, legacy, nbar)),
+        jax.tree_util.tree_leaves(blocks_to_tree(blocks, rebuilt)),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError, match="block size"):
+        as_layout(legacy)
+
+
+# ---------------------------------------------------------------------------
+# segment-local EA decode (recon_engine.ea_decode_segments)
+# ---------------------------------------------------------------------------
+
+
+def test_ea_decode_segments_matches_whole_grid_and_emits():
+    """Segment-local EA decode matches the whole-grid decode up to float
+    reassociation (GAMP is per-(worker, block) row, but XLA picks reduction
+    orders per batch shape and GAMP iterates on them), and the emit callback
+    fires once per segment with exactly that segment's decoded leaves."""
+    from repro.core.recon_engine import ea_decode, ea_decode_segments
+    from repro.core.reconstruction import gamp_config_from
+
+    codec = BQCSCodec(CFG)
+    tree = _tree([130, 64, 40], seed=23)
+    layout = codec.layout_for(tree, per_tensor=True)
+    rng = np.random.default_rng(29)
+    k = 3
+    words, alphas = [], []
+    for i in range(k):
+        scaled = jax.tree_util.tree_map(lambda x, i=i: (i + 1.0) * x, tree)
+        w, a, _ = codec.compress_blocks_packed(
+            layout.to_blocks(scaled), jnp.zeros((layout.rows, layout.n))
+        )
+        words.append(w)
+        alphas.append(a)
+    words = jnp.stack(words)
+    alphas = jnp.stack(alphas)
+    rhos = jnp.asarray(rng.dirichlet(np.ones(k)), jnp.float32)
+    gamp = gamp_config_from(codec)
+    whole = ea_decode(codec, words, alphas, rhos, gamp, packed=True)
+    emitted = []
+    seg_wise = ea_decode_segments(
+        codec, words, alphas, rhos, layout, gamp, packed=True,
+        emit=lambda seg, leaves: emitted.append((seg.index, leaves)),
+    )
+    np.testing.assert_allclose(
+        np.asarray(seg_wise), np.asarray(whole), rtol=5e-4, atol=1e-5
+    )
+    assert [i for i, _ in emitted] == [0, 1, 2]
+    # emitted leaves reassemble the segment-decoded tree EXACTLY (the leaves
+    # came from those same segment solves)
+    tree_hat = layout.tree_from_blocks(seg_wise)
+    got = {}
+    for _, leaves in emitted:
+        got.update(leaves)
+    for lid, leaf in enumerate(jax.tree_util.tree_leaves(tree_hat)):
+        np.testing.assert_array_equal(np.asarray(got[lid]), np.asarray(leaf))
+
+
+def test_api_reconstruct_emit_segments():
+    from repro.core import api
+
+    codec = api.make_codec(CFG)
+    tree = _tree([100, 30], seed=31)
+    layout = codec.layout_for(tree, per_tensor=True)
+    state = api.init_state(codec, tree, layout)
+    payload, spec, state = api.compress(codec, tree, state, layout)
+    assert spec is layout
+    barrier = api.reconstruct(codec, [payload], [1.0], spec,
+                              recon=api.ReconSpec(mode="ea"))
+    fired = []
+    streamed = api.reconstruct(
+        codec, [payload], [1.0], spec, recon=api.ReconSpec(mode="ea"),
+        emit=lambda seg, leaves: fired.append(seg.index),
+    )
+    assert fired == [0, 1]
+    for a, b in zip(jax.tree_util.tree_leaves(barrier), jax.tree_util.tree_leaves(streamed)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-4, atol=1e-5)
+    with pytest.raises(ValueError, match="segment-local"):
+        api.reconstruct(codec, [payload], [1.0], spec,
+                        recon=api.ReconSpec(mode="ae"), emit=lambda s, l: None)
+
+
+# ---------------------------------------------------------------------------
+# engine integration: encode_stream + per-tensor layout + grad_accum
+# ---------------------------------------------------------------------------
+
+
+def _toy_engine(**kw):
+    from repro.fed.engine import ArrayClientData, CohortConfig, CohortEngine
+    from repro.fed.partition import PartitionConfig, partition_indices
+    from repro.fed.toy import toy_classification, toy_loss, toy_params
+
+    x, y = toy_classification()
+    parts = partition_indices(y, 6, PartitionConfig(kind="iid", min_size=4))
+    cohort = CohortConfig(**{"method": "fedqcs-ea", **kw.pop("cohort", {})})
+    return CohortEngine(
+        toy_params(), jax.grad(toy_loss), ArrayClientData(x, y, parts, batch_size=4),
+        fed_cfg=FedQCSConfig(block_size=64, reduction_ratio=2, bits=3, gamp_iters=8),
+        cohort=cohort, **kw,
+    )
+
+
+def test_engine_encode_stream_matches_one_pass():
+    """encode_stream=True over a per-tensor layout leaves the engine in the
+    SAME state as the one-pass encode of that layout: identical residuals
+    and params after a round (the wire is bit-identical, so everything
+    downstream is too)."""
+    one = _toy_engine(cohort={"layout": "per_tensor"})
+    two = _toy_engine(cohort={"layout": "per_tensor", "encode_stream": True})
+    s1 = one.run_round()
+    s2 = two.run_round()
+    np.testing.assert_array_equal(np.asarray(one.residuals), np.asarray(two.residuals))
+    for a, b in zip(jax.tree_util.tree_leaves(one.params), jax.tree_util.tree_leaves(two.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert np.isfinite(s1["nmse"]) and np.isfinite(s2["nmse"])
+    assert np.isclose(s1["nmse"], s2["nmse"], rtol=1e-5)
+
+
+def test_engine_constructor_hoists_layout_once():
+    eng = _toy_engine(cohort={"layout": "per_tensor"})
+    assert eng.spec is eng.layout  # one object, shared by every pass
+    assert eng.nb == eng.layout.rows and eng.nbar == eng.layout.nbar
+    assert len(eng.layout.segments) > 1
+
+
+def test_engine_grad_accum_runs():
+    eng = _toy_engine(
+        cohort={"layout": "per_tensor", "encode_stream": True, "grad_accum": 2}
+    )
+    stats = eng.run_round()
+    assert np.isfinite(stats["nmse"])
+
+
+def test_engine_validation_errors():
+    with pytest.raises(ValueError, match="encode_stream"):
+        _toy_engine(cohort={"method": "signsgd", "encode_stream": True})
+    with pytest.raises(ValueError, match="qcs-dither"):
+        _toy_engine(cohort={"method": "qcs-dither", "layout": "per_tensor"})
+    with pytest.raises(ValueError, match="grad_accum"):
+        _toy_engine(cohort={"grad_accum": 2})
+    with pytest.raises(ValueError, match="loop"):
+        _toy_engine(cohort={"encode_stream": True, "impl": "loop"})
+    with pytest.raises(ValueError, match="layout"):
+        _toy_engine(cohort={"layout": "diagonal"})
+
+
+def test_engine_explicit_layout_with_budgets():
+    """An explicit GradientLayout (with per-segment budgets) threads through
+    CohortEngine(layout=...), and the budgets require the streamed encode."""
+    from repro.fed.toy import toy_params
+
+    layout = GradientLayout.per_tensor(
+        toy_params(), 64, s_ratio=lambda name, shape: 0.5 if "w" in name else None
+    )
+    with pytest.raises(ValueError, match="encode_stream"):
+        _toy_engine(layout=layout)
+    eng = _toy_engine(layout=layout, cohort={"encode_stream": True})
+    stats = eng.run_round()
+    assert np.isfinite(stats["nmse"])
+
+
+def test_engine_round_event_wire_segments():
+    """obs round events itemize the uplink per layout segment (per-tensor
+    wire accounting), summing to the round's wire_up_bytes."""
+    from repro.obs import InMemoryRecorder
+
+    rec = InMemoryRecorder()
+    eng = _toy_engine(cohort={"layout": "per_tensor", "encode_stream": True}, obs=rec)
+    eng.run_round()
+    [event] = [e for e in rec.events if e.get("kind", e.get("type")) or True]
+    segs = event["wire_segments"]
+    assert len(segs) == len(eng.layout.segments)
+    assert sum(s["rows"] for s in segs) == eng.layout.rows
+    np.testing.assert_allclose(
+        sum(s["bytes"] for s in segs), event["wire_up_bytes"], rtol=1e-6
+    )
