@@ -302,6 +302,207 @@ def encode_fused_vs_unfused(fast=True):
     return rows
 
 
+def interleave_producer(fast=True):
+    """Backward-interleaved segment producer vs the one-pass gradient tree
+    (DESIGN.md #Interleave): same streamed per-segment encode, but the
+    interleaved producer yields each layout segment as its layer chunk
+    backprops, so the full gradient pytree never materializes.  Two rows in
+    runs/bench/BENCH_interleave.json:
+
+    * ``one_pass_tree`` -- the engine's default hook (batched jax.grad tree,
+      then slice segments out of it).
+    * ``backward_interleaved`` -- the segment-tap producer.
+
+    Each row records client-pass wall-clock (timed non-blocking pass) and
+    the MEASURED peak of live device bytes over a blocking sampled pass
+    (jax.live_arrays delta vs the pre-pass baseline: gradients + encoder
+    state + the wire/residual accumulation both paths share).  The
+    interleaved row also records the ANALYTIC bound
+    (``peak_live_grad_bytes`` from the fold plan + stage-boundary
+    activations + the shared accumulation terms) and the wire-identity
+    invariant (streamed blocks bitwise equal to slicing the producer's own
+    one-pass tree).  bench-smoke (ci.yml) pins: wire_identical, measured
+    interleaved peak <= 1.05x its bound (the 5% is allocator/XLA temp slack
+    the fold plan cannot see), and interleaved peak < one-pass peak.
+    Wall-clock is recorded but not pinned relative: at smoke scale the two
+    passes are within CPU noise of each other -- the interleave buys MEMORY
+    (largest stage vs whole tree) and overlap, not raw CPU throughput."""
+    import dataclasses as dc
+    import gc
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.registry import smoke_config
+    from repro.core.compression import FedQCSConfig
+    from repro.fed.engine import (
+        CohortConfig,
+        CohortEngine,
+        TokenClientData,
+        make_interleaved_segments,
+    )
+    from repro.fed.scheduler import SchedulerConfig
+    from repro.models import model as M
+    from repro.models.segment_tap import interleaved_layout
+    from repro.obs.recorder import InMemoryRecorder
+
+    layers = 8 if fast else 16
+    chunks = 4
+    clients, batch, seq = 4, 2, 32
+    cfg = dc.replace(smoke_config("qwen3-0.6b"), n_layers=layers)
+    fed = FedQCSConfig(block_size=64, reduction_ratio=2, bits=3, gamp_iters=4)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    layout = interleaved_layout(cfg, fed.block_size, layer_chunks=chunks)
+    prod = make_interleaved_segments(cfg, layout, layer_chunks=chunks)
+    grad_fn = jax.grad(lambda p, b: M.train_loss(p, b, cfg))
+    data = TokenClientData(cfg.vocab_size, batch=batch, seq=seq,
+                           clients=clients, seed=1)
+
+    def build(hook, obs=None):
+        return CohortEngine(
+            params, grad_fn, data, fed_cfg=fed,
+            cohort=CohortConfig(method="fedqcs-ae", encode_stream=True,
+                                record_nmse=False, seed=5),
+            sched=SchedulerConfig(), layout=layout,
+            grad_segments_fn=hook, obs=obs,
+        )
+
+    cohort0 = data.cohort_batch(0, np.arange(clients))
+    rhos = jnp.ones((clients,), jnp.float32)
+
+    # wire identity: the streamed blocks vs slicing the producer's own
+    # one-pass tree (the encode is deterministic per block, so block
+    # equality IS wire equality; payload equality is pinned in tests)
+    tree = prod.grads_fn(params, cohort0)
+    wire_identical = True
+    for idx, blocks in prod(params, cohort0, layout):
+        ref = layout.segment_blocks_batched(tree, idx)
+        wire_identical = wire_identical and bool(jnp.array_equal(blocks, ref))
+    del tree
+
+    engines = {
+        "one_pass_tree": build(None),
+        "backward_interleaved": build(prod),
+    }
+
+    def client_pass(eng):
+        res = jnp.zeros((clients, eng.nb, eng.n), jnp.float32)
+        return eng._client_pass_streamed(params, cohort0, res, rhos, rhos)
+
+    def sampled_pass(eng):
+        """Blocking pass, sampling total live device bytes at each segment
+        boundary; returns (peak delta bytes, payload bytes).  The input
+        residual grid is allocated BEFORE the baseline sample: it is
+        persistent engine state (CohortEngine.residuals exists across
+        rounds), so the delta counts gradients + encoder state + the
+        wire/new-residual accumulation -- what the round actually adds."""
+        res = jnp.zeros((clients, eng.nb, eng.n), jnp.float32)
+        jax.block_until_ready(res)
+        gc.collect()
+        base = sum(a.size * a.dtype.itemsize for a in jax.live_arrays())
+        peak = 0
+        seg_s = layout.segment_s(fed.s)
+        pay = [None] * len(layout.segments)
+        nres = [None] * len(layout.segments)
+        for idx, seg_blocks in eng._grad_segments(params, cohort0):
+            seg = layout.segments[idx]
+            pay[idx], nres[idx] = eng._encode_seg_jit(
+                seg_blocks, res[:, seg.row_slice], rhos, seg_s[idx]
+            )
+            jax.block_until_ready((seg_blocks, pay[idx]))
+            live = sum(a.size * a.dtype.itemsize for a in jax.live_arrays())
+            peak = max(peak, live - base)
+        pay_bytes = sum(
+            a.size * a.dtype.itemsize
+            for p in pay for a in jax.tree_util.tree_leaves(p)
+        )
+        return peak, pay_bytes
+
+    # spans: one recorded round on the interleaved engine -- the overlap
+    # shows as backward+encode_overlap sub-phases inside client_pass
+    obs_eng = build(prod, obs=InMemoryRecorder())
+    obs_eng.run_round()  # warmup: compiles every per-segment graph
+    obs_eng.run_round()
+    phase = [
+        e["phase_ms"] for e in obs_eng.obs.events if e["kind"] == "round"
+    ][-1]
+
+    # analytic accounting shared by the bound below
+    nbar = layout.nbar
+    grad_tree_bytes = clients * nbar * 4
+    enc_stream_bytes = clients * layout.encoder_live_bytes(streamed=True)
+    d = cfg.d_model
+    ns = len(prod.stages)
+    # stage-boundary carries (ns-1 live at the forward's end) + one live
+    # cotangent + one in-flight VJP temp, and the int32 ctx leaves
+    # (tokens/labels/positions)
+    act_bytes = ((ns + 2) * clients * batch * seq * d * 4
+                 + 16 * clients * batch * seq)
+    res_accum_bytes = clients * layout.rows * fed.block_size * 4
+
+    rows, entries = [], []
+    for name, eng in engines.items():
+        jax.block_until_ready(client_pass(eng)[0])  # compile
+        reps = 3
+        t0 = time.time()
+        for _ in range(reps):
+            jax.block_until_ready(client_pass(eng)[0])
+        ms = 1e3 * (time.time() - t0) / reps
+        peak, pay_bytes = sampled_pass(eng)
+        entry = {
+            "name": f"interleave[{name}]",
+            "wall_ms": round(ms, 2),
+            "clients": clients, "layers": layers, "chunks": chunks,
+            "segments": len(layout.segments),
+            "grad_tree_bytes": grad_tree_bytes,
+            "measured_peak_live_bytes": int(peak),
+            "payload_bytes": int(pay_bytes),
+            "backend": jax.default_backend(),
+        }
+        if name == "backward_interleaved":
+            bound = (prod.peak_live_grad_bytes(clients) + act_bytes
+                     + res_accum_bytes + pay_bytes)
+            entry.update({
+                "wire_identical": wire_identical,
+                "peak_live_grad_bytes": prod.peak_live_grad_bytes(clients),
+                "activation_bytes": act_bytes,
+                "res_accum_bytes": res_accum_bytes,
+                "peak_live_bound_bytes": int(bound),
+                "phase_backward_ms": round(phase.get("backward", 0.0), 2),
+                "phase_encode_overlap_ms": round(
+                    phase.get("encode_overlap", 0.0), 2
+                ),
+                "phase_client_pass_ms": round(
+                    phase.get("client_pass", 0.0), 2
+                ),
+            })
+            derived = (
+                f"peak={peak};bound={int(bound)};"
+                f"grad_tree_bytes={grad_tree_bytes};"
+                f"wire_identical={wire_identical};"
+                f"backward_ms={entry['phase_backward_ms']};"
+                f"encode_overlap_ms={entry['phase_encode_overlap_ms']}"
+            )
+        else:
+            # one-pass analytic peak: the whole tree + one segment's encoder
+            entry["peak_live_bound_bytes"] = int(
+                grad_tree_bytes + enc_stream_bytes + res_accum_bytes
+                + pay_bytes
+            )
+            derived = (
+                f"peak={peak};grad_tree_bytes={grad_tree_bytes};"
+                f"enc_stream_bytes={enc_stream_bytes}"
+            )
+        entry["derived"] = derived
+        rows.append(f"interleave[{name}],{ms * 1e3:.1f},{derived}")
+        entries.append(entry)
+
+    path = write_bench("interleave", "interleave_producer", entries)
+    rows.append(f"interleave[json],0,{os.path.relpath(path)}")
+    return rows
+
+
 def quant_codebooks(fast=True):
     """Codebook-family microbench (DESIGN.md #Codebooks): packed-wire encode
     throughput, single-worker EA recovery NMSE, and honest wire accounting
@@ -1023,6 +1224,7 @@ def main() -> None:
         "kernels": kernel_micro,
         "gamp": gamp_ea_vs_ae,
         "encode": encode_fused_vs_unfused,
+        "interleave": interleave_producer,
         "quant": quant_codebooks,
         "recon": recon_scaling,
         "fed": fed_cohort_scaling,

@@ -86,6 +86,15 @@ class LayoutSegment:
     ``pad`` to exactly ``rows * n``.  ``s`` is the per-block top-S budget the
     encoder applies to this segment's rows (None = the codec config's global
     ``s``).  All fields are Python ints -- no device math at geometry time.
+
+    ``offsets`` (None for whole-leaf segments) marks a SLICED segment built
+    by the ``split`` hook: entry j says this segment owns leaf
+    ``leaf_ids[j]``'s flat scalars ``[offsets[j], offsets[j] + sizes[j])``
+    rather than the whole leaf.  A stacked ``(L, ...)`` parameter can then be
+    partitioned into per-layer-chunk segments so a backward-interleaved
+    producer emits each chunk's segment as soon as its cotangents exist
+    (DESIGN.md #Interleave) -- reassembly concatenates a leaf's pieces back
+    in offset order.
     """
 
     index: int
@@ -97,10 +106,16 @@ class LayoutSegment:
     row_start: int  # first row in the layout's global block grid
     pad: int  # zero scalars appended (rows * n - size)
     s: Optional[int] = None  # per-segment top-S override (None = global)
+    offsets: Optional[Tuple[int, ...]] = None  # per-leaf flat start (sliced)
 
     @property
     def row_slice(self) -> slice:
         return slice(self.row_start, self.row_start + self.rows)
+
+    @property
+    def leaf_offsets(self) -> Tuple[int, ...]:
+        """Per-leaf flat start offsets (0s for whole-leaf segments)."""
+        return self.offsets if self.offsets is not None else (0,) * len(self.leaf_ids)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -172,6 +187,7 @@ class GradientLayout:
         row_multiple: int = 1,
         s_ratio: Optional[Callable[[str, Tuple[int, ...]], Optional[float]]] = None,
         group_scalars: int = 0,
+        split: Optional[Callable[[str, Tuple[int, ...]], Optional[Sequence[int]]]] = None,
     ) -> "GradientLayout":
         """One segment per leaf, each independently padded to the block grid.
 
@@ -181,6 +197,14 @@ class GradientLayout:
         block per leaf).  ``s_ratio(name, shape) -> float | None`` assigns a
         per-segment sparsity budget (None = the codec config's global
         ``s_ratio``); for a grouped segment the first leaf's ratio wins.
+
+        ``split(name, shape) -> [p0, p1, ...] | None`` partitions a leaf
+        along axis 0 into parts of those row counts (must sum to shape[0]);
+        each part becomes its OWN sliced segment named ``name[a:b]``, never
+        coalesced with neighbours.  This aligns segment boundaries with the
+        layer chunks a backward-interleaved producer emits (DESIGN.md
+        #Interleave).  ``s_ratio`` is consulted with the base leaf name, so
+        every part of a split leaf inherits the leaf's budget.
         """
         leaves_with_path = jax.tree_util.tree_flatten_with_path(tree)[0]
         treedef = jax.tree_util.tree_structure(tree)
@@ -190,6 +214,7 @@ class GradientLayout:
         return cls.from_shapes_per_tensor(
             treedef, shapes, n, row_multiple=row_multiple,
             names=names, s_ratio=s_ratio, group_scalars=group_scalars,
+            split=split,
         )
 
     @classmethod
@@ -202,55 +227,89 @@ class GradientLayout:
         names: Optional[Sequence[str]] = None,
         s_ratio: Optional[Callable[[str, Tuple[int, ...]], Optional[float]]] = None,
         group_scalars: int = 0,
+        split: Optional[Callable[[str, Tuple[int, ...]], Optional[Sequence[int]]]] = None,
     ) -> "GradientLayout":
         """Abstract-spec variant of :meth:`per_tensor` (see there)."""
         shapes = tuple((tuple(s), d) for s, d in shapes)
         sizes = [_leaf_size(s) for s, _ in shapes]
         names = list(names) if names is not None else [f"leaf{i}" for i in range(len(shapes))]
-        # coalesce consecutive leaves into groups of >= group_scalars scalars
-        groups: List[List[int]] = []
-        cur: List[int] = []
-        cur_size = 0
+        # units: (leaf_id, flat offset, flat size, display name, groupable) --
+        # a whole leaf (groupable), or one axis-0 slice of a split leaf
+        # (never coalesced: its boundaries are the interleave chunk bounds)
+        units: List[Tuple[int, int, int, str, bool]] = []
         for i, size in enumerate(sizes):
-            cur.append(i)
-            cur_size += size
+            shape = shapes[i][0]
+            parts = split(names[i], shape) if split is not None else None
+            if parts is None:
+                units.append((i, 0, size, names[i], True))
+                continue
+            parts = [int(p) for p in parts]
+            if not shape or any(p <= 0 for p in parts) or sum(parts) != shape[0]:
+                raise ValueError(
+                    f"split for {names[i]!r} must partition axis 0 "
+                    f"(shape {shape}): got parts {parts}"
+                )
+            stride = size // shape[0]
+            lo = 0
+            for p in parts:
+                units.append(
+                    (i, lo * stride, p * stride, f"{names[i]}[{lo}:{lo + p}]", False)
+                )
+                lo += p
+        # coalesce consecutive groupable units into groups >= group_scalars
+        groups: List[List[Tuple[int, int, int, str, bool]]] = []
+        cur: List[Tuple[int, int, int, str, bool]] = []
+        cur_size = 0
+        for u in units:
+            if not u[4]:  # split part: flush the open group, stand alone
+                if cur:
+                    groups.append(cur)
+                    cur, cur_size = [], 0
+                groups.append([u])
+                continue
+            cur.append(u)
+            cur_size += u[2]
             if cur_size >= max(group_scalars, 1):
                 groups.append(cur)
                 cur, cur_size = [], 0
         if cur:
-            if groups and group_scalars > 0:
+            if groups and group_scalars > 0 and groups[-1][0][4]:
                 groups[-1].extend(cur)  # trailing stub rides the last group
             else:
                 groups.append(cur)
         segments: List[LayoutSegment] = []
         row_start = 0
         for gi, ids in enumerate(groups):
-            gsize = sum(sizes[i] for i in ids)
+            gsize = sum(u[2] for u in ids)
             rows = -(-gsize // n)
             rows = -(-rows // row_multiple) * row_multiple
-            _check_int32(rows * n, f"layout segment {names[ids[0]]!r}")
+            _check_int32(rows * n, f"layout segment {ids[0][3]!r}")
             s = None
             if s_ratio is not None:
-                ratio = s_ratio(names[ids[0]], shapes[ids[0]][0])
+                # base leaf name, so split parts inherit the leaf's budget
+                lid0 = ids[0][0]
+                ratio = s_ratio(names[lid0], shapes[lid0][0])
                 if ratio is not None:
                     if not (0.0 < ratio <= 1.0):
                         raise ValueError(
-                            f"per-segment s_ratio for {names[ids[0]]!r} must be "
+                            f"per-segment s_ratio for {names[lid0]!r} must be "
                             f"in (0, 1], got {ratio}"
                         )
                     s = max(1, int(ratio * n))
+            sliced = any(off != 0 or sz != sizes[lid] for lid, off, sz, _, _ in ids)
             segments.append(
                 LayoutSegment(
                     index=gi,
-                    name=names[ids[0]] if len(ids) == 1
-                    else f"{names[ids[0]]}+{len(ids) - 1}",
-                    leaf_ids=tuple(ids),
-                    sizes=tuple(sizes[i] for i in ids),
+                    name=ids[0][3] if len(ids) == 1
+                    else f"{ids[0][3]}+{len(ids) - 1}",
+                    leaf_ids=tuple(u[0] for u in ids),
+                    sizes=tuple(u[2] for u in ids),
                     size=gsize,
                     rows=rows,
                     row_start=row_start,
                     pad=rows * n - gsize,
                     s=s,
+                    offsets=tuple(u[1] for u in ids) if sliced else None,
                 )
             )
             row_start += rows
@@ -284,14 +343,20 @@ class GradientLayout:
         """leaf id -> (segment index, first row touched, last row touched + 1)
         in the GLOBAL block grid.  Exact ownership for per-tensor layouts; for
         the monolithic layout leaves share rows at their boundaries (a block
-        straddles leaves), so ranges may overlap."""
+        straddles leaves), so ranges may overlap.  A split leaf spans several
+        segments: the reported segment index is the first touching it and the
+        row range covers every piece."""
         out: Dict[int, Tuple[int, int, int]] = {}
         for seg in self.segments:
             off = 0
             for lid, size in zip(seg.leaf_ids, seg.sizes):
                 r0 = seg.row_start + off // self.n
                 r1 = seg.row_start + (max(off + size - 1, off)) // self.n + 1
-                out[lid] = (seg.index, r0, r1)
+                if lid in out:
+                    p_seg, p0, p1 = out[lid]
+                    out[lid] = (p_seg, min(p0, r0), max(p1, r1))
+                else:
+                    out[lid] = (seg.index, r0, r1)
                 off += size
         return out
 
@@ -308,12 +373,15 @@ class GradientLayout:
     def _segment_flat(self, leaves: Sequence[jnp.ndarray], seg: LayoutSegment,
                       batch: int = 0) -> jnp.ndarray:
         """Ravels + concatenates + zero-pads one segment's leaves (leading
-        ``batch`` axes pass through)."""
+        ``batch`` axes pass through).  For sliced segments only the owned
+        ``[offset, offset + size)`` flat span of each leaf is taken."""
         lead = leaves[seg.leaf_ids[0]].shape[:batch] if seg.leaf_ids else ()
-        parts = [
-            leaves[i].reshape(lead + (-1,)).astype(jnp.float32)
-            for i in seg.leaf_ids
-        ]
+        parts = []
+        for i, size, off in zip(seg.leaf_ids, seg.sizes, seg.leaf_offsets):
+            flat = leaves[i].reshape(lead + (-1,)).astype(jnp.float32)
+            if off != 0 or size != flat.shape[-1]:
+                flat = jax.lax.slice_in_dim(flat, off, off + size, axis=-1)
+            parts.append(flat)
         flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=-1)
         if seg.pad:
             flat = jnp.concatenate(
@@ -374,20 +442,70 @@ class GradientLayout:
             off += size
         return leaves
 
-    def tree_from_blocks(self, blocks: jnp.ndarray) -> Any:
-        """Inverse of :meth:`to_blocks` (unpad per segment, reshape leaves)."""
+    def _segment_pieces(
+        self, flat: jnp.ndarray, seg: LayoutSegment
+    ) -> Iterator[Tuple[int, int, jnp.ndarray]]:
+        """(leaf id, leaf flat offset, 1-D piece) for one segment's unpadded
+        flat scalars -- the generic inverse unit covering both whole-leaf and
+        sliced segments."""
+        off = 0
+        for lid, size, loff in zip(seg.leaf_ids, seg.sizes, seg.leaf_offsets):
+            yield lid, loff, flat[off : off + size]
+            off += size
+
+    def _assemble_leaves(
+        self, pieces: Dict[int, List[Tuple[int, jnp.ndarray]]]
+    ) -> List[Optional[jnp.ndarray]]:
+        """Leaf list from (offset, flat piece) contributions: pieces of a
+        split leaf concatenate back in offset order and must tile it
+        exactly."""
         out: List[Optional[jnp.ndarray]] = [None] * len(self.shapes)
+        for lid, plist in pieces.items():
+            shape, dtype = self.shapes[lid]
+            size = _leaf_size(shape)
+            plist.sort(key=lambda t: t[0])
+            cursor = 0
+            for off, p in plist:
+                if off != cursor:
+                    raise ValueError(
+                        f"leaf {lid} pieces do not tile: expected offset "
+                        f"{cursor}, got {off} (missing or overlapping slice)"
+                    )
+                cursor += int(p.shape[-1])
+            if cursor != size:
+                raise ValueError(
+                    f"leaf {lid} pieces cover {cursor} of {size} scalars"
+                )
+            flat = plist[0][1] if len(plist) == 1 else jnp.concatenate(
+                [p for _, p in plist], axis=-1
+            )
+            out[lid] = flat.reshape(shape).astype(dtype)
+        return out
+
+    def tree_from_blocks(self, blocks: jnp.ndarray) -> Any:
+        """Inverse of :meth:`to_blocks` (unpad per segment, reshape leaves;
+        split-leaf pieces concatenate back in offset order)."""
+        pieces: Dict[int, List[Tuple[int, jnp.ndarray]]] = {}
         for seg in self.segments:
             flat = blocks[seg.row_slice].reshape(-1)
-            for lid, leaf in zip(seg.leaf_ids, self._leaves_from_flat(flat, seg)):
-                out[lid] = leaf
-        return jax.tree_util.tree_unflatten(self.treedef, out)
+            for lid, loff, p in self._segment_pieces(flat, seg):
+                pieces.setdefault(lid, []).append((loff, p))
+        return jax.tree_util.tree_unflatten(
+            self.treedef, self._assemble_leaves(pieces)
+        )
 
     def segment_leaves(self, index: int, seg_blocks: jnp.ndarray) -> Dict[int, jnp.ndarray]:
         """Decodes ONE segment's ``(rows, N)`` blocks into its leaves
         (leaf id -> array) without the other segments -- per-tensor decode
-        can start before the rest of the model arrives."""
+        can start before the rest of the model arrives.  Sliced segments own
+        leaf fragments, not leaves; they have no whole-leaf decode."""
         seg = self.segments[index]
+        if seg.offsets is not None:
+            raise ValueError(
+                f"segment {seg.name!r} owns leaf slices (split layout); "
+                "whole leaves only exist once every piece is present -- "
+                "use tree_from_segments/tree_from_blocks"
+            )
         flat = seg_blocks.reshape(-1)
         return dict(zip(seg.leaf_ids, self._leaves_from_flat(flat, seg)))
 
@@ -395,14 +513,18 @@ class GradientLayout:
         """Assembles the full tree from per-segment block arrays (every
         segment must be present; use :meth:`segment_leaves` for partial
         decode)."""
-        out: List[Optional[jnp.ndarray]] = [None] * len(self.shapes)
+        pieces: Dict[int, List[Tuple[int, jnp.ndarray]]] = {}
         for index, blocks in seg_blocks.items():
-            for lid, leaf in self.segment_leaves(index, blocks).items():
-                out[lid] = leaf
-        missing = [i for i, leaf in enumerate(out) if leaf is None]
+            seg = self.segments[index]
+            flat = blocks.reshape(-1)
+            for lid, loff, p in self._segment_pieces(flat, seg):
+                pieces.setdefault(lid, []).append((loff, p))
+        missing = [i for i in range(len(self.shapes)) if i not in pieces]
         if missing:
             raise ValueError(f"tree_from_segments missing leaves {missing}")
-        return jax.tree_util.tree_unflatten(self.treedef, out)
+        return jax.tree_util.tree_unflatten(
+            self.treedef, self._assemble_leaves(pieces)
+        )
 
 
 def as_layout(spec: Any, n: Optional[int] = None, row_multiple: int = 1):

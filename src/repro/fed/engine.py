@@ -58,7 +58,7 @@ from repro.core.reconstruction import (
     gamp_config_from,
 )
 from repro.obs import NULL_RECORDER
-from repro.obs.trace import SpanCollector, span
+from repro.obs.trace import SUB_PHASES, SpanCollector, span
 from repro.fed.channel import (
     CHANNEL_FAMILIES,
     ChannelConfig,
@@ -77,7 +77,13 @@ from repro.fed.stream import (
     stream_decode,
 )
 
-__all__ = ["CohortConfig", "CohortEngine", "ArrayClientData", "TokenClientData"]
+__all__ = [
+    "CohortConfig",
+    "CohortEngine",
+    "ArrayClientData",
+    "TokenClientData",
+    "make_interleaved_segments",
+]
 
 EF_METHODS = ("fedqcs-ae", "fedqcs-ea", "qcs-qiht")
 METHODS = EF_METHODS + ("qcs-dither", "signsgd", "none")
@@ -253,6 +259,11 @@ class CohortEngine:
                 "grad_accum microbatching is the encode_stream gradient hook's "
                 "knob (DESIGN.md #Layout); set encode_stream=True"
             )
+        if grad_segments_fn is not None and not cohort.encode_stream:
+            raise ValueError(
+                "grad_segments_fn feeds the segment-streamed encode "
+                "(DESIGN.md #Interleave); set encode_stream=True"
+            )
         if stream is not None and cohort.method not in ("fedqcs-ae", "fedqcs-ea"):
             raise ValueError(
                 f"streaming rounds fold Bussgang/EA sufficient statistics, which "
@@ -335,7 +346,11 @@ class CohortEngine:
         self.key = jax.random.PRNGKey(cohort.seed)
         self._grads_jit = jax.jit(self._grad_blocks_fn)
         self._encode_jit = jax.jit(self._encode_fn)  # loop-oracle unit
-        self._encode_vmap_jit = jax.jit(jax.vmap(self._encode_fn))
+        # the cohort residual rows arrive as a fresh gather (residuals[jids])
+        # consumed only by the encode, so the new residual writes in place
+        self._encode_vmap_jit = jax.jit(
+            jax.vmap(self._encode_fn), donate_argnums=(1,)
+        )
         if cohort.encode_stream:
             # Per-segment units of the streamed client pass: the batched
             # gradient tree (hook default), one segment's (C, rows, N) block
@@ -346,9 +361,12 @@ class CohortEngine:
             self._seg_blocks_jit = jax.jit(
                 self.layout.segment_blocks_batched, static_argnums=(1,)
             )
+            # segment residual rows are a fresh slice (residuals[:, rows]):
+            # donated so each segment's new residual reuses that buffer
             self._encode_seg_jit = jax.jit(
                 jax.vmap(self._encode_segment_fn, in_axes=(0, 0, 0, None)),
                 static_argnums=(3,),
+                donate_argnums=(1,),
             )
             self._seg_true_sum_jit = jax.jit(
                 lambda rhos, blocks: jnp.einsum("k,kbn->bn", rhos, blocks)
@@ -534,13 +552,36 @@ class CohortEngine:
         res: List[Any] = [None] * nseg
         tsum: List[Any] = [None] * nseg
         seg_s = self.layout.segment_s(self.fed_cfg.s)
-        for idx, seg_blocks in self._grad_segments(params, batch):
+        # Spans here are host wall-clock around ASYNC dispatch: "backward" is
+        # the time the producer spends inside next() (for an interleaved
+        # grad_segments_fn, one stage's VJP dispatch), "encode_overlap" the
+        # encode dispatch riding on top of it -- the overlap the interleave
+        # buys shows up as encode_overlap << a blocking encode would be.
+        it = self._grad_segments(params, batch)
+        while True:
+            with span("backward", self._spans):
+                nxt = next(it, None)
+            if nxt is None:
+                break
+            idx, seg_blocks = nxt
+            if not 0 <= idx < nseg:
+                raise ValueError(
+                    f"grad_segments_fn yielded segment index {idx}, layout "
+                    f"has {nseg} segments"
+                )
+            if pay[idx] is not None:
+                raise ValueError(
+                    f"grad_segments_fn yielded segment {idx} "
+                    f"({self.layout.segments[idx].name!r}) twice -- a second "
+                    "payload would silently drop the first from the wire"
+                )
             seg = self.layout.segments[idx]
-            pay[idx], res[idx] = self._encode_seg_jit(
-                seg_blocks, residuals[:, seg.row_slice], rhos, seg_s[idx]
-            )
-            if self.cohort.record_nmse:
-                tsum[idx] = self._seg_true_sum_jit(rhos_nmse, seg_blocks)
+            with span("encode_overlap", self._spans):
+                pay[idx], res[idx] = self._encode_seg_jit(
+                    seg_blocks, residuals[:, seg.row_slice], rhos, seg_s[idx]
+                )
+                if self.cohort.record_nmse:
+                    tsum[idx] = self._seg_true_sum_jit(rhos_nmse, seg_blocks)
         missing = [i for i, p in enumerate(pay) if p is None]
         if missing:
             raise ValueError(f"grad_segments_fn never yielded segments {missing}")
@@ -798,7 +839,10 @@ class CohortEngine:
         event["update_norm"], event["param_norm"] = float(un), float(pn)
         phase = self._spans.drain()
         event["phase_ms"] = phase
-        event["round_ms"] = sum(phase.values())
+        # backward/encode_overlap nest inside client_pass: don't double-count
+        event["round_ms"] = sum(
+            v for k, v in phase.items() if k not in SUB_PHASES
+        )
         self.obs.record("round", event)
 
     def run_round(self) -> Dict[str, float]:
@@ -957,6 +1001,37 @@ class CohortEngine:
 
     def run(self, rounds: int) -> List[Dict[str, float]]:
         return [self.run_round() for _ in range(rounds)]
+
+
+# ---------------------------------------------------------------------------
+# Interleaved producer factory
+# ---------------------------------------------------------------------------
+
+
+def make_interleaved_segments(
+    model_cfg: Any,
+    layout: GradientLayout,
+    grad_accum: int = 1,
+    layer_chunks: int = 1,
+):
+    """``grad_segments_fn`` that interleaves encode with backprop
+    (DESIGN.md #Interleave): yields each layout segment's ``(C, rows, N)``
+    blocks as the corresponding layer cotangents are produced -- backward
+    order -- so encode of layer L dispatches while L-1 backprops and the
+    full gradient pytree never materializes.  Works for every staged
+    registry family (transformer/moe/vlm/ssm/hybrid); build ``layout``
+    with :func:`repro.models.segment_tap.interleaved_layout` (same
+    ``layer_chunks``) and pass BOTH it and the returned producer to
+    :class:`CohortEngine` with ``encode_stream=True``.  ``grad_accum``
+    must mirror ``CohortConfig.grad_accum`` -- the producer microbatches
+    each stage exactly like the one-pass tree fn.  The returned object
+    also exposes ``grads_fn``/``peak_live_grad_bytes`` (the bit-identity
+    oracle and the live-bytes bound the interleave bench records)."""
+    from repro.models.segment_tap import InterleavedSegments
+
+    return InterleavedSegments(
+        model_cfg, layout, grad_accum=grad_accum, layer_chunks=layer_chunks
+    )
 
 
 # ---------------------------------------------------------------------------

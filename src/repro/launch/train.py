@@ -80,6 +80,14 @@ def main():
     ap.add_argument("--client-batch", type=int, default=2)
     ap.add_argument("--chunk", type=int, default=16,
                     help="clients per scan chunk in the vmapped cohort pass")
+    ap.add_argument("--interleave", type=int, default=0, metavar="CHUNKS",
+                    help="backward-interleaved client encode: stream each "
+                         "layout segment to the codec as its layer chunk "
+                         "backprops, with the layer stack split into CHUNKS "
+                         "segment-aligned stages (0 = off; "
+                         "DESIGN.md #Interleave)")
+    ap.add_argument("--grad-accum", type=int, default=1,
+                    help="interleave mode: microbatches per client pass")
     ap.add_argument("--production-mesh", action="store_true",
                     help="use the 2x16x16 mesh (needs 512 devices)")
     ap.add_argument("--ckpt-dir", default="")
@@ -152,6 +160,20 @@ def run_fed_cohort(args, cfg):
                        gamp_variance_mode="scalar")
     params = model.init_params(cfg, jax.random.PRNGKey(0))
     n_params = sum(x.size for x in jax.tree.leaves(params))
+    # --interleave: per-tensor layout split at the producer's chunk bounds +
+    # the backward-interleaved segment producer feeding the streamed encode
+    layout = None
+    grad_segments_fn = None
+    if args.interleave:
+        from repro.fed.engine import make_interleaved_segments
+        from repro.models.segment_tap import interleaved_layout
+
+        layout = interleaved_layout(cfg, fed.block_size,
+                                    layer_chunks=args.interleave)
+        grad_segments_fn = make_interleaved_segments(
+            cfg, layout, grad_accum=args.grad_accum,
+            layer_chunks=args.interleave,
+        )
     data = TokenClientData(cfg.vocab_size, batch=args.client_batch, seq=args.seq,
                            clients=args.clients, alpha=args.alpha)
     sched_kind = args.scheduler or ("uniform" if args.sample_frac < 1.0 else "full")
@@ -167,7 +189,9 @@ def run_fed_cohort(args, cfg):
         jax.grad(lambda p, b: model.train_loss(p, b, cfg)),
         data,
         fed_cfg=fed,
-        cohort=CohortConfig(method="fedqcs-ae", chunk=args.chunk),
+        cohort=CohortConfig(method="fedqcs-ae", chunk=args.chunk,
+                            encode_stream=bool(args.interleave),
+                            grad_accum=args.grad_accum),
         sched=SchedulerConfig(kind=sched_kind, sample_frac=args.sample_frac,
                               dropout_prob=args.dropout),
         chan=(ChannelConfig(kind="awgn", snr_db=args.snr_db)
@@ -176,7 +200,15 @@ def run_fed_cohort(args, cfg):
         stream=(StreamConfig(batch_clients=args.stream, deadline=args.deadline)
                 if args.stream > 0 else None),
         obs=recorder,
+        layout=layout,
+        grad_segments_fn=grad_segments_fn,
     )
+    if args.interleave:
+        peak = grad_segments_fn.peak_live_grad_bytes(args.clients)
+        print(f"[fed-cohort] interleave: {len(layout.segments)} segments, "
+              f"stages {grad_segments_fn.stage_names}, "
+              f"peak live grad+enc {peak / 1e6:.1f} MB "
+              f"(whole tree {args.clients * layout.nbar * 4 / 1e6:.1f} MB)")
     probe = TokenDataset(cfg.vocab_size, batch=16, seq=args.seq, seed=123).get_batch(0)
     eval_loss = jax.jit(lambda p: model.train_loss(p, probe, cfg))
     print(f"[fed-cohort] arch={cfg.name} params={n_params:,} "

@@ -301,6 +301,29 @@ def softmax_cross_entropy(logits, labels, mask=None):
     return jnp.mean(nll)
 
 
+def head_loss_params(params, cfg: ModelConfig):
+    """Selects the parameter subtree the LM-head stage actually touches
+    (the interleaved producer's head-stage `select`, DESIGN.md #Interleave):
+    ``final_norm`` plus the token matrices the logits read -- the full
+    ``tok`` when tied (logits reuse the embedding), just ``lm_head`` when
+    untied, so the untied embedding's gradient flows exclusively through
+    the embed stage and never needs a zero-add here."""
+    tok = params["tok"] if cfg.tie_embeddings else {"lm_head": params["tok"]["lm_head"]}
+    return {"final_norm": params["final_norm"], "tok": tok}
+
+
+def head_loss(p, x, ctx, cfg: ModelConfig):
+    """Shared LM-head stage: final RMS norm -> (tied) logits -> mean token
+    CE.  ``p`` is :func:`head_loss_params`; ``ctx`` carries labels (+
+    optional mask).  This is both the tail of the ssm/hybrid train_loss and
+    the last backward stage of the interleaved gradient producer
+    (models/segment_tap.py) -- one definition, so both paths trace the same
+    ops."""
+    hidden = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    logits = logits_from(p["tok"], hidden, cfg)
+    return softmax_cross_entropy(logits, ctx["labels"], ctx.get("mask"))
+
+
 def remat_policy(cfg: ModelConfig):
     if cfg.remat_policy == "none":
         return None

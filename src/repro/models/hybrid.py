@@ -18,13 +18,14 @@ from repro.models.common import (
     apply_mlp,
     dtype_of,
     embed_tokens,
+    head_loss,
+    head_loss_params,
     init_attention,
     init_embed,
     init_mlp,
     logits_from,
     remat_policy,
     rms_norm,
-    softmax_cross_entropy,
 )
 
 
@@ -66,13 +67,33 @@ def _shared_block(sp, x, positions, cfg, cache=None, cache_pos=None):
     return x + apply_mlp(sp["mlp"], h), new_cache
 
 
-def train_loss(params, batch, cfg: ModelConfig):
-    tokens, labels = batch["tokens"], batch["labels"]
+# -- train stages (interleaved-producer protocol, DESIGN.md #Interleave) -----
+#
+# The shared attention block is weight-tied across every group, so the whole
+# nested scan is ONE stage: chunking it would re-associate the shared
+# block's gradient sum and break bit-identity with train_loss.
+
+
+def train_ctx(batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
     b, s = tokens.shape
-    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
-    x = embed_tokens(params["tok"], tokens, cfg)
+    ctx = {"tokens": tokens, "labels": batch["labels"],
+           "positions": jnp.broadcast_to(jnp.arange(s)[None], (b, s))}
+    if "mask" in batch:
+        ctx["mask"] = batch["mask"]
+    return ctx
+
+
+def embed_stage(sp, ctx, cfg: ModelConfig):
+    return embed_tokens(sp, ctx["tokens"], cfg)
+
+
+def stack_stage(sp, x, ctx, cfg: ModelConfig):
+    """The full nested scan.  sp = {"mamba_layers", "shared"} -- never a
+    slice (see module note on the weight-shared attention block)."""
     g = _n_groups(cfg)
-    stacks = _reshape_groups(params["mamba_layers"], g, cfg.attn_every)
+    stacks = _reshape_groups(sp["mamba_layers"], g, cfg.attn_every)
+    positions = ctx["positions"]
     policy = remat_policy(cfg)
 
     def inner(carry, lp):
@@ -80,15 +101,23 @@ def train_loss(params, batch, cfg: ModelConfig):
 
     def outer(carry, group_params):
         x, _ = jax.lax.scan(inner, carry, group_params, unroll=True if cfg.unroll_layers else 1)
-        x, _ = _shared_block(params["shared"], x, positions, cfg)
+        x, _ = _shared_block(sp["shared"], x, positions, cfg)
         return x, None
 
     if policy is not None:
         outer = jax.checkpoint(outer, policy=policy, prevent_cse=False)
     x, _ = jax.lax.scan(outer, x, stacks, unroll=True if cfg.unroll_layers else 1)
-    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = logits_from(params["tok"], hidden, cfg)
-    return softmax_cross_entropy(logits, labels, batch.get("mask"))
+    return x
+
+
+def train_loss(params, batch, cfg: ModelConfig):
+    ctx = train_ctx(batch, cfg)
+    x = embed_stage({"embed": params["tok"]["embed"]}, ctx, cfg)
+    x = stack_stage(
+        {"mamba_layers": params["mamba_layers"], "shared": params["shared"]},
+        x, ctx, cfg,
+    )
+    return head_loss(head_loss_params(params, cfg), x, ctx, cfg)
 
 
 def prefill(params, batch, cfg: ModelConfig):

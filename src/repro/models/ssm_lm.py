@@ -10,11 +10,12 @@ from repro.models import ssm as ssm_mod
 from repro.models.common import (
     dtype_of,
     embed_tokens,
+    head_loss,
+    head_loss_params,
     init_embed,
     logits_from,
     remat_policy,
     rms_norm,
-    softmax_cross_entropy,
 )
 
 
@@ -28,9 +29,22 @@ def init_params(cfg: ModelConfig, key):
     }
 
 
-def train_loss(params, batch, cfg: ModelConfig):
-    tokens, labels = batch["tokens"], batch["labels"]
-    x = embed_tokens(params["tok"], tokens, cfg)
+# -- train stages (interleaved-producer protocol, DESIGN.md #Interleave) -----
+
+
+def train_ctx(batch, cfg: ModelConfig):
+    ctx = {"tokens": batch["tokens"], "labels": batch["labels"]}
+    if "mask" in batch:
+        ctx["mask"] = batch["mask"]
+    return ctx
+
+
+def embed_stage(sp, ctx, cfg: ModelConfig):
+    return embed_tokens(sp, ctx["tokens"], cfg)
+
+
+def stack_stage(layers, x, ctx, cfg: ModelConfig):
+    """One (chunk of the) stacked Mamba run -- layers is a (L', ...) slice."""
     policy = remat_policy(cfg)
 
     def body(carry, lp):
@@ -38,10 +52,15 @@ def train_loss(params, batch, cfg: ModelConfig):
 
     if policy is not None:
         body = jax.checkpoint(body, policy=policy, prevent_cse=False)
-    x, _ = jax.lax.scan(body, x, params["layers"], unroll=True if cfg.unroll_layers else 1)
-    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = logits_from(params["tok"], hidden, cfg)
-    return softmax_cross_entropy(logits, labels, batch.get("mask"))
+    x, _ = jax.lax.scan(body, x, layers, unroll=True if cfg.unroll_layers else 1)
+    return x
+
+
+def train_loss(params, batch, cfg: ModelConfig):
+    ctx = train_ctx(batch, cfg)
+    x = embed_stage({"embed": params["tok"]["embed"]}, ctx, cfg)
+    x = stack_stage(params["layers"], x, ctx, cfg)
+    return head_loss(head_loss_params(params, cfg), x, ctx, cfg)
 
 
 def prefill(params, batch, cfg: ModelConfig):

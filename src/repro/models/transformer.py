@@ -114,25 +114,77 @@ def forward_hidden(params, x, positions, cfg: ModelConfig):
     return rms_norm(x, params["final_norm"], cfg.norm_eps)
 
 
-def train_loss(params, batch, cfg: ModelConfig):
+# -- train stages (the interleaved-producer protocol, DESIGN.md #Interleave) --
+#
+# ``train_loss`` is the composition of these stage functions, and
+# models/segment_tap.py replays the SAME functions under per-stage jax.vjp
+# to emit gradients layer-by-layer during the backward pass.  Each stage is
+# (params-subtree, carry, ctx) -> carry'; ``train_ctx`` packs the
+# non-parameter inputs every stage may read.
+
+
+def train_ctx(batch, cfg: ModelConfig):
+    """Stage context: tokens/labels/positions (+ patches/mask when present)."""
     tokens = batch["tokens"]  # (B, S)
-    labels = batch["labels"]  # (B, S)
     b, s = tokens.shape
-    x = embed_tokens(params["tok"], tokens, cfg)
+    ctx = {"tokens": tokens, "labels": batch["labels"]}
+    if "mask" in batch:
+        ctx["mask"] = batch["mask"]
     if cfg.family == "vlm":
-        patches = batch["patches"].astype(x.dtype)  # (B, Sv, D)
-        x = jnp.concatenate([patches, x], axis=1)
-        positions = batch["positions"]  # (3, B, Sv+S) M-RoPE streams
+        ctx["patches"] = batch["patches"]
+        ctx["positions"] = batch["positions"]  # (3, B, Sv+S) M-RoPE streams
     else:
-        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
-    hidden = forward_hidden(params, x, positions, cfg)
+        ctx["positions"] = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    return ctx
+
+
+def embed_stage(sp, ctx, cfg: ModelConfig):
+    """Token embedding (+ VLM patch prefix).  sp = {"embed": ...}."""
+    x = embed_tokens(sp, ctx["tokens"], cfg)
     if cfg.family == "vlm":
-        hidden = hidden[:, -s:]  # loss on the text positions only
-    logits = logits_from(params["tok"], hidden, cfg)
-    loss = softmax_cross_entropy(logits, labels, batch.get("mask"))
+        x = jnp.concatenate([ctx["patches"].astype(x.dtype), x], axis=1)
+    return x
+
+
+def stack_stage(stack, x, ctx, cfg: ModelConfig, moe: bool):
+    """One (chunk of a) stacked layer run -- sp is a (L', ...) slice."""
+    return _scan_stack(stack, x, ctx["positions"], cfg, moe)
+
+
+def head_params(params, cfg: ModelConfig):
+    """Head-stage parameter subtree: final_norm + the token matrices the
+    logits read (full ``tok`` when tied or under MTP -- MTP re-embeds the
+    shifted tokens -- else just ``lm_head``) + the MTP block."""
+    tok = params["tok"] if (cfg.tie_embeddings or cfg.mtp) else {
+        "lm_head": params["tok"]["lm_head"]
+    }
+    hp = {"final_norm": params["final_norm"], "tok": tok}
     if cfg.mtp:
-        loss = loss + 0.3 * _mtp_loss(params, hidden, tokens, labels, positions, cfg)
+        hp["mtp"] = params["mtp"]
+    return hp
+
+
+def head_stage(hp, x, ctx, cfg: ModelConfig):
+    """Final norm -> (VLM: text slice) -> logits -> CE (+ MTP aux loss)."""
+    hidden = rms_norm(x, hp["final_norm"], cfg.norm_eps)
+    if cfg.family == "vlm":
+        hidden = hidden[:, -ctx["tokens"].shape[1]:]  # text positions only
+    logits = logits_from(hp["tok"], hidden, cfg)
+    loss = softmax_cross_entropy(logits, ctx["labels"], ctx.get("mask"))
+    if cfg.mtp:
+        loss = loss + 0.3 * _mtp_loss(
+            hp, hidden, ctx["tokens"], ctx["labels"], ctx["positions"], cfg
+        )
     return loss
+
+
+def train_loss(params, batch, cfg: ModelConfig):
+    ctx = train_ctx(batch, cfg)
+    x = embed_stage({"embed": params["tok"]["embed"]}, ctx, cfg)
+    if "layers_dense" in params:
+        x = stack_stage(params["layers_dense"], x, ctx, cfg, moe=False)
+    x = stack_stage(params["layers"], x, ctx, cfg, moe=cfg.is_moe)
+    return head_stage(head_params(params, cfg), x, ctx, cfg)
 
 
 def _mtp_loss(params, hidden, tokens, labels, positions, cfg: ModelConfig):

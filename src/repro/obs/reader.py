@@ -131,19 +131,26 @@ def _health_summary(rounds: List[Dict[str, Any]]) -> List[str]:
 
 
 def _phase_summary(rounds: List[Dict[str, Any]]) -> List[str]:
+    from repro.obs.trace import SUB_PHASES
+
     acc: Dict[str, List[float]] = {}
     for r in rounds:
         for name, ms in (r.get("phase_ms") or {}).items():
             acc.setdefault(name, []).append(float(ms))
     if not acc:
         return []
-    total = sum(sum(v) for v in acc.values())
+    # sub-phases (backward/encode_overlap) nest inside client_pass: they get
+    # a share of the round but must not inflate the denominator
+    total = sum(sum(v) for k, v in acc.items() if k not in SUB_PHASES)
     out = []
     for name, vals in sorted(acc.items(), key=lambda kv: -sum(kv[1])):
         share = sum(vals) / total if total else 0.0
+        label = f"{name} *" if name in SUB_PHASES else name
         out.append(
-            f"  {name:<14s} {sum(vals) / len(vals):8.1f} ms/round  {share:5.1%}"
+            f"  {label:<14s} {sum(vals) / len(vals):8.1f} ms/round  {share:5.1%}"
         )
+    if any(k in SUB_PHASES for k in acc):
+        out.append("  (* nested inside client_pass; excluded from totals)")
     return out
 
 

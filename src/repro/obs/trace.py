@@ -11,7 +11,13 @@ Span names are the phase vocabulary shared by the ``phase_ms`` field of
 round events, the ``span`` event kind, and (when enabled) the
 ``jax.profiler.TraceAnnotation`` labels -- a profile and a run log line up
 by construction.  Canonical engine phase names: ``client_pass``,
-``encode``, ``uplink``, ``fold``, ``decode``, ``apply``.
+``encode``, ``uplink``, ``fold``, ``decode``, ``apply``; plus the
+SUB-phases of the streamed client pass, ``backward`` (time inside the
+gradient producer's next() -- for the interleaved producer, one stage's
+VJP dispatch) and ``encode_overlap`` (the per-segment encode dispatch
+riding on the backward sweep).  Sub-phases nest inside ``client_pass``,
+so aggregations that sum phases must exclude :data:`SUB_PHASES` or the
+nested time double-counts.
 
 Overhead: with ``collector=None`` and annotations off, ``span`` is two
 ``time.monotonic()`` calls -- cheap enough to leave in place permanently.
@@ -33,10 +39,14 @@ import time
 from contextlib import contextmanager
 from typing import Dict, Optional
 
-__all__ = ["SpanCollector", "span", "traced", "ANNOTATE"]
+__all__ = ["SpanCollector", "span", "traced", "ANNOTATE", "SUB_PHASES"]
 
 # Checked once at import: profiler annotations are opt-in by environment.
 ANNOTATE = os.environ.get("REPRO_TRACE_ANNOTATIONS", "") == "1"
+
+# Phases that time a slice of another phase (they nest inside client_pass):
+# excluded when summing phase_ms into a round total.
+SUB_PHASES = frozenset({"backward", "encode_overlap"})
 
 
 class SpanCollector:

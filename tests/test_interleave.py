@@ -1,0 +1,387 @@
+"""Backward-interleaved segment producer (DESIGN.md #Interleave).
+
+Correctness bars pinned here:
+
+* producer gradients match ``jax.vmap(jax.grad(train_loss))`` at allclose
+  across the staged registry families (NOT bitwise: the staged VJP and the
+  monolithic grad are different XLA programs, so fusion differs at ~1e-8);
+* the streamed WIRE through the engine is bit-identical to the one-pass
+  encode of the producer's own gradient tree (``grads_fn``), for multiple
+  families x grad_accum x emission order -- the segments path and the tree
+  path share the same stage-gradient arrays, so this holds exactly;
+* the engine's streamed-pass contract: duplicate / unknown / missing
+  segment indices raise;
+* the per-segment encode donates its residual slice (satellite of the
+  interleave PR: the new residual writes into the gathered rows in place);
+* ``backward`` / ``encode_overlap`` sub-phases land in round telemetry and
+  stay out of the ``round_ms`` total.
+"""
+
+import functools
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import smoke_config
+from repro.core.compression import FedQCSConfig
+from repro.fed.engine import (
+    CohortConfig,
+    CohortEngine,
+    make_interleaved_segments,
+)
+from repro.models import model as M
+from repro.models.segment_tap import (
+    InterleavedSegments,
+    build_stages,
+    interleaved_layout,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+KEY = jax.random.PRNGKey(0)
+C = 2  # cohort size for all producer tests
+FED = FedQCSConfig(block_size=64, reduction_ratio=2, bits=3, gamp_iters=4)
+
+STAGED_ARCHS = [
+    "qwen3-0.6b",        # dense, tied embed
+    "deepseek-v3-671b",  # moe + MLA + mtp + leading dense layer, untied
+    "mamba2-1.3b",       # ssm, tied
+    "zamba2-2.7b",       # hybrid (weight-shared attention block), untied
+    "qwen2-vl-7b",       # vlm (patch prefix + M-RoPE positions)
+]
+WIRE_ARCHS = ["qwen3-0.6b", "mamba2-1.3b", "zamba2-2.7b"]
+
+
+def _cohort_batch(cfg, b=2, s=16):
+    """(C, ...) cohort batch, tokens varied per client."""
+    if cfg.family == "vlm":
+        sv = 4
+        one = lambda k: {  # noqa: E731
+            "tokens": jnp.full((b, s - sv), 1 + k, jnp.int32) % cfg.vocab_size,
+            "labels": jnp.full((b, s - sv), 2 + k, jnp.int32) % cfg.vocab_size,
+            "patches": jnp.full((b, sv, cfg.d_model), 0.01 * (k + 1),
+                                jnp.float32),
+            "positions": jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32), (3, b, s)
+            ),
+        }
+    else:
+        one = lambda k: {  # noqa: E731
+            "tokens": (jnp.ones((b, s), jnp.int32) + k) % cfg.vocab_size,
+            "labels": (jnp.ones((b, s), jnp.int32) + 2 * k) % cfg.vocab_size,
+        }
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[one(k) for k in range(C)]
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(arch, layer_chunks=2, grad_accum=1):
+    cfg = smoke_config(arch)
+    params = M.init_params(cfg, KEY)
+    chunks = 1 if cfg.family == "hybrid" else layer_chunks
+    layout = interleaved_layout(cfg, FED.block_size, layer_chunks=chunks)
+    prod = make_interleaved_segments(
+        cfg, layout, grad_accum=grad_accum, layer_chunks=chunks
+    )
+    return cfg, params, layout, prod
+
+
+def _one_pass_hook(prod):
+    """One-pass reference hook: materialize the producer's own tree, then
+    slice segments layout-order -- the wire-identity oracle."""
+
+    def hook(params, batch, layout):
+        tree = prod.grads_fn(params, batch)
+        for seg in layout.segments:
+            yield seg.index, layout.segment_blocks_batched(tree, seg.index)
+
+    return hook
+
+
+def _shuffled_hook(prod):
+    """Producer output re-emitted in a fixed shuffled order: the engine's
+    streamed pass accepts any segment order."""
+
+    def hook(params, batch, layout):
+        out = list(prod(params, batch, layout))
+        random.Random(7).shuffle(out)
+        yield from out
+
+    return hook
+
+
+def _engine(params, layout, hook, grad_accum=1, cfg=None, obs=None):
+    data = _FakeData()
+    return CohortEngine(
+        params,
+        # grad_fn unused by the hooked streamed pass but required
+        jax.grad(lambda p, b: M.train_loss(p, b, cfg)),
+        data,
+        fed_cfg=FED,
+        cohort=CohortConfig(method="fedqcs-ae", encode_stream=True,
+                            record_nmse=False, grad_accum=grad_accum,
+                            seed=3),
+        layout=layout,
+        grad_segments_fn=hook,
+        obs=obs,
+    )
+
+
+class _FakeData:
+    """Engine-constructible stand-in; tests drive the client pass directly
+    except the span test, which uses :meth:`cohort_batch`."""
+
+    def __init__(self):
+        self.counts = np.ones(C, np.int64)
+        self.batch = None  # set by tests that run full rounds
+
+    def cohort_batch(self, round_idx, ids):
+        return jax.tree_util.tree_map(lambda x: x[ids], self.batch)
+
+
+def _streamed(eng, params, batch):
+    res = jnp.zeros((C, eng.nb, eng.n), jnp.float32)
+    rhos = jnp.ones((C,), jnp.float32)
+    return eng._client_pass_streamed(params, batch, res, rhos, rhos)
+
+
+def _assert_trees_equal(a, b, exact=True):
+    la = jax.tree_util.tree_flatten_with_path(a)[0]
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for (path, x), y in zip(la, lb):
+        if exact:
+            np.testing.assert_array_equal(
+                np.asarray(x), np.asarray(y), err_msg=str(path)
+            )
+        else:
+            # staged VJP vs monolithic grad are different XLA programs;
+            # hybrid's weight-shared sums add cancellation noise on top
+            np.testing.assert_allclose(
+                np.asarray(x), np.asarray(y), rtol=2e-4, atol=5e-5,
+                err_msg=str(path),
+            )
+
+
+# ---------------------------------------------------------------------------
+# gradients: staged VJP vs monolithic jax.grad
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", STAGED_ARCHS)
+def test_producer_grads_allclose_vs_jax_grad(arch):
+    cfg, params, layout, prod = _setup(arch)
+    batch = _cohort_batch(cfg)
+    ref = jax.vmap(
+        jax.grad(lambda p, b: M.train_loss(p, b, cfg)), in_axes=(None, 0)
+    )(params, batch)
+    tree = prod.grads_fn(params, batch)
+    assert (jax.tree_util.tree_structure(tree)
+            == jax.tree_util.tree_structure(params))
+    _assert_trees_equal(ref, tree, exact=False)
+
+
+@pytest.mark.parametrize("arch", STAGED_ARCHS)
+def test_producer_segments_cover_layout_in_backward_order(arch):
+    cfg, params, layout, prod = _setup(arch)
+    batch = _cohort_batch(cfg)
+    seen = [idx for idx, _ in prod(params, batch, layout)]
+    assert sorted(seen) == list(range(len(layout.segments)))
+    # the stream is NOT layout order (backward order differs) unless the
+    # model degenerates to one stage per segment in layout order
+    if len(layout.segments) > 2:
+        assert seen != list(range(len(layout.segments)))
+
+
+def test_grad_accum_matches_engine_tree_fn():
+    """Producer microbatching mirrors the engine's _grads_tree_fn at
+    allclose (same mb split, mb-order sums, final /acc -- but per stage)."""
+    cfg, params, layout, _ = _setup("qwen3-0.6b")
+    prod = make_interleaved_segments(cfg, layout, grad_accum=4, layer_chunks=2)
+    batch = _cohort_batch(cfg, b=4)
+    eng = _engine(params, layout, prod, grad_accum=4, cfg=cfg)
+    ref = eng._grads_tree_jit(params, batch)
+    _assert_trees_equal(ref, prod.grads_fn(params, batch), exact=False)
+
+
+# ---------------------------------------------------------------------------
+# wire bit-identity through the engine's streamed pass
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", WIRE_ARCHS)
+@pytest.mark.parametrize("grad_accum", [1, 4])
+def test_wire_bit_identity(arch, grad_accum):
+    """Interleaved (backward-order AND shuffled out-of-order) payloads and
+    residuals are bitwise equal to the one-pass encode of the producer's own
+    gradient tree."""
+    cfg, params, layout, prod = _setup(arch, grad_accum=grad_accum)
+    batch = _cohort_batch(cfg, b=4 if grad_accum > 1 else 2)
+    eng = _engine(params, layout, prod, grad_accum=grad_accum, cfg=cfg)
+    pay_ref, res_ref = _streamed(
+        _engine(params, layout, _one_pass_hook(prod), grad_accum=grad_accum,
+                cfg=cfg),
+        params, batch,
+    )
+    for hook in (prod, _shuffled_hook(prod)):
+        eng._grad_segments_fn = hook
+        pay, res = _streamed(eng, params, batch)
+        _assert_trees_equal(pay_ref, pay)
+        np.testing.assert_array_equal(np.asarray(res_ref), np.asarray(res))
+
+
+# ---------------------------------------------------------------------------
+# streamed-pass contract: duplicate / unknown / missing segments
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _contract_fixture():
+    cfg, params, layout, prod = _setup("qwen3-0.6b")
+    eng = _engine(params, layout, prod, cfg=cfg)
+    return cfg, params, layout, prod, eng
+
+
+def test_duplicate_segment_raises():
+    cfg, params, layout, prod, eng = _contract_fixture()
+
+    def dup(p, b, lo):
+        it = prod(p, b, lo)
+        first = next(it)
+        yield first
+        yield first
+
+    eng._grad_segments_fn = dup
+    with pytest.raises(ValueError, match="twice"):
+        _streamed(eng, params, _cohort_batch(cfg))
+
+
+def test_unknown_segment_index_raises():
+    cfg, params, layout, prod, eng = _contract_fixture()
+    eng._grad_segments_fn = lambda p, b, lo: iter(
+        [(len(lo.segments), jnp.zeros((C, 1, lo.n), jnp.float32))]
+    )
+    with pytest.raises(ValueError, match="layout has"):
+        _streamed(eng, params, _cohort_batch(cfg))
+
+
+def test_missing_segment_raises():
+    cfg, params, layout, prod, eng = _contract_fixture()
+
+    def partial(p, b, lo):
+        yield next(prod(p, b, lo))
+
+    eng._grad_segments_fn = partial
+    with pytest.raises(ValueError, match="never yielded"):
+        _streamed(eng, params, _cohort_batch(cfg))
+
+
+def test_engine_requires_encode_stream_for_hook():
+    cfg, params, layout, prod, eng = _contract_fixture()
+    with pytest.raises(ValueError, match="encode_stream"):
+        CohortEngine(
+            params,
+            jax.grad(lambda p, b: M.train_loss(p, b, cfg)),
+            _FakeData(),
+            fed_cfg=FED,
+            cohort=CohortConfig(method="fedqcs-ae", encode_stream=False),
+            layout=layout,
+            grad_segments_fn=prod,
+        )
+
+
+def test_producer_rejects_foreign_layout():
+    cfg, params, layout, prod, _ = _contract_fixture()
+    other = interleaved_layout(cfg, FED.block_size, layer_chunks=1)
+    with pytest.raises(ValueError, match="layout"):
+        next(prod(params, _cohort_batch(cfg), other))
+
+
+def test_vlm_grad_accum_rejected():
+    cfg = smoke_config("qwen2-vl-7b")
+    layout = interleaved_layout(cfg, FED.block_size)
+    with pytest.raises(ValueError, match="VLM"):
+        make_interleaved_segments(cfg, layout, grad_accum=2)
+
+
+def test_hybrid_layer_chunks_rejected():
+    cfg = smoke_config("zamba2-2.7b")
+    with pytest.raises(ValueError, match="weight-shared"):
+        build_stages(cfg, jax.eval_shape(
+            lambda: M.init_params(cfg, jax.random.PRNGKey(0))
+        ), layer_chunks=2)
+
+
+def test_audio_family_rejected():
+    cfg = smoke_config("whisper-base")
+    layout = interleaved_layout(cfg, FED.block_size)
+    with pytest.raises(NotImplementedError, match="audio"):
+        InterleavedSegments(cfg, layout)
+
+
+# ---------------------------------------------------------------------------
+# residual donation through the per-segment encode
+# ---------------------------------------------------------------------------
+
+
+def test_encode_seg_jit_donates_residual():
+    """The streamed per-segment encode aliases its residual-slice input to
+    an output (donate_argnums): visible in the compiled HLO, and the donated
+    buffer errors on reuse."""
+    cfg, params, layout, prod, eng = _contract_fixture()
+    seg = layout.segments[0]
+    blocks = jnp.zeros((C, seg.rows, eng.n), jnp.float32)
+    res = jnp.ones((C, seg.rows, eng.n), jnp.float32)
+    rhos = jnp.ones((C,), jnp.float32)
+    s = layout.segment_s(FED.s)[0]
+    hlo = eng._encode_seg_jit.lower(blocks, res, rhos, s).compile().as_text()
+    assert "input_output_alias" in hlo
+    eng._encode_seg_jit(blocks, res, rhos, s)
+    with pytest.raises(RuntimeError):
+        _ = np.asarray(res)  # donated: buffer deleted
+
+
+def test_producer_donates_boundary_carries():
+    """The stage backward jits donate the boundary carry (consumed exactly
+    once; the carry cotangent writes into it)."""
+    cfg, params, layout, prod, eng = _contract_fixture()
+    # stage 1 (first layer chunk) has a carry; lower its bwd jit
+    batch = _cohort_batch(cfg)
+    list(prod(params, batch, layout))  # compile everything
+    bwd = prod._bwd_jits[1]
+    sel = prod.stages[1].select(params)
+    ctx = prod._ctx_jit(batch)
+    b, s = batch["tokens"].shape[1], batch["tokens"].shape[2]
+    x = jnp.zeros((C, b, s, cfg.d_model), jnp.float32)
+    ct = jnp.zeros((C, b, s, cfg.d_model), jnp.float32)
+    hlo = bwd.lower(sel, x, ct, ctx).compile().as_text()
+    assert "input_output_alias" in hlo
+
+
+# ---------------------------------------------------------------------------
+# telemetry: backward / encode_overlap sub-phases
+# ---------------------------------------------------------------------------
+
+
+def test_interleave_spans_recorded():
+    from repro.obs.recorder import InMemoryRecorder
+    from repro.obs.trace import SUB_PHASES
+
+    cfg, params, layout, prod = _setup("qwen3-0.6b")
+    data = _FakeData()
+    data.batch = _cohort_batch(cfg)
+    eng = _engine(params, layout, prod, cfg=cfg, obs=InMemoryRecorder())
+    eng.data = data
+    eng.run_round()
+    rounds = [e for e in eng.obs.events if e["kind"] == "round"]
+    assert rounds, eng.obs.events
+    phase = rounds[-1]["phase_ms"]
+    assert phase["backward"] > 0 and phase["encode_overlap"] > 0
+    assert "client_pass" in phase
+    # sub-phases nest inside client_pass: round_ms excludes them
+    expect = sum(v for k, v in phase.items() if k not in SUB_PHASES)
+    assert abs(rounds[-1]["round_ms"] - expect) < 1e-6
